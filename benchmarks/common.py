@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: wall-time measurement with warmup, CSV
+emission, result persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+              **kw) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def block(x):
+    import jax
+    jax.block_until_ready(x)
+    return x
+
+
+def save_result(name: str, rows: List[Dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def print_table(title: str, rows: List[Dict]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0])
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))

@@ -1,0 +1,76 @@
+"""§Roofline report: aggregates the dry-run JSONs into the per-
+(arch x shape x mesh) roofline table — three terms in seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful fraction, and a one-line
+what-would-move-it-down note.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun)
+— no compilation happens here."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import print_table, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _advice(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    mode = r["mode"]
+    frac = r["roofline"]["useful_flops_fraction"]
+    if dom == "collective_s":
+        return "overlap/shrink collectives (reshard or fuse)"
+    if dom == "memory_s":
+        if mode in ("train", "prefill"):
+            return "fuse attention (Pallas flash) to kill S^2 HBM traffic"
+        return "shard/shrink KV reads (window or seq-parallel cache)"
+    if frac < 0.5:
+        return "remove redundant compute (replicated attention / remat)"
+    return "near compute roofline; improve MXU utilization"
+
+
+def load_rows(mesh: str = None, include_iters: bool = False) -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)
+        if not include_iters and "__iter" in base:
+            continue
+        if base.endswith(".err"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": f"{rl['compute_s']:.3g}",
+            "memory_s": f"{rl['memory_s']:.3g}",
+            "collective_s": f"{rl['collective_s']:.3g}",
+            "dominant": rl["dominant"].replace("_s", ""),
+            "useful_frac": f"{rl['useful_flops_fraction']:.3f}",
+            "temp_GiB": f"{r['memory']['temp_bytes'] / 2**30:.1f}",
+            "fix": _advice(r),
+        })
+    return rows
+
+
+def run() -> list:
+    rows = load_rows(mesh="16x16")
+    print_table("Roofline (single-pod 16x16, per device)", rows)
+    multi = load_rows(mesh="2x16x16")
+    if multi:
+        print_table("Roofline (multi-pod 2x16x16)", multi)
+    save_result("roofline", rows + multi)
+    missing = 40 - len(rows)
+    if missing > 0:
+        print(f"\n[note] {missing} single-pod baselines not yet present "
+              f"(run tools/sweep_dryrun.sh)")
+    return rows + multi
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark orchestrator — one entry per paper table/figure:
+
+  interpreter_overhead   Fig. 6  total vs calculation cycles
+  memory_overhead        Tab. 2  persistent/nonpersistent arena split
+  planner_bench          Fig. 4  naive vs FFD memory compaction
+  kernel_speedup         Fig. 6  reference vs optimized kernels
+  multitenancy_bench     Fig. 5  shared-arena savings
+  roofline               §Roofline table from the dry-run artifacts
+
+``python -m benchmarks.run [names...]`` — default: all."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    from . import (interpreter_overhead, kernel_speedup, memory_overhead,
+                   multitenancy_bench, planner_bench, roofline)
+
+    benches = {
+        "interpreter_overhead": interpreter_overhead.run,
+        "memory_overhead": memory_overhead.run,
+        "planner_bench": planner_bench.run,
+        "kernel_speedup": kernel_speedup.run,
+        "multitenancy_bench": multitenancy_bench.run,
+        "roofline": roofline.run,
+    }
+    names = argv or list(benches)
+    t0 = time.time()
+    for name in names:
+        if name not in benches:
+            raise SystemExit(f"unknown benchmark {name!r}; "
+                             f"have {list(benches)}")
+        benches[name]()
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

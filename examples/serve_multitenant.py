@@ -1,0 +1,65 @@
+"""End-to-end serving driver (the paper is an inference framework, so
+this is the flagship example): host THREE models of different families
+— a dense GQA transformer, a Mamba2 SSM and a Zamba2 hybrid — in ONE
+shared arena (paper §4.5), stream a batched request workload through
+continuous-batching engines, and report per-request latency plus the
+arena accounting.
+
+Run: PYTHONPATH=src python examples/serve_multitenant.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serving import MultiTenantHost, Request
+
+TENANTS = (("chat-lm", "qwen3-32b"),
+           ("draft-ssm", "mamba2-780m"),
+           ("hybrid", "zamba2-1.2b"))
+
+host = MultiTenantHost(arena_bytes=512 << 20)
+rng = np.random.default_rng(0)
+
+print("=== admitting tenants (persistent KV sections stack) ===")
+for name, arch in TENANTS:
+    cfg = get_config(arch, reduced=True)
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(hash(name) % 2**31))
+    host.add_model(name, bundle, params, max_slots=2, cache_len=96)
+    u = host.usage()
+    print(f"  + {name:10s} ({arch}): persistent={u.persistent >> 10} KiB")
+
+print("\n=== submitting workload (4 requests x 3 tenants) ===")
+uid = 0
+for name, arch in TENANTS:
+    cfg = get_config(arch, reduced=True)
+    for _ in range(4):
+        plen = int(rng.integers(4, 14))
+        host.submit(name, Request(
+            uid=uid,
+            tokens=rng.integers(0, cfg.vocab - 2, plen).astype(np.int32),
+            max_new_tokens=8))
+        uid += 1
+
+t0 = time.time()
+results = host.run_all()
+wall = time.time() - t0
+
+total = 0
+for name, _ in TENANTS:
+    for u, res in sorted(results[name].items()):
+        total += len(res.output)
+        print(f"  {name:10s} req {u:2d}: prompt={res.prompt_len:2d} "
+              f"-> {len(res.output)} tokens "
+              f"(prefill {res.prefill_s * 1e3:6.1f} ms, "
+              f"decode {res.decode_s * 1e3:6.1f} ms)")
+
+u = host.usage()
+print(f"\n{total} tokens in {wall:.2f}s ({total / wall:.1f} tok/s)  |  "
+      f"arena: persistent={u.persistent >> 10} KiB (stacked), "
+      f"capacity={u.capacity >> 20} MiB")
+print("serve_multitenant OK")

@@ -1,0 +1,62 @@
+"""Train a small LM end to end: synthetic Markov corpus -> packed
+batches -> AdamW train loop -> checkpoint -> restore -> greedy decode
+through the serving engine.  Exercises the full training substrate on
+CPU in under two minutes.
+
+Run: PYTHONPATH=src python examples/train_small_lm.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import PackedLMDataset
+from repro.models import get_model
+from repro.serving import Request, ServingEngine
+from repro.training.trainer import init_train_state, make_train_step
+
+cfg = get_config("yi-6b", reduced=True)
+bundle = get_model(cfg)
+params = bundle.init(jax.random.PRNGKey(0))
+state = init_train_state(params)
+n_params = sum(p.size for p in jax.tree.leaves(params))
+print(f"arch={cfg.arch_id}  params={n_params / 1e6:.2f}M")
+
+ds = PackedLMDataset(cfg, batch=8, seq=32, seed=0)
+step = jax.jit(make_train_step(bundle.loss, lr=3e-3, max_grad_norm=5.0,
+                               remat=False, data_shards=1))
+
+print("=== training 80 steps on the Markov corpus ===")
+first_loss = None
+for i in range(80):
+    batch = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+    state, metrics = step(state, batch)
+    if first_loss is None:
+        first_loss = float(metrics["ce_loss"])
+    if i % 20 == 0 or i == 79:
+        print(f"  step {i:3d}  loss={float(metrics['ce_loss']):.4f}  "
+              f"gnorm={float(metrics['grad_norm']):.3f}")
+final_loss = float(metrics["ce_loss"])
+assert final_loss < first_loss - 0.5, "training did not descend"
+
+with tempfile.TemporaryDirectory() as tmp:
+    print("=== checkpoint round-trip ===")
+    save_checkpoint(tmp, 60, state)
+    restored = restore_checkpoint(tmp, 60, state)
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("  restored == saved")
+
+print("=== serving the trained model ===")
+eng = ServingEngine(bundle, restored.params, max_slots=2, cache_len=64)
+rng = np.random.default_rng(1)
+eng.submit(Request(uid=0, tokens=rng.integers(
+    0, cfg.vocab - 2, 8).astype(np.int32), max_new_tokens=10))
+out = eng.run()[0].output
+print(f"  generated: {out}")
+print("train_small_lm OK")

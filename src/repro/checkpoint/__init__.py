@@ -1,0 +1,5 @@
+"""Checkpoint substrate: sharded npz save/restore."""
+
+from .checkpoint import restore_checkpoint, save_checkpoint
+
+__all__ = ["restore_checkpoint", "save_checkpoint"]

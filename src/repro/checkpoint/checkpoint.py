@@ -1,0 +1,101 @@
+"""Sharded npz checkpointing.
+
+Layout: <dir>/<step>/
+  manifest.json      — flat-key -> {shape, dtype, file}
+  shard_<i>.npz      — leaves, chunked so no single npz exceeds ~1 GB
+
+Leaves are addressed by their flattened pytree key-path, so restore is
+order-independent and tolerates added/removed leaves (strict=False).
+Arrays are pulled to host (fully addressable) before save; restore
+optionally device_puts onto a provided sharding tree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SHARD_BYTES = 1 << 30
+
+
+def _flat_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    out = os.path.join(ckpt_dir, str(step))
+    os.makedirs(out, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest, shard, shard_bytes, shard_idx = {}, {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_idx
+        if shard:
+            np.savez(os.path.join(out, f"shard_{shard_idx}.npz"), **shard)
+            shard, shard_bytes = {}, 0
+            shard_idx += 1
+
+    for path, leaf in flat:
+        key = _flat_key(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dtype = "bfloat16"
+        else:
+            dtype = str(arr.dtype)
+        safe = re.sub(r"[^A-Za-z0-9_]", "__", key)
+        manifest[key] = {"shape": list(arr.shape), "dtype": dtype,
+                         "file": f"shard_{shard_idx}.npz", "entry": safe}
+        shard[safe] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= _SHARD_BYTES:
+            flush()
+    flush()
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
+                       shardings: Optional[Any] = None,
+                       strict: bool = True) -> Any:
+    src = os.path.join(ckpt_dir, str(step))
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    cache = {}
+
+    def load(key, leaf):
+        if key not in manifest:
+            if strict:
+                raise KeyError(f"checkpoint missing {key}")
+            return leaf
+        meta = manifest[key]
+        fn = meta["file"]
+        if fn not in cache:
+            cache[fn] = np.load(os.path.join(src, fn))
+        arr = cache[fn][meta["entry"]]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        return arr.reshape(meta["shape"])
+
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = [load(_flat_key(p), leaf) for p, leaf in flat[0]]
+    restored = jax.tree_util.tree_unflatten(flat[1], leaves)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    return restored

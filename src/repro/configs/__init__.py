@@ -1,0 +1,38 @@
+"""Assigned-architecture config registry (``--arch <id>``).
+
+Ten architectures from the public pool, six families; every config
+cites its source paper/model-card.  ``get_config(id)`` returns the
+full assigned config, ``get_config(id, reduced=True)`` the smoke-test
+variant (2 layers, d_model<=512, <=4 experts).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "mamba2-780m": "mamba2_780m",
+    "qwen3-32b": "qwen3_32b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "yi-6b": "yi_6b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "paligemma-3b": "paligemma_3b",
+    "whisper-large-v3": "whisper_large_v3",
+    "zamba2-1.2b": "zamba2_1_2b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.REDUCED if reduced else mod.CONFIG

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: TF-Micro-style interpreter,
+arena, memory planner, op resolver, quantization, and export toolchain."""
+
+from . import micro_ops  # registers the reference kernels on import
+from . import quantize  # keep the module visible as repro.core.quantize
+from .arena import ArenaOverflowError, TwoStackArena
+from .exporter import export, fold_constants, strip_training_ops
+from .exporter import quantize as quantize_graph
+from .graph_builder import GraphBuilder
+from .interpreter import MicroInterpreter, SharedArenaState
+from .memory_planner import (BufferRequest, GreedyMemoryPlanner,
+                             LinearMemoryPlanner, MemoryPlan,
+                             OfflineMemoryPlanner)
+from .profiler import MicroProfiler, ProfileReport
+from .op_resolver import (AllOpsResolver, MicroMutableOpResolver,
+                          OpResolutionError, register_op)
+from .schema import (MicroModel, OpCode, QuantParams, TensorDef,
+                     TensorFlags, model_to_source, serialize_model)
+
+__all__ = [
+    "ArenaOverflowError", "TwoStackArena", "export", "fold_constants",
+    "quantize", "quantize_graph", "strip_training_ops", "GraphBuilder",
+    "MicroInterpreter",
+    "SharedArenaState", "BufferRequest", "GreedyMemoryPlanner",
+    "LinearMemoryPlanner", "MemoryPlan", "OfflineMemoryPlanner",
+    "AllOpsResolver", "MicroMutableOpResolver", "OpResolutionError",
+    "register_op", "MicroProfiler", "ProfileReport", "MicroModel", "OpCode", "QuantParams", "TensorDef",
+    "TensorFlags", "model_to_source", "serialize_model",
+]

@@ -1,0 +1,889 @@
+"""Reference kernels (paper §4.7 — "simple operator-kernel implementations
+designed for readability rather than performance").
+
+Every op is a (prepare, eval) pair registered under the ``"reference"``
+tag.  ``prepare`` runs once during interpreter init: it validates
+shapes/dtypes, computes output specs, precomputes requantization constants
+(which TFLM stores in the persistent arena), and requests scratch.
+``eval`` is a pure jnp function executed inside the jitted invoke.
+
+Quantized (INT8) paths follow the TFLM reference kernels: int32
+accumulation, gemmlowp fixed-point requantization, quantized activation
+clamps.  Lookup-table transcendentals (softmax/logistic/tanh) use a
+dequant→float→requant reference instead of the int16 LUTs — a documented
+deviation bounded by the quantization tolerance tests.
+
+Conventions (TFLite layouts):
+  CONV_2D            x: NHWC,  w: (O, KH, KW, I),    bias: (O,)
+  DEPTHWISE_CONV_2D  x: NHWC,  w: (1, KH, KW, C*M),  bias: (C*M,)
+  FULLY_CONNECTED    x: (..., K), w: (N, K),          bias: (N,)
+  SVDF               x: (B, F), w_feat: (NF, F), w_time: (NF, T),
+                     bias: (U,), state (variable): (B, NF*T)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as Q
+from .op_resolver import PrepareResult, TensorSpec, register_op
+from .schema import OpCode
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+_ACT_RANGES_F32 = {
+    "none": (-np.inf, np.inf),
+    "relu": (0.0, np.inf),
+    "relu6": (0.0, 6.0),
+}
+
+
+def _apply_activation_f32(x, activation: str):
+    lo, hi = _ACT_RANGES_F32[activation]
+    if lo == -np.inf and hi == np.inf:
+        return x
+    if hi == np.inf:
+        return jnp.maximum(x, jnp.asarray(lo, x.dtype))
+    return jnp.clip(x, jnp.asarray(lo, x.dtype), jnp.asarray(hi, x.dtype))
+
+
+def _quantized_activation_range(activation: str, scale: float,
+                                zero_point: int) -> Tuple[int, int]:
+    """TFLM CalculateActivationRangeQuantized."""
+    qmin, qmax = Q.INT8_MIN, Q.INT8_MAX
+    if activation == "relu":
+        qmin = max(qmin, zero_point + int(round(0.0 / scale)))
+    elif activation == "relu6":
+        qmin = max(qmin, zero_point + int(round(0.0 / scale)))
+        qmax = min(qmax, zero_point + int(round(6.0 / scale)))
+    return qmin, qmax
+
+
+def _conv_padding(padding: str, in_size: int, k: int, stride: int,
+                  dilation: int = 1) -> Tuple[int, int, int]:
+    """Returns (pad_lo, pad_hi, out_size), TFLite SAME/VALID semantics."""
+    eff_k = (k - 1) * dilation + 1
+    if padding == "VALID":
+        out = (in_size - eff_k) // stride + 1
+        return 0, 0, out
+    out = -(-in_size // stride)                     # ceil div
+    total = max(0, (out - 1) * stride + eff_k - in_size)
+    return total // 2, total - total // 2, out
+
+
+def _spec(shape, dtype) -> TensorSpec:
+    return TensorSpec(tuple(int(d) for d in shape), dtype)
+
+
+def _nbytes(spec: TensorSpec) -> int:
+    n = 1
+    for d in spec.shape:
+        n *= d
+    item = 2 if spec.dtype == "bfloat16" else np.dtype(spec.dtype).itemsize
+    return n * item
+
+
+# ---------------------------------------------------------------------------
+# CONV_2D
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.CONV_2D)
+class Conv2D:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        w = ctx.tensor_spec(op.inputs[1])
+        p = op.params
+        sh, sw = p.get("stride_h", 1), p.get("stride_w", 1)
+        dh, dw = p.get("dilation_h", 1), p.get("dilation_w", 1)
+        pad = p.get("padding", "VALID")
+        n, ih, iw, ic = x.shape
+        oc, kh, kw, wic = w.shape
+        assert wic == ic, f"conv channel mismatch {wic} != {ic}"
+        _, _, oh = _conv_padding(pad, ih, kh, sh, dh)
+        _, _, ow = _conv_padding(pad, iw, kw, sw, dw)
+        out_spec = _spec((n, oh, ow, oc), x.dtype)
+        op_data: Dict[str, Any] = {"act": p.get("activation", "none")}
+        persistent = 0
+        if x.dtype == "int8":
+            xq, wq = ctx.quant(op.inputs[0]), ctx.quant(op.inputs[1])
+            oq = ctx.quant(op.outputs[0])
+            wscales = (wq.channel_scales if wq.is_per_channel
+                       else np.array([wq.scale], np.float32))
+            rs = Q.RequantSpec.build(xq.scale, wscales, oq.scale,
+                                     xq.zero_point, oq.zero_point)
+            qmin, qmax = _quantized_activation_range(
+                op_data["act"], oq.scale, oq.zero_point)
+            op_data.update(requant=rs, qmin=qmin, qmax=qmax)
+            persistent = rs.nbytes()
+        # im2col scratch, the TFLM conv scratch analogue
+        scratch = [kh * kw * ic * oh * ow * 4]
+        return PrepareResult([out_spec], scratch_nbytes=scratch,
+                             persistent_nbytes=persistent, op_data=op_data)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, w = inputs[0], inputs[1]
+        bias = inputs[2] if len(inputs) > 2 and inputs[2] is not None else None
+        p = op.params
+        sh, sw = p.get("stride_h", 1), p.get("stride_w", 1)
+        dh, dw = p.get("dilation_h", 1), p.get("dilation_w", 1)
+        pad = p.get("padding", "VALID")
+        d = ctx.op_data
+        dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                            ("NHWC", "OHWI", "NHWC"))
+        if x.dtype == jnp.int8:
+            rs: Q.RequantSpec = d["requant"]
+            xs = x.astype(jnp.int32) - rs.input_zero_point
+            acc = jax.lax.conv_general_dilated(
+                xs, w.astype(jnp.int32), (sh, sw), pad,
+                rhs_dilation=(dh, dw), dimension_numbers=dn,
+                preferred_element_type=jnp.int32)
+            if bias is not None:
+                acc = acc + bias.astype(jnp.int32)
+            out = Q.requantize(acc, rs.multiplier, rs.shift,
+                               rs.output_zero_point, d["qmin"], d["qmax"])
+            return [out]
+        acc = jax.lax.conv_general_dilated(
+            x, w, (sh, sw), pad, rhs_dilation=(dh, dw), dimension_numbers=dn)
+        if bias is not None:
+            acc = acc + bias
+        return [_apply_activation_f32(acc, d["act"])]
+
+
+# ---------------------------------------------------------------------------
+# DEPTHWISE_CONV_2D
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.DEPTHWISE_CONV_2D)
+class DepthwiseConv2D:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        w = ctx.tensor_spec(op.inputs[1])
+        p = op.params
+        sh, sw = p.get("stride_h", 1), p.get("stride_w", 1)
+        pad = p.get("padding", "VALID")
+        n, ih, iw, ic = x.shape
+        one, kh, kw, oc = w.shape
+        mult = p.get("depth_multiplier", oc // ic)
+        assert oc == ic * mult
+        _, _, oh = _conv_padding(pad, ih, kh, sh)
+        _, _, ow = _conv_padding(pad, iw, kw, sw)
+        out_spec = _spec((n, oh, ow, oc), x.dtype)
+        op_data: Dict[str, Any] = {"act": p.get("activation", "none"),
+                                   "mult": mult}
+        persistent = 0
+        if x.dtype == "int8":
+            xq, wq = ctx.quant(op.inputs[0]), ctx.quant(op.inputs[1])
+            oq = ctx.quant(op.outputs[0])
+            wscales = (wq.channel_scales if wq.is_per_channel
+                       else np.array([wq.scale], np.float32))
+            rs = Q.RequantSpec.build(xq.scale, wscales, oq.scale,
+                                     xq.zero_point, oq.zero_point)
+            qmin, qmax = _quantized_activation_range(
+                op_data["act"], oq.scale, oq.zero_point)
+            op_data.update(requant=rs, qmin=qmin, qmax=qmax)
+            persistent = rs.nbytes()
+        return PrepareResult([out_spec], persistent_nbytes=persistent,
+                             op_data=op_data)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, w = inputs[0], inputs[1]
+        bias = inputs[2] if len(inputs) > 2 and inputs[2] is not None else None
+        p = op.params
+        sh, sw = p.get("stride_h", 1), p.get("stride_w", 1)
+        pad = p.get("padding", "VALID")
+        d = ctx.op_data
+        ic = x.shape[-1]
+        # TFLite DW layout (1,KH,KW,C*M) -> HWIO grouped conv w/ groups=ic
+        kh, kw = w.shape[1], w.shape[2]
+        w_hwio = w.reshape(kh, kw, ic, d["mult"]).transpose(3, 0, 1, 2)
+        w_hwio = w_hwio.reshape(ic * d["mult"], kh, kw, 1)
+        dn = jax.lax.conv_dimension_numbers(x.shape, w_hwio.shape,
+                                            ("NHWC", "OHWI", "NHWC"))
+        if x.dtype == jnp.int8:
+            rs: Q.RequantSpec = d["requant"]
+            xs = x.astype(jnp.int32) - rs.input_zero_point
+            acc = jax.lax.conv_general_dilated(
+                xs, w_hwio.astype(jnp.int32), (sh, sw), pad,
+                dimension_numbers=dn, feature_group_count=ic,
+                preferred_element_type=jnp.int32)
+            if bias is not None:
+                acc = acc + bias.astype(jnp.int32)
+            out = Q.requantize(acc, rs.multiplier, rs.shift,
+                               rs.output_zero_point, d["qmin"], d["qmax"])
+            return [out]
+        acc = jax.lax.conv_general_dilated(
+            x, w_hwio, (sh, sw), pad, dimension_numbers=dn,
+            feature_group_count=ic)
+        if bias is not None:
+            acc = acc + bias
+        return [_apply_activation_f32(acc, d["act"])]
+
+
+# ---------------------------------------------------------------------------
+# FULLY_CONNECTED
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.FULLY_CONNECTED)
+class FullyConnected:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        w = ctx.tensor_spec(op.inputs[1])
+        n_out, k = w.shape
+        assert x.shape[-1] == k, f"FC dim mismatch {x.shape} @ {w.shape}"
+        out_spec = _spec(x.shape[:-1] + (n_out,), x.dtype)
+        p = op.params
+        op_data: Dict[str, Any] = {"act": p.get("activation", "none")}
+        persistent = 0
+        if x.dtype == "int8":
+            xq, wq = ctx.quant(op.inputs[0]), ctx.quant(op.inputs[1])
+            oq = ctx.quant(op.outputs[0])
+            wscales = (wq.channel_scales if wq.is_per_channel
+                       else np.array([wq.scale], np.float32))
+            rs = Q.RequantSpec.build(xq.scale, wscales, oq.scale,
+                                     xq.zero_point, oq.zero_point)
+            qmin, qmax = _quantized_activation_range(
+                op_data["act"], oq.scale, oq.zero_point)
+            op_data.update(requant=rs, qmin=qmin, qmax=qmax)
+            persistent = rs.nbytes()
+        return PrepareResult([out_spec], persistent_nbytes=persistent,
+                             op_data=op_data)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, w = inputs[0], inputs[1]
+        bias = inputs[2] if len(inputs) > 2 and inputs[2] is not None else None
+        d = ctx.op_data
+        if x.dtype == jnp.int8:
+            rs: Q.RequantSpec = d["requant"]
+            xs = x.astype(jnp.int32) - rs.input_zero_point
+            acc = jax.lax.dot_general(
+                xs, w.astype(jnp.int32),
+                (((x.ndim - 1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            if bias is not None:
+                acc = acc + bias.astype(jnp.int32)
+            out = Q.requantize(acc, rs.multiplier, rs.shift,
+                               rs.output_zero_point, d["qmin"], d["qmax"])
+            return [out]
+        acc = jnp.einsum("...k,nk->...n", x, w)
+        if bias is not None:
+            acc = acc + bias
+        return [_apply_activation_f32(acc, d["act"])]
+
+
+# ---------------------------------------------------------------------------
+# elementwise binary (ADD / SUB / MUL / MIN / MAX / SQUARED_DIFFERENCE)
+# ---------------------------------------------------------------------------
+
+def _broadcast_shape(a, b):
+    return tuple(np.broadcast_shapes(tuple(a), tuple(b)))
+
+
+def _binary_prepare(ctx, op):
+    a = ctx.tensor_spec(op.inputs[0])
+    b = ctx.tensor_spec(op.inputs[1])
+    out_spec = _spec(_broadcast_shape(a.shape, b.shape), a.dtype)
+    op_data: Dict[str, Any] = {"act": op.params.get("activation", "none")}
+    persistent = 0
+    if a.dtype == "int8":
+        q1, q2 = ctx.quant(op.inputs[0]), ctx.quant(op.inputs[1])
+        oq = ctx.quant(op.outputs[0])
+        op_data.update(q1=(q1.scale, q1.zero_point),
+                       q2=(q2.scale, q2.zero_point),
+                       qo=(oq.scale, oq.zero_point))
+        if op.opcode in (OpCode.ADD, OpCode.SUB):
+            # TFLM quantized add: align on twice_max_input_scale, ls=20
+            ls = 20
+            twice_max = 2.0 * max(q1.scale, q2.scale)
+            m1, s1 = Q.quantize_multiplier(q1.scale / twice_max)
+            m2, s2 = Q.quantize_multiplier(q2.scale / twice_max)
+            mo, so = Q.quantize_multiplier(
+                twice_max / ((1 << ls) * oq.scale))
+            op_data.update(ls=ls, m1=m1, s1=s1, m2=m2, s2=s2, mo=mo, so=so)
+            persistent = 48
+        elif op.opcode == OpCode.MUL:
+            mo, so = Q.quantize_multiplier(q1.scale * q2.scale / oq.scale)
+            op_data.update(mo=mo, so=so)
+            persistent = 16
+        qmin, qmax = _quantized_activation_range(
+            op_data["act"], oq.scale, oq.zero_point)
+        op_data.update(qmin=qmin, qmax=qmax)
+    return PrepareResult([out_spec], persistent_nbytes=persistent,
+                         op_data=op_data)
+
+
+def _make_binary(opcode, f32_fn, int8_kind):
+    class _Bin:
+        @staticmethod
+        def prepare(ctx, op):
+            return _binary_prepare(ctx, op)
+
+        @staticmethod
+        def eval(ctx, op, inputs):
+            a, b = inputs
+            d = ctx.op_data
+            if a.dtype == jnp.int8 and int8_kind == "addsub":
+                s1z, s2z, (oscale, ozp) = d["q1"], d["q2"], d["qo"]
+                x1 = (a.astype(jnp.int32) - s1z[1]) << d["ls"]
+                x2 = (b.astype(jnp.int32) - s2z[1]) << d["ls"]
+                x1 = Q.multiply_by_quantized_multiplier(x1, d["m1"], d["s1"])
+                x2 = Q.multiply_by_quantized_multiplier(x2, d["m2"], d["s2"])
+                raw = x1 - x2 if op.opcode == OpCode.SUB else x1 + x2
+                out = Q.multiply_by_quantized_multiplier(
+                    raw, d["mo"], d["so"]) + ozp
+                return [jnp.clip(out, d["qmin"], d["qmax"]).astype(jnp.int8)]
+            if a.dtype == jnp.int8 and int8_kind == "mul":
+                (s1, z1), (s2, z2), (so_, zo) = d["q1"], d["q2"], d["qo"]
+                raw = ((a.astype(jnp.int32) - z1)
+                       * (b.astype(jnp.int32) - z2))
+                out = Q.multiply_by_quantized_multiplier(
+                    raw, d["mo"], d["so"]) + zo
+                return [jnp.clip(out, d["qmin"], d["qmax"]).astype(jnp.int8)]
+            if a.dtype == jnp.int8:
+                (s1, z1), (s2, z2), (so_, zo) = d["q1"], d["q2"], d["qo"]
+                fa = (a.astype(jnp.float32) - z1) * s1
+                fb = (b.astype(jnp.float32) - z2) * s2
+                out = jnp.round(f32_fn(fa, fb) / so_) + zo
+                return [jnp.clip(out, Q.INT8_MIN, Q.INT8_MAX
+                                 ).astype(jnp.int8)]
+            return [_apply_activation_f32(f32_fn(a, b), d["act"])]
+    _Bin.__name__ = f"Bin_{opcode}"
+    register_op(opcode)(_Bin)
+    return _Bin
+
+
+_make_binary(OpCode.ADD, lambda a, b: a + b, "addsub")
+_make_binary(OpCode.SUB, lambda a, b: a - b, "addsub")
+_make_binary(OpCode.MUL, lambda a, b: a * b, "mul")
+_make_binary(OpCode.MINIMUM, jnp.minimum, "float")
+_make_binary(OpCode.MAXIMUM, jnp.maximum, "float")
+_make_binary(OpCode.SQUARED_DIFFERENCE, lambda a, b: (a - b) ** 2, "float")
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+
+def _pool_prepare(ctx, op):
+    x = ctx.tensor_spec(op.inputs[0])
+    p = op.params
+    kh, kw = p.get("filter_h", 2), p.get("filter_w", 2)
+    sh, sw = p.get("stride_h", kh), p.get("stride_w", kw)
+    pad = p.get("padding", "VALID")
+    n, ih, iw, c = x.shape
+    _, _, oh = _conv_padding(pad, ih, kh, sh)
+    _, _, ow = _conv_padding(pad, iw, kw, sw)
+    return PrepareResult([_spec((n, oh, ow, c), x.dtype)],
+                         op_data={"k": (kh, kw), "s": (sh, sw), "pad": pad})
+
+
+@register_op(OpCode.MAX_POOL_2D)
+class MaxPool2D:
+    prepare = staticmethod(_pool_prepare)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        kh, kw = ctx.op_data["k"]
+        sh, sw = ctx.op_data["s"]
+        pad = ctx.op_data["pad"]
+        init = (jnp.iinfo(jnp.int8).min if x.dtype == jnp.int8
+                else -jnp.inf)
+        out = jax.lax.reduce_window(
+            x, jnp.asarray(init, x.dtype), jax.lax.max,
+            (1, kh, kw, 1), (1, sh, sw, 1), pad)
+        return [out]
+
+
+@register_op(OpCode.AVERAGE_POOL_2D)
+class AvgPool2D:
+    prepare = staticmethod(_pool_prepare)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        kh, kw = ctx.op_data["k"]
+        sh, sw = ctx.op_data["s"]
+        pad = ctx.op_data["pad"]
+        if x.dtype == jnp.int8:
+            acc = jax.lax.reduce_window(
+                x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
+                (1, kh, kw, 1), (1, sh, sw, 1), pad)
+            cnt = jax.lax.reduce_window(
+                jnp.ones(x.shape, jnp.int32), jnp.int32(0), jax.lax.add,
+                (1, kh, kw, 1), (1, sh, sw, 1), pad)
+            # rounding divide (TFLM: round-half-away-from-zero)
+            out = jnp.where(acc >= 0, (acc + cnt // 2) // cnt,
+                            -((-acc + cnt // 2) // cnt))
+            return [jnp.clip(out, Q.INT8_MIN, Q.INT8_MAX).astype(jnp.int8)]
+        acc = jax.lax.reduce_window(
+            x, jnp.asarray(0, x.dtype), jax.lax.add,
+            (1, kh, kw, 1), (1, sh, sw, 1), pad)
+        cnt = jax.lax.reduce_window(
+            jnp.ones(x.shape, x.dtype), jnp.asarray(0, x.dtype), jax.lax.add,
+            (1, kh, kw, 1), (1, sh, sw, 1), pad)
+        return [acc / cnt]
+
+
+# ---------------------------------------------------------------------------
+# shape / layout ops
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.RESHAPE)
+class Reshape:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        new_shape = list(op.params["new_shape"])
+        n = int(np.prod(x.shape))
+        if -1 in new_shape:
+            i = new_shape.index(-1)
+            rest = int(np.prod([d for d in new_shape if d != -1]))
+            new_shape[i] = n // rest
+        assert int(np.prod(new_shape)) == n
+        return PrepareResult([_spec(new_shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        shape = ctx.output_shape(0)
+        return [inputs[0].reshape(shape)]
+
+
+@register_op(OpCode.TRANSPOSE)
+class Transpose:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        perm = op.params["perm"]
+        return PrepareResult([_spec([x.shape[p] for p in perm], x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        return [jnp.transpose(inputs[0], op.params["perm"])]
+
+
+@register_op(OpCode.CONCATENATION)
+class Concatenation:
+    @staticmethod
+    def prepare(ctx, op):
+        axis = op.params.get("axis", -1)
+        specs = [ctx.tensor_spec(i) for i in op.inputs]
+        shape = list(specs[0].shape)
+        ax = axis % len(shape)
+        shape[ax] = sum(s.shape[ax] for s in specs)
+        return PrepareResult([_spec(shape, specs[0].dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        return [jnp.concatenate(inputs, axis=op.params.get("axis", -1))]
+
+
+@register_op(OpCode.PAD)
+class Pad:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        pads = op.params["paddings"]
+        shape = [d + lo + hi for d, (lo, hi) in zip(x.shape, pads)]
+        return PrepareResult([_spec(shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        q = ctx.quant_of_output(0)
+        cval = q.zero_point if inputs[0].dtype == jnp.int8 else 0
+        return [jnp.pad(inputs[0], op.params["paddings"],
+                        constant_values=cval)]
+
+
+@register_op(OpCode.STRIDED_SLICE)
+class StridedSlice:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        begin, end = op.params["begin"], op.params["end"]
+        strides = op.params.get("strides", [1] * len(begin))
+        shape = [max(0, -(-(e - b) // s))
+                 for b, e, s in zip(begin, end, strides)]
+        return PrepareResult([_spec(shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        begin, end = op.params["begin"], op.params["end"]
+        strides = op.params.get("strides", [1] * len(begin))
+        return [jax.lax.slice(inputs[0], begin, end, strides)]
+
+
+@register_op(OpCode.SPLIT)
+class Split:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        axis = op.params.get("axis", -1) % len(x.shape)
+        n = len(op.outputs)
+        assert x.shape[axis] % n == 0
+        shape = list(x.shape)
+        shape[axis] //= n
+        return PrepareResult([_spec(shape, x.dtype) for _ in range(n)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        axis = op.params.get("axis", -1)
+        return list(jnp.split(inputs[0], len(op.outputs), axis=axis))
+
+
+@register_op(OpCode.MEAN)
+class Mean:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        axes = tuple(a % len(x.shape) for a in op.params["axes"])
+        keep = op.params.get("keepdims", False)
+        shape = [d if i not in axes else 1
+                 for i, d in enumerate(x.shape)]
+        if not keep:
+            shape = [d for i, d in enumerate(shape) if i not in axes]
+        op_data = {}
+        if x.dtype == "int8":
+            xq, oq = ctx.quant(op.inputs[0]), ctx.quant(op.outputs[0])
+            op_data = {"xq": (xq.scale, xq.zero_point),
+                       "oq": (oq.scale, oq.zero_point)}
+        return PrepareResult([_spec(shape, x.dtype)], op_data=op_data)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        axes = tuple(op.params["axes"])
+        keep = op.params.get("keepdims", False)
+        if x.dtype == jnp.int8:
+            (xs, xz), (os_, oz) = ctx.op_data["xq"], ctx.op_data["oq"]
+            f = (x.astype(jnp.float32) - xz) * xs
+            m = jnp.mean(f, axis=axes, keepdims=keep)
+            q = jnp.round(m / os_) + oz
+            return [jnp.clip(q, Q.INT8_MIN, Q.INT8_MAX).astype(jnp.int8)]
+        return [jnp.mean(x, axis=axes, keepdims=keep)]
+
+
+# ---------------------------------------------------------------------------
+# unary / activations
+# ---------------------------------------------------------------------------
+
+def _unary_prepare(ctx, op):
+    x = ctx.tensor_spec(op.inputs[0])
+    op_data = {}
+    if x.dtype == "int8":
+        xq, oq = ctx.quant(op.inputs[0]), ctx.quant(op.outputs[0])
+        op_data = {"xq": (xq.scale, xq.zero_point),
+                   "oq": (oq.scale, oq.zero_point)}
+    return PrepareResult([_spec(x.shape, x.dtype)], op_data=op_data)
+
+
+def _make_unary(opcode, f32_fn):
+    class _Un:
+        @staticmethod
+        def prepare(ctx, op):
+            return _unary_prepare(ctx, op)
+
+        @staticmethod
+        def eval(ctx, op, inputs):
+            (x,) = inputs
+            if x.dtype == jnp.int8:
+                (xs, xz) = ctx.op_data["xq"]
+                (os_, oz) = ctx.op_data["oq"]
+                f = (x.astype(jnp.float32) - xz) * xs
+                out = jnp.round(f32_fn(f) / os_) + oz
+                return [jnp.clip(out, Q.INT8_MIN, Q.INT8_MAX
+                                 ).astype(jnp.int8)]
+            return [f32_fn(x)]
+    _Un.__name__ = f"Unary_{opcode}"
+    register_op(opcode)(_Un)
+    return _Un
+
+
+_make_unary(OpCode.RELU, lambda x: jnp.maximum(x, 0))
+_make_unary(OpCode.RELU6, lambda x: jnp.clip(x, 0, 6))
+_make_unary(OpCode.LOGISTIC, jax.nn.sigmoid)
+_make_unary(OpCode.TANH, jnp.tanh)
+_make_unary(OpCode.SILU, jax.nn.silu)
+_make_unary(OpCode.GELU, jax.nn.gelu)
+_make_unary(OpCode.RSQRT, jax.lax.rsqrt)
+_make_unary(OpCode.EXP, jnp.exp)
+_make_unary(OpCode.NEG, jnp.negative)
+_make_unary(OpCode.LEAKY_RELU, lambda x: jnp.where(x >= 0, x, 0.01 * x))
+
+
+@register_op(OpCode.SOFTMAX)
+class Softmax:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        op_data = {}
+        if x.dtype == "int8":
+            xq = ctx.quant(op.inputs[0])
+            oq = ctx.quant(op.outputs[0])
+            # TFLite convention: softmax output scale 1/256, zp -128
+            op_data = {"xq": (xq.scale, xq.zero_point),
+                       "oq": (oq.scale, oq.zero_point)}
+        return PrepareResult([_spec(x.shape, x.dtype)], op_data=op_data)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        beta = op.params.get("beta", 1.0)
+        if x.dtype == jnp.int8:
+            (xs, xz), (os_, oz) = ctx.op_data["xq"], ctx.op_data["oq"]
+            f = (x.astype(jnp.float32) - xz) * xs
+            s = jax.nn.softmax(beta * f, axis=-1)
+            out = jnp.round(s / os_) + oz
+            return [jnp.clip(out, Q.INT8_MIN, Q.INT8_MAX).astype(jnp.int8)]
+        return [jax.nn.softmax(jnp.asarray(beta, x.dtype) * x, axis=-1)]
+
+
+@register_op(OpCode.IDENTITY)
+class Identity:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        return PrepareResult([_spec(x.shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        return [inputs[0]]
+
+
+@register_op(OpCode.DROPOUT)
+class Dropout(Identity):
+    """Training-only op; the exporter strips it (§3.3).  If a model reaches
+    the interpreter with DROPOUT intact, inference-mode semantics apply
+    (identity)."""
+
+
+# ---------------------------------------------------------------------------
+# QUANTIZE / DEQUANTIZE
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.QUANTIZE)
+class QuantizeOp:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        oq = ctx.quant(op.outputs[0])
+        return PrepareResult([_spec(x.shape, "int8")],
+                             op_data={"oq": (oq.scale, oq.zero_point)})
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        (s, z) = ctx.op_data["oq"]
+        q = jnp.round(x / jnp.asarray(s, x.dtype)) + z
+        return [jnp.clip(q, Q.INT8_MIN, Q.INT8_MAX).astype(jnp.int8)]
+
+
+@register_op(OpCode.DEQUANTIZE)
+class DequantizeOp:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        xq = ctx.quant(op.inputs[0])
+        return PrepareResult([_spec(x.shape, "float32")],
+                             op_data={"xq": (xq.scale, xq.zero_point)})
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        (s, z) = ctx.op_data["xq"]
+        return [(x.astype(jnp.float32) - z) * jnp.float32(s)]
+
+
+# ---------------------------------------------------------------------------
+# SVDF (the Google Hotword workhorse op)
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.SVDF)
+class SVDF:
+    """TFLite SVDF: rank-factored time-convolutional layer.
+
+    inputs: x (B, F), w_feature (NF, F), w_time (NF, T), bias (U,) or -1,
+            state variable (B, NF*T)
+    params: rank; units = NF // rank; activation.
+    """
+
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        wf = ctx.tensor_spec(op.inputs[1])
+        wt = ctx.tensor_spec(op.inputs[2])
+        rank = op.params.get("rank", 1)
+        nf, f = wf.shape
+        _, t = wt.shape
+        units = nf // rank
+        assert x.shape[-1] == f
+        out_spec = _spec((x.shape[0], units), x.dtype)
+        return PrepareResult(
+            [out_spec],
+            op_data={"rank": rank, "units": units, "nf": nf, "t": t},
+            variable_updates=[op.inputs[4]])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, wf, wt = inputs[0], inputs[1], inputs[2]
+        bias = inputs[3]
+        state = inputs[4]                       # (B, NF*T)
+        d = ctx.op_data
+        b = x.shape[0]
+        nf, t, rank, units = d["nf"], d["t"], d["rank"], d["units"]
+        st = state.reshape(b, nf, t)
+        feat = x @ wf.T                         # (B, NF)
+        st = jnp.concatenate([st[:, :, 1:], feat[:, :, None]], axis=2)
+        out = jnp.einsum("bnt,nt->bn", st, wt)  # (B, NF)
+        out = out.reshape(b, units, rank).sum(axis=2)
+        if bias is not None:
+            out = out + bias
+        act = op.params.get("activation", "relu")
+        out = _apply_activation_f32(out, act)
+        return [out, st.reshape(b, nf * t)]
+
+
+# ---------------------------------------------------------------------------
+# transformer micro-path ops
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.MATMUL)
+class MatMul:
+    @staticmethod
+    def prepare(ctx, op):
+        a = ctx.tensor_spec(op.inputs[0])
+        b = ctx.tensor_spec(op.inputs[1])
+        tb = op.params.get("transpose_b", False)
+        n = b.shape[-2] if tb else b.shape[-1]
+        k_b = b.shape[-1] if tb else b.shape[-2]
+        assert a.shape[-1] == k_b, f"matmul mismatch {a.shape} x {b.shape}"
+        if len(b.shape) == 2:
+            shape = a.shape[:-1] + (n,)
+        else:
+            batch = _broadcast_shape(a.shape[:-2], b.shape[:-2])
+            shape = batch + (a.shape[-2], n)
+        return PrepareResult([_spec(shape, a.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        a, b = inputs
+        if op.params.get("transpose_b", False):
+            b = jnp.swapaxes(b, -1, -2)
+        return [a @ b]
+
+
+@register_op(OpCode.BATCH_MATMUL)
+class BatchMatMul(MatMul):
+    pass
+
+
+@register_op(OpCode.RMS_NORM)
+class RMSNorm:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        return PrepareResult([_spec(x.shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, gamma = inputs
+        eps = op.params.get("eps", 1e-6)
+        ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                      keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps).astype(x.dtype)
+        return [y * gamma]
+
+
+@register_op(OpCode.LAYER_NORM)
+class LayerNorm:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])
+        return PrepareResult([_spec(x.shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, gamma, beta = inputs
+        eps = op.params.get("eps", 1e-5)
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+        return [y * gamma + beta]
+
+
+@register_op(OpCode.ROPE)
+class RoPE:
+    @staticmethod
+    def prepare(ctx, op):
+        x = ctx.tensor_spec(op.inputs[0])        # (B, S, H, D)
+        return PrepareResult([_spec(x.shape, x.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        (x,) = inputs
+        base = op.params.get("base", 10000.0)
+        b, s, h, dim = x.shape
+        half = dim // 2
+        pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+        inv = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+        ang = pos * inv                            # (S, half)
+        cos = jnp.cos(ang)[None, :, None, :].astype(x.dtype)
+        sin = jnp.sin(ang)[None, :, None, :].astype(x.dtype)
+        x1, x2 = x[..., :half], x[..., half:]
+        return [jnp.concatenate(
+            [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)]
+
+
+@register_op(OpCode.ATTENTION)
+class Attention:
+    """Fused SDPA for the micro path: q,k,v (B, H, S, D) -> (B, H, S, D)."""
+
+    @staticmethod
+    def prepare(ctx, op):
+        q = ctx.tensor_spec(op.inputs[0])
+        return PrepareResult([_spec(q.shape, q.dtype)],
+                             scratch_nbytes=[q.shape[1] * q.shape[2] ** 2 * 4])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        q, k, v = inputs
+        causal = op.params.get("causal", True)
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * jnp.asarray(
+            scale, q.dtype)
+        if causal:
+            s = q.shape[2]
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            logits = jnp.where(mask, logits,
+                               jnp.asarray(-1e30, logits.dtype))
+        w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1
+                           ).astype(q.dtype)
+        return [jnp.einsum("bhqk,bhkd->bhqd", w, v)]
+
+
+@register_op(OpCode.EMBEDDING_LOOKUP)
+class EmbeddingLookup:
+    @staticmethod
+    def prepare(ctx, op):
+        ids = ctx.tensor_spec(op.inputs[0])
+        table = ctx.tensor_spec(op.inputs[1])
+        return PrepareResult([_spec(ids.shape + (table.shape[1],),
+                                    table.dtype)])
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        ids, table = inputs
+        return [jnp.take(table, ids, axis=0)]

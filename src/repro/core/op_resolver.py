@@ -1,0 +1,177 @@
+"""Operator resolution (paper §4.1 OpResolver, §4.7–4.8 kernel specialization).
+
+Two TFLM mechanisms are reproduced exactly:
+
+1. **Selective linking.**  ``MicroMutableOpResolver`` starts empty; the
+   application registers only the ops its model needs ("controls which
+   operators link to the final binary, minimizing executable size").  Our
+   size analogue is the *registration footprint* — unregistered ops are
+   simply absent and resolving them raises, and the memory benchmark counts
+   the bytes of registered implementations.
+
+2. **Platform tags.**  Each opcode may have several implementations keyed
+   by tag — ``"reference"`` (readable pure-jnp, the paper's reference
+   kernels) and e.g. ``"pallas"`` (the TPU-optimized vendor-kernel
+   analogue of CMSIS-NN, selected at build time via ``TAGS=...``).
+   ``resolve(opcode)`` walks the tag priority list, so swapping in an
+   optimized kernel requires no interpreter changes (§4.8).
+
+The interpreter↔kernel boundary mirrors TFLM's C API: every kernel is a
+(prepare, eval) pair.  ``prepare(ctx, op)`` runs once at init — it checks
+shapes/dtypes, computes output specs, precomputes requant constants, and
+requests scratch buffers from the arena.  ``eval(ctx, op, inputs)`` runs
+inside the jitted invoke and must be a pure function of its inputs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .schema import OP_NAMES
+
+REFERENCE_TAG = "reference"
+
+
+@dataclass
+class TensorSpec:
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclass
+class PrepareResult:
+    """What a kernel's prepare() tells the interpreter (TFLM: communicated
+    through the context during the preparation phase, §4.1)."""
+    output_specs: List[TensorSpec]
+    scratch_nbytes: List[int] = field(default_factory=list)
+    persistent_nbytes: int = 0          # requant tables etc. (tail stack)
+    op_data: Any = None                 # opaque per-op baked constants
+    variable_updates: List[int] = field(default_factory=list)
+    # ^ tensor indices of variable tensors this op updates in place (e.g.
+    #   SVDF state); eval returns their new values after its outputs.
+
+
+@dataclass(frozen=True)
+class OpRegistration:
+    opcode: int
+    tag: str
+    prepare: Callable[..., PrepareResult]
+    eval: Callable[..., Sequence[Any]]
+    # rough implementation footprint in bytes (code-size analogue used by
+    # the Table-2 memory benchmark); defaults to the bytecode size.
+    code_nbytes: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"{OP_NAMES.get(self.opcode, self.opcode)}[{self.tag}]"
+
+
+class _Registry:
+    """Global registry that vendor kernel libraries populate at import time
+    (the analogue of dropping a CMSIS-NN subfolder into kernels/)."""
+
+    def __init__(self) -> None:
+        self._impls: Dict[Tuple[int, str], OpRegistration] = {}
+
+    def register(self, opcode: int, tag: str,
+                 prepare: Callable, eval_fn: Callable) -> OpRegistration:
+        code = 0
+        for fn in (prepare, eval_fn):
+            co = getattr(fn, "__code__", None)
+            if co is not None:
+                code += len(co.co_code) + 4 * len(co.co_consts or ())
+        reg = OpRegistration(opcode, tag, prepare, eval_fn, code)
+        self._impls[(opcode, tag)] = reg
+        return reg
+
+    def lookup(self, opcode: int, tag: str) -> Optional[OpRegistration]:
+        return self._impls.get((opcode, tag))
+
+    def tags_for(self, opcode: int) -> List[str]:
+        return [t for (oc, t) in self._impls if oc == opcode]
+
+    def opcodes(self) -> List[int]:
+        return sorted({oc for (oc, _) in self._impls})
+
+
+GLOBAL_REGISTRY = _Registry()
+
+
+def register_op(opcode: int, tag: str = REFERENCE_TAG):
+    """Decorator used by kernel libraries::
+
+        @register_op(OpCode.CONV_2D, tag="pallas")
+        class PallasConv:
+            @staticmethod
+            def prepare(ctx, op): ...
+            @staticmethod
+            def eval(ctx, op, inputs): ...
+    """
+    def wrap(impl):
+        prepare = getattr(impl, "prepare")
+        eval_fn = getattr(impl, "eval")
+        GLOBAL_REGISTRY.register(opcode, tag, prepare, eval_fn)
+        return impl
+    return wrap
+
+
+class OpResolutionError(KeyError):
+    pass
+
+
+class MicroMutableOpResolver:
+    """The application-facing resolver: register exactly what you need.
+
+    ``tags`` is the build-tag priority list, e.g. ``("pallas", "reference")``
+    — the TFLM ``TAGS="cmsis-nn"`` analogue: optimized implementations
+    shadow reference ones per-kernel, falling back when a platform does not
+    provide one.
+    """
+
+    def __init__(self, tags: Sequence[str] = (REFERENCE_TAG,)):
+        self.tags = tuple(tags)
+        self._linked: Dict[int, OpRegistration] = {}
+
+    def add(self, opcode: int) -> "MicroMutableOpResolver":
+        for tag in self.tags:
+            reg = GLOBAL_REGISTRY.lookup(opcode, tag)
+            if reg is not None:
+                self._linked[opcode] = reg
+                return self
+        raise OpResolutionError(
+            f"no implementation of {OP_NAMES.get(opcode, opcode)} for "
+            f"tags {self.tags}; available tags: "
+            f"{GLOBAL_REGISTRY.tags_for(opcode)}")
+
+    def add_many(self, opcodes: Sequence[int]) -> "MicroMutableOpResolver":
+        for oc in opcodes:
+            self.add(oc)
+        return self
+
+    def resolve(self, opcode: int) -> OpRegistration:
+        try:
+            return self._linked[opcode]
+        except KeyError:
+            raise OpResolutionError(
+                f"operator {OP_NAMES.get(opcode, opcode)} was not registered "
+                f"with this resolver (TFLM: op not linked into the binary)")
+
+    @property
+    def linked_ops(self) -> List[OpRegistration]:
+        return list(self._linked.values())
+
+    def code_nbytes(self) -> int:
+        """Registration footprint: the Table-2 'code size' analogue."""
+        return sum(r.code_nbytes for r in self._linked.values())
+
+
+class AllOpsResolver(MicroMutableOpResolver):
+    """Convenience resolver linking every registered op (TFLM's
+    ``AllOpsResolver`` — larger footprint, zero configuration)."""
+
+    def __init__(self, tags: Sequence[str] = (REFERENCE_TAG,)):
+        super().__init__(tags)
+        for oc in GLOBAL_REGISTRY.opcodes():
+            if any(GLOBAL_REGISTRY.lookup(oc, t) for t in tags):
+                self.add(oc)

@@ -1,0 +1,145 @@
+"""Per-operator profiling hooks (paper §5.4, TFLM micro_profiler).
+
+TFLM lets a developer instrument code sections and attribute cycles to
+operators to find bottlenecks.  Our invoke is ONE fused jit call (the
+dispatch is paid at trace time), so per-op attribution needs a separate
+instrumented execution mode: ``MicroProfiler.profile(interp, ...)``
+re-runs the op list eagerly (one jit per op, warmed), measuring wall
+time per operator instance — the same numbers TFLM's hooks produce,
+at the cost of losing cross-op fusion (reported alongside the fused
+total so the fusion win is visible too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as Q
+from .schema import OpCode
+
+_OP_NAMES = {v: k for k, v in vars(OpCode).items()
+             if isinstance(v, int) and not k.startswith("_")}
+
+
+@dataclasses.dataclass
+class OpProfile:
+    index: int
+    op_name: str
+    wall_us: float
+    out_bytes: int
+
+    def line(self) -> str:
+        return (f"  [{self.index:3d}] {self.op_name:20s} "
+                f"{self.wall_us:9.1f} us  ({self.out_bytes} B out)")
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    per_op: List[OpProfile]
+    fused_total_us: float
+
+    @property
+    def eager_total_us(self) -> float:
+        return sum(p.wall_us for p in self.per_op)
+
+    def by_op_type(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for p in self.per_op:
+            out[p.op_name] = out.get(p.op_name, 0.0) + p.wall_us
+        return dict(sorted(out.items(), key=lambda kv: -kv[1]))
+
+    def bottleneck(self) -> str:
+        return next(iter(self.by_op_type()))
+
+    def render(self) -> str:
+        lines = ["per-operator profile (eager, per-op jit):"]
+        lines += [p.line() for p in self.per_op]
+        lines.append(f"  eager total: {self.eager_total_us:.1f} us   "
+                     f"fused invoke: {self.fused_total_us:.1f} us   "
+                     f"(fusion win "
+                     f"{self.eager_total_us / max(self.fused_total_us, 1e-9):.2f}x)")
+        lines.append("by op type (bottlenecks first):")
+        for name, us in self.by_op_type().items():
+            lines.append(f"  {name:20s} {us:9.1f} us")
+        return "\n".join(lines)
+
+
+class MicroProfiler:
+    """Paper §5.4: instrument the interpreter's operator sequence."""
+
+    @staticmethod
+    def profile(interp, inputs: List[np.ndarray], *, warmup: int = 2,
+                iters: int = 5) -> ProfileReport:
+        model = interp.model
+        # fused reference timing (the production invoke)
+        def fused():
+            for i, x in enumerate(inputs):
+                interp.set_input(i, x)
+            interp.invoke()
+            interp.output(0)
+        for _ in range(warmup):
+            fused()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fused()
+        fused_us = (time.perf_counter() - t0) / iters * 1e6
+
+        # eager per-op execution over a value environment
+        env: Dict[int, jnp.ndarray] = {}
+        var_env = {t: jnp.zeros(interp._specs[t].shape, jnp.float32)
+                   for t in interp._var_pos}
+        for pos, tid in enumerate(model.inputs):
+            env[tid] = jnp.asarray(
+                np.asarray(inputs[pos],
+                           dtype=np.dtype("float32")
+                           if interp._specs[tid].dtype == "float32"
+                           else None))
+        profiles: List[OpProfile] = []
+        with Q.x64_scope():
+            for idx, opp in enumerate(interp._op_plans):
+                op = opp.op
+                vals = []
+                for t in op.inputs:
+                    if t < 0:
+                        vals.append(None)
+                    elif t in interp._const_pos:
+                        vals.append(interp._consts[interp._const_pos[t]])
+                    elif t in var_env and t not in env:
+                        vals.append(var_env[t])
+                    else:
+                        vals.append(env[t])
+                # jit can't take None: substitute and rebuild inside
+                call_args = [a if a is not None else jnp.zeros(())
+                             for a in vals]
+                none_mask = [a is None for a in vals]
+                fn = jax.jit(lambda *a, _opp=opp, _op=op,
+                             _mask=tuple(none_mask):
+                             _opp.registration.eval(
+                                 _opp.eval_ctx, _op,
+                                 [None if m else x
+                                  for m, x in zip(_mask, a)]))
+                for _ in range(warmup):
+                    jax.block_until_ready(fn(*call_args))
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    outs = fn(*call_args)
+                    jax.block_until_ready(outs)
+                us = (time.perf_counter() - t0) / iters * 1e6
+                n_out = len(op.outputs)
+                for t, o in zip(op.outputs, outs[:n_out]):
+                    env[t] = o
+                for t, v in zip(opp.prep.variable_updates, outs[n_out:]):
+                    var_env[t] = v
+                out_bytes = sum(int(np.prod(interp._specs[t].shape))
+                                * 4 for t in op.outputs)
+                profiles.append(OpProfile(
+                    index=idx,
+                    op_name=_OP_NAMES.get(op.opcode, str(op.opcode)),
+                    wall_us=us, out_bytes=out_bytes))
+        return ProfileReport(per_op=profiles, fused_total_us=fused_us)

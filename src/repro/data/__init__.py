@@ -1,0 +1,5 @@
+"""Data substrate: seeded synthetic token pipeline with packing."""
+
+from .pipeline import PackedLMDataset, SyntheticTokenSource, make_batches
+
+__all__ = ["PackedLMDataset", "SyntheticTokenSource", "make_batches"]

@@ -1,0 +1,8 @@
+"""Distribution layer: mesh-aware sharding specs for params, batches
+and caches (pjit/GSPMD)."""
+
+from .sharding import (batch_sharding, cache_sharding, data_axes,
+                       param_sharding, ShardingPolicy)
+
+__all__ = ["batch_sharding", "cache_sharding", "data_axes",
+           "param_sharding", "ShardingPolicy"]

@@ -1,0 +1,183 @@
+"""Activation-sharding context: explicit with_sharding_constraint hints
+inside model code, active only when a mesh policy is installed (no-op in
+single-device smoke tests).
+
+Why: with FSDP-sharded weights (d_model dim on ``data``) GSPMD may
+legally satisfy an einsum by REPLICATING the batch and sharding the
+contraction — batch-replicated activations then get saved as remat
+residuals (measured: phi4 train_4k temp 312 GiB/device).  Pinning
+activations to P((pod, data), None, ...) forces the all-gather onto the
+weights instead (the FSDP schedule) and keeps residuals batch-sharded.
+
+This module deliberately imports nothing from repro.models (no cycles).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "ctx", None)
+
+
+class ActivationCtx:
+    def __init__(self, mesh: Mesh, *, batch_divisible: bool,
+                 logit_axis: Optional[str] = "model",
+                 heads_divisible: bool = False,
+                 seq_divisible: bool = False,
+                 experts_divisible: bool = False):
+        self.mesh = mesh
+        self.batch_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in mesh.axis_names)
+        self.batch_divisible = batch_divisible
+        self.logit_axis = (logit_axis if logit_axis in mesh.axis_names
+                           else None)
+        self.heads_divisible = heads_divisible and \
+            "model" in mesh.axis_names
+        self.seq_divisible = seq_divisible and "model" in mesh.axis_names
+        self.experts_divisible = experts_divisible and \
+            "model" in mesh.axis_names
+
+    def batch_spec(self):
+        return self.batch_axes if (self.batch_divisible
+                                   and self.batch_axes) else None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, batch_divisible: bool,
+                        logit_axis: Optional[str] = "model",
+                        heads_divisible: bool = False,
+                        seq_divisible: bool = False,
+                        experts_divisible: bool = False):
+    prev = _current()
+    _STATE.ctx = ActivationCtx(mesh, batch_divisible=batch_divisible,
+                               logit_axis=logit_axis,
+                               heads_divisible=heads_divisible,
+                               seq_divisible=seq_divisible,
+                               experts_divisible=experts_divisible)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def shard_act(x, *trailing):
+    """Constrain a (B, ...) activation: batch on (pod, data), trailing
+    dims per the given axis names (None = unsharded).  No-op without an
+    active context."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    spec = [ctx.batch_spec()] + list(trailing) \
+        + [None] * (x.ndim - 1 - len(trailing))
+    spec = [s if (s is None or isinstance(s, tuple)
+                  or s in ctx.mesh.axis_names) else None for s in spec]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_logits(x):
+    """(B, S, V) with V on the model axis."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh,
+                         P(ctx.batch_spec(), None, ctx.logit_axis)))
+
+
+def shard_seq(x):
+    """Sequence parallelism (Korthikanti et al.): pin a (B,S,D) layer-
+    boundary activation with S on the ``model`` axis.  Shrinks the
+    remat residual stack msz-fold and turns wgrad contractions into
+    partial sums; GSPMD inserts the gather before attention/MLP matmuls
+    and the scatter after.  Falls back to batch-only sharding when the
+    sequence doesn't divide."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    if not ctx.seq_divisible:
+        return shard_act(x)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(ctx.batch_spec(), "model",
+                                     *([None] * (x.ndim - 2)))))
+
+
+def shard_expert(x):
+    """Expert-parallel dispatch tensor (G, E, C, ...) — groups on the
+    data axes, experts on ``model``.  Pinning these prevents GSPMD's
+    'involuntary full rematerialization' fallback on the MoE
+    gather/scatter (measured: f32 expert activations were being
+    all-reduced — §Perf C2)."""
+    ctx = _current()
+    if ctx is None or not ctx.experts_divisible:
+        return x
+    spec = [ctx.batch_spec(), "model"] + [None] * (x.ndim - 2)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def gather_expert_weights(w):
+    """Pin (E, D, F) expert weights to experts-on-model ONLY — i.e.
+    explicitly all-gather the FSDP (data-sharded) D dim before the
+    expert einsums.  Without this GSPMD keeps D sharded and partial-
+    sums ACTIVATION-sized (G,E,C,F) tensors over data in the backward
+    (measured 740 GB/device of f32 all-reduce — §Perf C3); the weight
+    gather is ~75 MB/layer instead."""
+    ctx = _current()
+    if ctx is None or not ctx.experts_divisible:
+        return w
+    spec = ["model"] + [None] * (w.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_group(x):
+    """(G, T, ...) grouped-token tensor: groups on the data axes."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    spec = [ctx.batch_spec()] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_heads(x, head_axis_index: int = 2):
+    """Pin a (B, ..., H, ...) attention activation with the flat-head
+    dim on ``model`` (only when n_heads divides the axis — the caller
+    signals that via heads_divisible at context creation)."""
+    ctx = _current()
+    if ctx is None or not ctx.heads_divisible:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = ctx.batch_spec()
+    spec[head_axis_index] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_kv(x):
+    """K/V (B,S,H,dh) inside attention: heads on ``model`` when they
+    divide; otherwise SEQUENCE on ``model`` (flash-decoding-style
+    partial attention — the softmax reductions over the sharded S
+    become small (B,H,q) all-reduces, and the per-device logits shrink
+    msz-fold).  This is the §Perf B2 lever for heads-indivisible archs
+    (paligemma 8H, whisper 20H, phi4 24H over model=16)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    if ctx.heads_divisible:
+        return shard_heads(x)
+    if ctx.seq_divisible:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh,
+                             P(ctx.batch_spec(), "model", None, None)))
+    return x

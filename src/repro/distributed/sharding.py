@@ -1,0 +1,316 @@
+"""Sharding policy: ModelConfig × mesh -> PartitionSpec trees.
+
+Axes (DESIGN.md §6):
+  * ``data`` (and ``pod`` when multi-pod) shard the batch and — FSDP
+    style — the d_model dimension of the weights, so optimizer state
+    scales with the full chip count (ZeRO-3 analogue).
+  * ``model`` shards heads / FFN hidden / experts / vocab (Megatron).
+
+Head-sharding fallback chain (not every assigned arch has
+n_heads % 16 == 0 — phi4 has 24 heads, paligemma 8, whisper 20):
+  1. n_heads % model == 0      -> shard the head axis (Megatron);
+  2. head_dim % model == 0     -> shard head_dim (RoPE still lowers:
+     GSPMD inserts collective-permutes for the rotate-half);
+  3. otherwise                 -> replicate attention over ``model``
+     (FFN still sharded); recorded per-arch in EXPERIMENTS.md.
+
+KV caches: kv-head axis sharded on ``model`` when divisible, else the
+*sequence* axis of the cache is sharded on ``model`` (flash-decoding
+style partial-attention; GSPMD inserts the logsumexp-combine
+collectives).  Batch shards on (pod, data) when divisible, else
+replicates (long_500k's batch=1 — the hillclimb reclaims those chips
+via sequence parallelism).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _data_size(mesh: Mesh) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in ("pod", "data")]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolved per-(cfg, mesh) sharding decisions."""
+    mesh: Mesh
+    cfg: ModelConfig
+    attn_mode: str          # "heads" | "head_dim" | "replicated"
+    kv_cache_mode: str      # "kv_heads" | "sequence"
+    fsdp: bool              # shard d_model dim of weights over data
+
+    @property
+    def batch_axes(self):
+        return data_axes(self.mesh)
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh, *,
+                fsdp: bool = True,
+                attn_fallback: str = "replicated") -> ShardingPolicy:
+    """``attn_fallback`` for heads-indivisible archs (phi4: 24 heads,
+    paligemma: 8, whisper: 20 over model=16): "replicated" keeps
+    attention data-parallel only (weights replicated over ``model``) —
+    measured far better than "head_dim" (sharding the contraction dim
+    makes GSPMD replicate the batch and all-reduce full S^2 logits; see
+    EXPERIMENTS.md §Perf iteration 0)."""
+    m = _axis_size(mesh, "model")
+    if cfg.n_heads and cfg.n_heads % m == 0:
+        attn = "heads"
+    elif cfg.n_heads and cfg.dh % m == 0 and attn_fallback == "head_dim":
+        attn = "head_dim"
+    else:
+        attn = "replicated"
+    kv = "kv_heads" if (cfg.n_kv_heads and cfg.n_kv_heads % m == 0) \
+        else "sequence"
+    return ShardingPolicy(mesh=mesh, cfg=cfg, attn_mode=attn,
+                          kv_cache_mode=kv, fsdp=fsdp)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _dm(pol: ShardingPolicy):
+    """Axis for the d_model dim of weight matrices (FSDP over data)."""
+    if not pol.fsdp:
+        return None
+    d = pol.cfg.d_model
+    if d % _data_size(pol.mesh) == 0:
+        return pol.batch_axes
+    return None
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % _axis_size(mesh, axis) == 0
+
+
+def _attn_spec(pol: ShardingPolicy, lead) -> Dict[str, P]:
+    """wq (…,D,H,dh) wk/wv (…,D,KH,dh) wo (…,H,dh,D)."""
+    cfg, mesh = pol.cfg, pol.mesh
+    dm = _dm(pol)
+    if pol.attn_mode == "heads":
+        h_ax, dh_ax = "model", None
+        kv_h_ax = "model" if _div(cfg.n_kv_heads, mesh, "model") else None
+        kv_dh_ax = None
+    elif pol.attn_mode == "head_dim":
+        h_ax, dh_ax = None, "model"
+        kv_h_ax, kv_dh_ax = None, "model"
+    else:
+        h_ax = dh_ax = kv_h_ax = kv_dh_ax = None
+    spec = {
+        "wq": P(*lead, dm, h_ax, dh_ax),
+        "wk": P(*lead, dm, kv_h_ax, kv_dh_ax),
+        "wv": P(*lead, dm, kv_h_ax, kv_dh_ax),
+        "wo": P(*lead, h_ax, dh_ax, dm),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = P(*lead, None)
+        spec["k_norm"] = P(*lead, None)
+    return spec
+
+
+def _mlp_spec(pol: ShardingPolicy, lead, f: int) -> Dict[str, P]:
+    dm = _dm(pol)
+    f_ax = "model" if _div(f, pol.mesh, "model") else None
+    spec = {"wi": P(*lead, dm, f_ax), "wo": P(*lead, f_ax, dm)}
+    if pol.cfg.act in ("silu", "geglu"):
+        spec["wg"] = P(*lead, dm, f_ax)
+    return spec
+
+
+def _moe_spec(pol: ShardingPolicy, lead) -> Dict[str, Any]:
+    cfg = pol.cfg
+    e_ax = "model" if _div(cfg.n_experts, pol.mesh, "model") else None
+    dm = _dm(pol)
+    expert = {"wi": P(*lead, e_ax, dm, None),
+              "wo": P(*lead, e_ax, None, dm)}
+    if cfg.act in ("silu", "geglu"):
+        expert["wg"] = P(*lead, e_ax, dm, None)
+    spec = {"router": P(*lead, dm, None), "experts": expert}
+    if cfg.n_shared_experts:
+        spec["shared"] = _mlp_spec(pol, lead,
+                                   cfg.n_shared_experts * cfg.moe_d_ff)
+    return spec
+
+
+def _ssm_spec(pol: ShardingPolicy, lead) -> Dict[str, P]:
+    """Mamba2 block: shard the inner (head) dim on ``model``."""
+    cfg = pol.cfg
+    dm = _dm(pol)
+    # in_proj output dim mixes z|xBC|dt — shardable only if every section
+    # divides; the conservative choice is model-sharding the output dim
+    # when d_in_proj divides (it packs per-head blocks).
+    din = 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state \
+        + cfg.ssm_heads
+    i_ax = None           # packed projection: keep unsharded output dim
+    di_ax = "model" if _div(cfg.d_inner, pol.mesh, "model") else None
+    return {
+        "in_proj": P(*lead, dm, i_ax),
+        "conv_w": P(*lead, None, None),
+        "conv_b": P(*lead, None),
+        "dt_bias": P(*lead, None),
+        "A_log": P(*lead, None),
+        "D": P(*lead, None),
+        "norm": P(*lead, di_ax),
+        "out_proj": P(*lead, di_ax, dm),
+        "ln": P(*lead, None),
+    }
+
+
+def _vocab_spec(pol: ShardingPolicy) -> P:
+    return P("model", _dm(pol))
+
+
+def param_spec(cfg: ModelConfig, pol: ShardingPolicy,
+               params_tree: Any) -> Any:
+    """Build a PartitionSpec tree with the same structure as params."""
+    spec: Dict[str, Any] = {}
+    if "embed" in params_tree:
+        spec["embed"] = _vocab_spec(pol)
+    if "lm_head" in params_tree:
+        spec["lm_head"] = P(_dm(pol), "model")
+    if "final_norm" in params_tree:
+        spec["final_norm"] = P(None)
+    if "projector" in params_tree:
+        spec["projector"] = P(None, _dm(pol))
+    lead = (None,)   # stacked layer dim
+
+    def block_spec(block_tree, lead):
+        out = {}
+        for k in block_tree:
+            if k == "attn":
+                out[k] = _attn_spec(pol, lead)
+            elif k == "xattn":
+                out[k] = _attn_spec(pol, lead)
+            elif k == "mlp":
+                f = (cfg.first_layer_dense_ff
+                     if lead == (None,) and "moe" in block_tree
+                     else cfg.d_ff)
+                out[k] = _mlp_spec(pol, lead, f)
+            elif k == "moe":
+                out[k] = _moe_spec(pol, lead)
+            elif k in ("in_proj", "conv_w", "conv_b", "dt_bias", "A_log",
+                       "D", "norm", "out_proj", "ln"):
+                pass  # handled as a unit below
+            else:
+                out[k] = P(*([None] * 1), None) if False else None
+        return out
+
+    for top in ("blocks", "first_block", "shared", "encoder", "decoder"):
+        if top not in params_tree:
+            continue
+        sub = params_tree[top]
+        lead_t = () if top == "shared" else (None,)
+        if "in_proj" in sub:                      # mamba2 block stack
+            spec[top] = _ssm_spec(pol, lead_t)
+        else:
+            s: Dict[str, Any] = {}
+            for k, v in sub.items():
+                if k in ("attn", "xattn"):
+                    at = _attn_spec(pol, lead_t)
+                    # encdec attn carries biases
+                    for bk in ("bq", "bv", "bo"):
+                        if bk in v:
+                            at[bk] = (P(*lead_t, None, None) if bk != "bo"
+                                      else P(*lead_t, None))
+                    s[k] = at
+                elif k == "mlp":
+                    f = (cfg.first_layer_dense_ff
+                         if top == "first_block" else cfg.d_ff)
+                    ms = _mlp_spec(pol, lead_t, f)
+                    for bk in ("bi", "bo"):
+                        if bk in v:
+                            ms[bk] = P(*lead_t,
+                                       ms["wi"][-1] if bk == "bi" else None)
+                    s[k] = ms
+                elif k == "moe":
+                    s[k] = _moe_spec(pol, lead_t)
+                else:                             # norms / biases
+                    nd = jax.tree.leaves(v)[0].ndim if not hasattr(
+                        v, "ndim") else v.ndim
+                    s[k] = P(*([None] * nd))
+            spec[top] = s
+    for k in ("dec_pos", "enc_final_g", "enc_final_b", "final_g",
+              "final_b"):
+        if k in params_tree:
+            nd = params_tree[k].ndim
+            spec[k] = P(*([None] * nd))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# public API: NamedSharding trees
+# ---------------------------------------------------------------------------
+
+def param_sharding(cfg: ModelConfig, mesh: Mesh, params_tree: Any, *,
+                   fsdp: bool = True) -> Any:
+    pol = make_policy(cfg, mesh, fsdp=fsdp)
+    spec = param_spec(cfg, pol, params_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_sharding(cfg: ModelConfig, mesh: Mesh, batch_tree: Dict,
+                   global_batch: int) -> Dict:
+    """Shard the batch dim over (pod, data) when divisible."""
+    axes = data_axes(mesh)
+    dsz = _data_size(mesh)
+    b_ax = axes if (global_batch % dsz == 0 and dsz > 1) else ()
+    out = {}
+    for k, v in batch_tree.items():
+        nd = v.ndim
+        spec = [None] * nd
+        if nd >= 1:
+            spec[0] = b_ax if b_ax else None
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_sharding(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
+                   global_batch: int) -> Any:
+    """KV/SSD cache sharding.  Dense k/v: (L,B,KH,C,dh); ssm state:
+    (L,B,G,gh,P,N); conv: (L,B,K-1,Ci); hybrid attn_k: (apps,B,KH,C,dh);
+    cross_k: (L,B,KH,T,dh)."""
+    pol = make_policy(cfg, mesh)
+    axes = data_axes(mesh)
+    dsz = _data_size(mesh)
+    b_ax = axes if (global_batch % dsz == 0 and dsz > 1) else None
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            if pol.kv_cache_mode == "kv_heads":
+                return P(None, b_ax, "model", None, None)
+            # sequence sharding — only when the seq axis divides (the
+            # whisper cross-KV T=1500 does not; replicate it instead)
+            if leaf.shape[3] % _axis_size(mesh, "model") == 0:
+                return P(None, b_ax, None, "model", None)
+            return P(None, b_ax, None, None, None)
+        if name == "state":     # (L,B,G,gh,P,N): shard heads on model
+            gh = leaf.shape[3]
+            gh_ax = "model" if _div(gh, mesh, "model") else None
+            return P(None, b_ax, None, gh_ax, None, None)
+        if name == "conv":      # (L,B,K-1,Ci)
+            return P(None, b_ax, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree.map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf)),
+        cache_tree)

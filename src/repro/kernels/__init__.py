@@ -1,0 +1,19 @@
+"""Optimized Pallas TPU kernels — the CMSIS-NN/Cadence vendor-library
+analogue (paper §4.7–4.8).  Importing ``repro.kernels.ops`` registers the
+``tag="pallas"`` implementations with the op registry; ``ref.py`` holds
+the pure-jnp oracles every kernel is validated against.
+
+Kernels (each: <name>.py with pl.pallas_call + explicit BlockSpec VMEM
+tiling; validated with interpret=True on CPU, TPU is the target):
+
+  * quant_matmul     — int8 MXU matmul + requant (the TFLM hot spot)
+  * flash_attention  — causal/GQA/sliding-window prefill attention
+  * decode_attention — flash-decoding over long KV caches
+  * ssd_scan         — Mamba-2 state-space-duality chunked scan
+"""
+
+from .ops import (decode_attention, flash_attention, quant_matmul,
+                  ssd_scan)
+
+__all__ = ["decode_attention", "flash_attention", "quant_matmul",
+           "ssd_scan"]

@@ -1,0 +1,122 @@
+"""Decode attention Pallas kernel — one new token vs. a long KV cache.
+
+Flash-decoding adapted to TPU: the KV cache streams HBM→VMEM in (BK, D)
+tiles along a sequential grid axis; the single query row stays resident
+in VMEM for the whole pass; the online-softmax carry lives in VMEM
+scratch.  Variable sequence lengths and the sliding window are handled by
+masking against a per-batch ``lengths`` vector in SMEM — out-of-range and
+out-of-window tiles are skipped with ``pl.when`` so a 512k-entry cache at
+window 8k touches only ~window/BK tiles of compute.
+
+This kernel is the long-context serving hot spot (decode_32k, long_500k
+input shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BK = 128
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   n_k: int, bk: int, scale: float,
+                   window: Optional[int]):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[pl.program_id(0)]
+    k_start = ik * bk
+    needed = k_start < length
+    if window is not None:
+        needed = jnp.logical_and(needed, k_start + bk > length - window)
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)           # (H_blk, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                  # (H_blk, BK)
+        pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = pos < length
+        if window is not None:
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_ref[...][:, 0] * alpha + p.sum(axis=1))[:, None]
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...][:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "bk", "interpret"))
+def decode_attention_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                            *, window: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            bk: int = DEF_BK,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,D), caches (B,KH,S,D), lengths (B,) int32 -> (B,H,D).
+
+    All H query heads of one KV head are processed as one (group, D) tile
+    so the MXU matmul has a real M dimension even at batch decode.
+    """
+    b, h, d = q.shape
+    kh, s = k_cache.shape[1], k_cache.shape[2]
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    assert s % bk == 0, (s, bk)
+    n_k = s // bk
+    qg = q.reshape(b, kh, group, d)
+    grid = (b, kh, n_k)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, n_k=n_k, bk=bk, scale=scale,
+                          window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1, 1, group, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ik: (b_, h_, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ik: (b_, h_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

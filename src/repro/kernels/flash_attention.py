@@ -1,0 +1,135 @@
+"""Flash attention (prefill) Pallas kernel — causal, GQA, sliding window.
+
+TPU adaptation notes (DESIGN.md §2): the GPU flash-attention formulation
+(warp-level softmax reductions, shared-memory tiles) maps onto TPU as
+VMEM-resident (BQ, BK) score tiles produced by MXU block matmuls with the
+online-softmax carry (m, l, acc) held in VMEM scratch across the
+sequential K grid dimension.  Q/K/V tiles stream HBM→VMEM via BlockSpec;
+block sizes default to 128 (MXU-aligned).
+
+GQA is expressed in the BlockSpec index maps: the K/V block index divides
+the query-head index by the group size, so no repeated-KV materialization
+ever happens (the repeat in ref.py is the readable-reference trade-off).
+
+Causal/out-of-window key blocks are skipped with ``pl.when`` — the block
+is still fetched (BlockSpec prefetch is unconditional) but contributes no
+FLOPs; a production kernel would shrink the grid instead, which we do in
+the wrapper by clamping the K grid to the causal frontier when the whole
+row block is masked.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BQ, DEF_BK = 128, 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k: int, bq: int, bk: int, scale: float, causal: bool,
+                  window: Optional[int]):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    def _needed():
+        if not causal and window is None:
+            return True
+        need = True
+        if causal:
+            need = jnp.logical_and(need, k_start <= q_start + bq - 1)
+        if window is not None:
+            need = jnp.logical_and(need,
+                                   k_start + bk - 1 > q_start - window)
+        return need
+
+    @pl.when(_needed())
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                 # (BQ, BK)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]                     # (BQ,)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...][:, 0] * alpha + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...][:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           bq: int = DEF_BQ, bk: int = DEF_BK,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,S,D), k/v (B,KH,S,D) -> (B,H,S,D).  S % bq == S % bk == 0."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    n_k = s // bk
+    grid = (b, h, s // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, n_k=n_k, bq=bq, bk=bk,
+                          scale=scale, causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m
+            pltpu.VMEM((bq, 1), jnp.float32),    # l
+            pltpu.VMEM((bq, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

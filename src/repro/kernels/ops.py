@@ -1,0 +1,183 @@
+"""Public jit'd wrappers around the Pallas kernels + vendor-tag
+registration.
+
+This module is the "optimized kernel library" a hardware vendor ships
+(§4.7): importing it registers ``tag="pallas"`` implementations with the
+global op registry, so a resolver built with ``tags=("pallas",
+"reference")`` transparently swaps them in — the TAGS="cmsis-nn" build
+mechanism (§4.8), no interpreter changes.
+
+Wrappers own layout/padding so kernels stay MXU-aligned:
+  * quant_matmul pads (M, K, N) up to block multiples and precomputes the
+    per-column weight sums for zero-point correction,
+  * attention wrappers validate divisibility and choose block sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as Q
+from repro.core.op_resolver import PrepareResult, register_op
+from repro.core.schema import OpCode
+
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .quant_matmul import quant_matmul_pallas
+from .ssd_scan import ssd_scan_pallas
+
+INTERPRET = True      # CPU container: validate kernels in interpret mode
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_block(size: int, pref: int = 128) -> int:
+    if size % pref == 0:
+        return pref
+    for b in (64, 32, 16, 8):
+        if size % b == 0:
+            return b
+    return size
+
+
+# ---------------------------------------------------------------------------
+# quantized matmul
+# ---------------------------------------------------------------------------
+
+def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                 bias_q: Optional[jnp.ndarray], x_zp: int,
+                 scale: jnp.ndarray, out_zp: int,
+                 interpret: bool = INTERPRET) -> jnp.ndarray:
+    """int8 (M,K) @ (K,N) -> int8 (M,N); pads to MXU tiles internally."""
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm, bk, bn = _pick_block(max(m, 8)), _pick_block(k), _pick_block(n)
+    xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_q, 0, bk), 1, bn)
+    wsum = wp.astype(jnp.int32).sum(axis=0, keepdims=True)
+    bias = (bias_q if bias_q is not None
+            else jnp.zeros((n,), jnp.int32))
+    biasp = _pad_to(bias.reshape(1, n).astype(jnp.int32), 1, bn)
+    scalep = _pad_to(scale.reshape(1, n).astype(jnp.float32), 1, bn)
+    out = quant_matmul_pallas(xp, wp, biasp, wsum, scalep,
+                              x_zp=int(x_zp), out_zp=int(out_zp),
+                              bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    interpret: bool = INTERPRET):
+    s = q.shape[2]
+    bq = bk = _pick_block(s)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, bq=bq, bk=bk,
+                                  interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None,
+                     interpret: bool = INTERPRET):
+    s = k_cache.shape[2]
+    bk = _pick_block(s)
+    return decode_attention_pallas(q, k_cache, v_cache,
+                                   jnp.asarray(lengths, jnp.int32),
+                                   window=window, scale=scale, bk=bk,
+                                   interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B, C, D=None, *, chunk: Optional[int] = None,
+             interpret: bool = INTERPRET):
+    s = x.shape[1]
+    if chunk is None:
+        chunk = _pick_block(s)
+    return ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                           interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# vendor-tag registrations for the micro path (§4.8)
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.FULLY_CONNECTED, tag="pallas")
+class PallasFullyConnected:
+    """Optimized FC: int8 path runs on the quant_matmul Pallas kernel
+    (MXU int8), float falls back to an einsum (XLA already fuses it)."""
+
+    @staticmethod
+    def prepare(ctx, op):
+        from repro.core.micro_ops import FullyConnected
+        return FullyConnected.prepare(ctx, op)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        x, w = inputs[0], inputs[1]
+        bias = inputs[2] if len(inputs) > 2 and inputs[2] is not None \
+            else None
+        d = ctx.op_data
+        if x.dtype == jnp.int8:
+            rs: Q.RequantSpec = d["requant"]
+            lead = x.shape[:-1]
+            xm = x.reshape(-1, x.shape[-1])
+            nchan = w.shape[0]
+            real_scale = (rs.input_scale
+                          * _weight_scales(rs, nchan) / rs.output_scale)
+            out = quant_matmul(xm, w.T, bias, rs.input_zero_point,
+                               jnp.asarray(real_scale, jnp.float32),
+                               rs.output_zero_point)
+            out = jnp.clip(out.astype(jnp.int32), d["qmin"], d["qmax"]
+                           ).astype(jnp.int8)
+            return [out.reshape(*lead, nchan)]
+        acc = jnp.einsum("...k,nk->...n", x, w)
+        if bias is not None:
+            acc = acc + bias
+        from repro.core.micro_ops import _apply_activation_f32
+        return [_apply_activation_f32(acc, d["act"])]
+
+
+def _weight_scales(rs: Q.RequantSpec, nchan: int) -> np.ndarray:
+    """Recover per-channel weight scales from the requant spec: the spec
+    stores M0/shift per channel of s_in*s_w/s_out."""
+    real = (rs.multiplier.astype(np.float64) / (1 << 31)
+            * np.exp2(rs.shift.astype(np.float64)))
+    ws = real * rs.output_scale / rs.input_scale
+    if ws.shape[0] == 1 and nchan > 1:
+        ws = np.repeat(ws, nchan)
+    return ws.astype(np.float32)
+
+
+@register_op(OpCode.ATTENTION, tag="pallas")
+class PallasAttention:
+    @staticmethod
+    def prepare(ctx, op):
+        from repro.core.micro_ops import Attention
+        return Attention.prepare(ctx, op)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        q, k, v = inputs
+        return [flash_attention(q, k, v,
+                                causal=op.params.get("causal", True))]

@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the "reference kernels" in the paper's sense (§4.7: readable,
+portable, correctness-first).  Every Pallas kernel's test sweeps
+shapes/dtypes and asserts allclose against the function here.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# quantized matmul (the CMSIS-NN FC/conv-core analogue)
+# ---------------------------------------------------------------------------
+
+def quant_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                     bias_q: Optional[jnp.ndarray],
+                     x_zp: int, scale: jnp.ndarray,
+                     out_zp: int) -> jnp.ndarray:
+    """int8 (M,K) @ int8 (K,N) -> int8 (M,N).
+
+    acc = sum_k (x - x_zp) * w + bias;  out = clip(round(acc*scale)+zp).
+    ``scale`` is f32 per output channel (s_x*s_w[n]/s_out).
+    """
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.int32) - jnp.int32(x_zp), w_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if bias_q is not None:
+        acc = acc + bias_q.astype(jnp.int32)[None, :]
+    out = jnp.round(acc.astype(jnp.float32) * scale[None, :]) + out_zp
+    return jnp.clip(out, -128, 127).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill) — causal, GQA, optional sliding window
+# ---------------------------------------------------------------------------
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True,
+            window: Optional[int] = None,
+            scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, S, D); k, v: (B, KH, S, D) with H % KH == 0 (GQA).
+
+    window=W restricts key j to q position i: i - W < j <= i.
+    """
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention — one new token against a KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, D); caches: (B, KH, S, D); lengths: (B,) valid entries.
+
+    Returns (B, H, D).  With window=W only the last W valid positions
+    attend (sliding-window / sub-quadratic long-context decode).
+    """
+    b, h, d = q.shape
+    kh, s = k_cache.shape[1], k_cache.shape[2]
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kx = jnp.repeat(k_cache, group, axis=1)
+    vx = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", w,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) — sequential oracle
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray, D: Optional[jnp.ndarray],
+            h0: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective state-space recurrence (Mamba-2, arXiv:2405.21060).
+
+      h_t = exp(dt_t A_h) * h_{t-1} + dt_t * x_t ⊗ B_t
+      y_t = C_t · h_t (+ D_h x_t)
+
+    Shapes: x (B,S,H,P); dt (B,S,H); A (H,) negative reals;
+            B, C (B,S,G,N) with H % G == 0; D (H,) or None;
+            h0 (B,H,P,N) or None.
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    group = h // g
+    Bh = jnp.repeat(B, group, axis=2)            # (B,S,H,N)
+    Ch = jnp.repeat(C, group, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P),(B,H),(B,H,N)x2
+        decay = jnp.exp(dtt * A[None, :])         # (B,H)
+        upd = (dtt[..., None, None] * xt[..., :, None]
+               * bt[..., None, :])                # (B,H,P,N)
+        hstate = hstate * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", hstate, ct)
+        return hstate, yt
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    inputs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+              Bh.astype(jnp.float32).transpose(1, 0, 2, 3),
+              Ch.astype(jnp.float32).transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), inputs)
+    y = ys.transpose(1, 0, 2, 3)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), hT

@@ -1,0 +1,133 @@
+"""Mamba-2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The paper's GPU kernel (Dao & Gu, arXiv:2405.21060) splits the sequence
+into chunks: inside a chunk the recurrence is computed in its *dual*
+quadratic-attention form (three MXU matmuls over an (L, L) decay-masked
+score tile), and between chunks only the (P, N) state is carried.
+
+TPU adaptation: the chunk axis is the innermost sequential grid
+dimension; the carried state lives in VMEM scratch (grid steps on a TPU
+core run in order, so scratch persists across chunk iterations — the
+TPU-native substitute for the GPU kernel's cross-block shared-memory
+pipeline).  Chunk tiles (L×P, L×N) stream HBM→VMEM via BlockSpec; L and
+N default to 128 to keep the three matmuls MXU-shaped.  No collectives:
+sequence stays on-chip, which is why SSM archs shard heads, not sequence
+(DESIGN.md §6).
+
+Recurrence (per batch b, head h):
+    h_t = exp(dt_t·A_h)·h_{t-1} + dt_t·x_t ⊗ B_t        (state: (P, N))
+    y_t = C_t·h_t + D_h·x_t
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_CHUNK = 128
+NEG_INF = -1e30
+
+
+def _ssd_kernel(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref,
+                y_ref, state_out_ref, state_ref, *,
+                n_chunks: int, chunk: int, has_d: bool):
+    h_idx = pl.program_id(1)
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a_h = a_ref[h_idx]                                   # scalar
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (L,)
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)           # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)           # (L, N)
+
+    a = dt * a_h                                         # (L,) ≤ 0
+    cum = jnp.cumsum(a)                                  # (L,)
+    # --- intra-chunk (quadratic dual form) ---
+    g = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    i_pos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    expo = cum[:, None] - cum[None, :]
+    expo = jnp.where(j_pos <= i_pos, expo, NEG_INF)
+    m = g * jnp.exp(expo)                                # decay-masked
+    xdt = x * dt[:, None]                                # (L, P)
+    y = jax.lax.dot_general(m, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # --- inter-chunk: contribution of the carried state ---
+    s0 = state_ref[...]                                  # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, s0, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (L, P)
+    if has_d:
+        y += d_ref[h_idx] * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # --- state update ---
+    total = cum[chunk - 1]
+    w = dt * jnp.exp(total - cum)                        # (L,)
+    state_ref[...] = (jnp.exp(total) * s0
+                      + jax.lax.dot_general(
+                          x * w[:, None], bm, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    B: jnp.ndarray, C: jnp.ndarray,
+                    D: Optional[jnp.ndarray] = None, *,
+                    chunk: int = DEF_CHUNK,
+                    interpret: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P); dt (B,S,H); A (H,); B,C (B,S,G,N); D (H,)|None.
+
+    Returns y (B,S,H,P) and final state (B,H,P,N).  S % chunk == 0.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    group = h // g
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    has_d = D is not None
+    d_arg = D if has_d else jnp.zeros((h,), jnp.float32)
+    grid = (b, h, n_chunks)
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk,
+                          has_d=has_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),   # A
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),   # D
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ic: (b_, ic, h_, 0)),    # x
+            pl.BlockSpec((1, chunk, 1),
+                         lambda b_, h_, ic: (b_, ic, h_)),       # dt
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, h_, ic: (b_, ic, h_ // group, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, h_, ic: (b_, ic, h_ // group, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ic: (b_, ic, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), d_arg.astype(jnp.float32), x, dt, B, C)
+    return y, state

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, input shapes, dry-run, drivers."""

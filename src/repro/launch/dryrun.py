@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination, lower and
+compile the real step function (train_step / prefill_step / serve_step)
+under pjit on the production mesh, then record:
+
+  * memory_analysis()      — bytes per device (proves it fits),
+  * cost_analysis()        — per-device HLO FLOPs / bytes accessed,
+  * collective bytes       — parsed from the post-SPMD HLO text
+                             (all-gather / all-reduce / reduce-scatter /
+                              all-to-all / collective-permute),
+  * the derived roofline terms (§Roofline).
+
+Results are written as JSON to benchmarks/results/dryrun/ so the
+roofline report and EXPERIMENTS.md are regenerable without recompiling.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k \
+      [--multi-pod] [--all] [--fsdp/--no-fsdp] [--out DIR]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import (batch_sharding, cache_sharding,
+                                        param_sharding)
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.shapes import SHAPES, cache_len_for, input_specs
+from repro.models import get_model
+from repro.training.optimizer import adamw_init
+from repro.training.trainer import (TrainState, make_train_step,
+                                    train_state_sharding)
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-collective-kind result bytes (per device, post-SPMD)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(-start|-done)?\(", ls)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue          # avoid double count of async pairs
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return out, counts
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def _abstract_params(bundle):
+    return jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+
+
+def build_step(bundle, shape, mesh, *, fsdp: bool = True,
+               grad_accum: int = 1):
+    """Returns (fn, abstract_args, in_shardings)."""
+    from repro.distributed.act_sharding import activation_sharding
+    cfg = bundle.cfg
+    params_sds = _abstract_params(bundle)
+    p_shard = param_sharding(cfg, mesh, params_sds, fsdp=fsdp)
+    specs = input_specs(bundle, shape)
+    dsz = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                       if a in mesh.axis_names]))
+    bdiv = shape.global_batch % dsz == 0
+
+    msz = mesh.shape.get("model", 1)
+    hdiv = bool(cfg.n_heads) and cfg.n_heads % msz == 0
+    sdiv = shape.mode in ("train", "prefill") \
+        and shape.seq_len % msz == 0
+    ediv = bool(cfg.n_experts) and cfg.n_experts % msz == 0
+
+    def with_ctx(fn):
+        def wrapped(*a, **kw):
+            with activation_sharding(mesh, batch_divisible=bdiv,
+                                     heads_divisible=hdiv,
+                                     seq_divisible=sdiv,
+                                     experts_divisible=ediv):
+                return fn(*a, **kw)
+        return wrapped
+
+    if shape.mode == "train":
+        step = with_ctx(make_train_step(bundle.loss, lr=1e-4, remat=True,
+                                        grad_accum=grad_accum,
+                                        data_shards=dsz))
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        state_sds = TrainState(params=params_sds, opt=opt_sds)
+        state_shard = train_state_sharding(p_shard, mesh)
+        b_shard = batch_sharding(cfg, mesh, specs["batch"],
+                                 shape.global_batch)
+        return step, (state_sds, specs["batch"]), (state_shard, b_shard)
+
+    if shape.mode == "prefill":
+        cl = cache_len_for(cfg, shape)
+
+        def prefill_step(params, batch):
+            return bundle.prefill(params, batch, cache_len=cl,
+                                  window=cfg.sliding_window,
+                                  data_shards=dsz)
+
+        b_shard = batch_sharding(cfg, mesh, specs["batch"],
+                                 shape.global_batch)
+        return with_ctx(prefill_step), (params_sds, specs["batch"]), \
+            (p_shard, b_shard)
+
+    # decode
+    def serve_step(params, cache, tokens, lengths):
+        return bundle.decode(params, cache, tokens, lengths,
+                             window=cfg.sliding_window, data_shards=dsz)
+
+    c_shard = cache_sharding(cfg, mesh, specs["cache"],
+                             shape.global_batch)
+    tl_shard = batch_sharding(cfg, mesh,
+                              {"tokens": specs["tokens"],
+                               "lengths": specs["lengths"]},
+                              shape.global_batch)
+    args = (params_sds, specs["cache"], specs["tokens"], specs["lengths"])
+    shards = (p_shard, c_shard, tl_shard["tokens"], tl_shard["lengths"])
+    return with_ctx(serve_step), args, shards
+
+
+# ---------------------------------------------------------------------------
+# one dry-run
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            fsdp: bool = True, grad_accum: int = 1,
+            verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    bundle = get_model(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    fn, args, shards = build_step(bundle, shape, mesh, fsdp=fsdp,
+                                  grad_accum=grad_accum)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shards).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    # loop-aware static analysis (XLA's cost_analysis counts a scan body
+    # once — see hlo_analysis.py; raw numbers kept for comparison)
+    from repro.launch.hlo_analysis import analyze
+    hc = analyze(hlo)
+    coll = hc.collective_bytes
+    coll_counts = hc.collective_counts
+    flops_dev = float(hc.flops)
+    bytes_dev = float(hc.bytes_accessed)
+    coll_dev = float(hc.total_collective_bytes)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS_BF16,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N·D for train; 2·N·D for a forward pass (prefill);
+    # 2·N_active per generated token for decode
+    n_params = cfg.n_params()
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    mult = 6 if shape.mode == "train" else 2
+    model_flops = mult * n_active * tokens
+    model_flops_dev = model_flops / n_chips
+    useful = model_flops_dev / flops_dev if flops_dev else 0.0
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode, "n_chips": n_chips, "fsdp": fsdp,
+        "grad_accum": grad_accum,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "xla_raw_flops": float(cost.get("flops", 0.0)),
+                 "xla_raw_bytes": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {"bytes": coll, "counts": coll_counts,
+                        "total_bytes_per_device": coll_dev},
+        "roofline": dict(terms, dominant=dominant,
+                         model_flops=model_flops,
+                         model_flops_per_device=model_flops_dev,
+                         useful_flops_fraction=useful),
+    }
+    if verbose:
+        print(json.dumps(result, indent=1))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh")
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape (or --all)")
+        combos = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        if not args.fsdp:
+            tag += "__nofsdp"
+        if args.grad_accum > 1:
+            tag += f"__ga{args.grad_accum}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            res = run_one(arch, shape, args.multi_pod, fsdp=args.fsdp,
+                          grad_accum=args.grad_accum)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"[ok] {tag}: compile={res['compile_s']}s "
+                  f"dominant={res['roofline']['dominant']}")
+        except Exception as e:                          # noqa: BLE001
+            failures.append((tag, repr(e)))
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+            print(f"[FAIL] {tag}: {e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

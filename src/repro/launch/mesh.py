@@ -1,0 +1,30 @@
+"""Production mesh construction (MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Callers that need the 512-placeholder-device
+mesh must set XLA_FLAGS before jax initializes (see dryrun.py lines
+1–2).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16x16 = 256 chips per pod; 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh with the production axis names, for smoke
+    tests and examples on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline model
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

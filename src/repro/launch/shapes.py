@@ -1,0 +1,74 @@
+"""Assigned input shapes + per-(arch, shape) dry-run specs.
+
+  train_4k       seq_len=  4,096  global_batch= 256  (training)
+  prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
+  long_500k      seq_len=524,288  global_batch=   1  (long-context-decode)
+
+Decode shapes lower ``serve_step`` (one new token against a cache of
+seq_len), not ``train_step``.  long_500k needs sub-quadratic attention:
+SSM/hybrid run natively (O(1) state); every attention arch here carries
+a sliding-window decode variant (window=8192 ring cache), so all 10
+archs lower long_500k — the window is the cache length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelBundle
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                   # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Decode-cache capacity: full context for decode_32k; the sliding
+    window for attention archs at long_500k (ring buffer)."""
+    if shape.name == "long_500k" and cfg.sliding_window:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def _cache_shapes(bundle: ModelBundle, batch: int, cache_len: int) -> Any:
+    """ShapeDtypeStruct tree for the cache — eval_shape, no allocation."""
+    return jax.eval_shape(
+        lambda: bundle.empty_cache(batch, cache_len,
+                                   bundle.cfg.jnp_dtype()))
+
+
+def input_specs(bundle: ModelBundle, shape: InputShape) -> Dict[str, Any]:
+    """All abstract inputs for one (arch, shape) dry-run.
+
+    train  -> {batch}
+    prefill-> {batch}
+    decode -> {cache, tokens, lengths}
+    """
+    cfg = bundle.cfg
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        return {"batch": bundle.batch_shapes(shape.mode, b, s)}
+    cl = cache_len_for(cfg, shape)
+    toks = bundle.batch_shapes("decode", b, s)
+    return {"cache": _cache_shapes(bundle, b, cl),
+            "tokens": toks["tokens"], "lengths": toks["lengths"]}

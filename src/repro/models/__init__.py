@@ -1,0 +1,6 @@
+"""Pod-path model definitions for the ten assigned architectures."""
+
+from .common import ModelConfig
+from .registry import ModelBundle, get_model
+
+__all__ = ["ModelConfig", "ModelBundle", "get_model"]

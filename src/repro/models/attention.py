@@ -1,0 +1,184 @@
+"""GQA attention (RoPE, qk_norm, sliding window, prefix-LM) — reference
+jnp implementation.
+
+This is the GSPMD-friendly path used by pjit lowering (the partitioner
+freely shards heads / head_dim / sequence).  The Pallas flash/decode
+kernels in repro.kernels are the TPU-optimized equivalents, selected via
+the same vendor-tag mechanism the micro path uses; models take a
+``backend`` flag ("reference" | "pallas").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rms_norm, \
+    rope_cos_sin, split_keys
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kh, dh), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kh, dh), dtype=dtype),
+        "wo": dense_init(ks[3], (h, dh, d), scale=1.0 / math.sqrt(h * dh),
+                         dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray):
+    """x (B,S,D) -> q (B,S,H,dh), k/v (B,S,KH,dh), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_base:
+        cos, sin = rope_cos_sin(positions, cfg.dh, cfg.rope_base)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      *, prefix_len: int = 0,
+                      window: Optional[int] = None,
+                      cross_kv: Optional[Tuple] = None,
+                      backend: str = "reference") -> jnp.ndarray:
+    """Full-sequence attention.  prefix_len>0 gives PaliGemma prefix-LM
+    masking (bidirectional over the first prefix_len positions).
+    cross_kv=(k,v) switches to cross-attention (no causal mask, no rope
+    on loaded kv)."""
+    b, s, d = x.shape
+    group = cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.arange(s)
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k, v = cross_kv
+        mask = None
+    else:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+        qi = positions[:, None]
+        kj = positions[None, :]
+        mask = kj <= qi
+        if prefix_len:
+            mask = mask | (kj < prefix_len)
+        if window is not None:
+            mask = mask & (kj > qi - window)
+    if backend == "pallas" and cross_kv is None:
+        from repro.kernels import flash_attention
+
+        assert not prefix_len, "pallas prefill path is pure-causal"
+        out = flash_attention(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3),
+                              causal=True, window=window)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        kx = jnp.repeat(k, group, axis=2) if group > 1 else k
+        vx = jnp.repeat(v, group, axis=2) if group > 1 else v
+        scale = 1.0 / math.sqrt(cfg.dh)
+        logits = jnp.einsum("bqhk,bshk->bhqs", q, kx).astype(jnp.float32)
+        logits = logits * scale
+        if mask is not None:
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", w, vx)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+
+
+def prefill_kv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+               cache_len: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute K/V for the whole prompt and place them in a fresh cache
+    of length cache_len (the serving engine pads/rings)."""
+    b, s, _ = x.shape
+    _, k, v = _project_qkv(p, cfg, x, jnp.arange(s))
+    kc = jnp.zeros((b, cfg.n_kv_heads, cache_len, cfg.dh), x.dtype)
+    vc = jnp.zeros((b, cfg.n_kv_heads, cache_len, cfg.dh), x.dtype)
+    take = min(s, cache_len)
+    kc = jax.lax.dynamic_update_slice(
+        kc, k[:, s - take:].transpose(0, 2, 1, 3), (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(
+        vc, v[:, s - take:].transpose(0, 2, 1, 3), (0, 0, 0, 0))
+    return kc, vc
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                     cache: Dict[str, jnp.ndarray],
+                     lengths: jnp.ndarray,
+                     *, window: Optional[int] = None,
+                     cross_kv: Optional[Tuple] = None,
+                     cross_len: Optional[int] = None,
+                     backend: str = "reference"
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode.  x (B,1,D); cache {k,v}: (B,KH,C,dh) where C is
+    either the full context or the sliding window (ring buffer).
+
+    ``lengths`` (B,) = tokens generated so far (absolute position of the
+    new token).  Returns (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    group = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / math.sqrt(cfg.dh)
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        kx, vx = cross_kv                       # (B,KH,T,dh)
+        kx = jnp.repeat(kx, group, axis=1) if group > 1 else kx
+        vx = jnp.repeat(vx, group, axis=1) if group > 1 else vx
+        logits = jnp.einsum("bhk,bhsk->bhs", q, kx).astype(jnp.float32)
+        logits = logits * scale
+        if cross_len is not None:
+            pos = jnp.arange(kx.shape[2])[None, None, :]
+            logits = jnp.where(pos < cross_len, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhs,bhsk->bhk", w, vx)
+        return (jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None],
+                cache)
+
+    q, k, v = _project_qkv(p, cfg, x, lengths[:, None])
+    q = q[:, 0]                                  # (B,H,dh)
+    knew = k[:, 0]                               # (B,KH,dh)
+    vnew = v[:, 0]
+    c = cache["k"].shape[2]
+    slot = (lengths % c).astype(jnp.int32)       # ring position
+    onehot = jax.nn.one_hot(slot, c, dtype=x.dtype)      # (B,C)
+    kc = cache["k"] * (1 - onehot)[:, None, :, None] \
+        + knew[:, :, None, :] * onehot[:, None, :, None]
+    vc = cache["v"] * (1 - onehot)[:, None, :, None] \
+        + vnew[:, :, None, :] * onehot[:, None, :, None]
+    n_valid = jnp.minimum(lengths + 1, c)        # entries present
+    if backend == "pallas":
+        from repro.kernels import decode_attention
+
+        out = decode_attention(q, kc, vc, n_valid,
+                               window=window)    # (B,H,dh)
+    else:
+        kx = jnp.repeat(kc, group, axis=1) if group > 1 else kc
+        vx = jnp.repeat(vc, group, axis=1) if group > 1 else vc
+        logits = jnp.einsum("bhk,bhsk->bhs", q, kx).astype(jnp.float32)
+        logits = logits * scale
+        pos = jnp.arange(c)[None, None, :]
+        valid = pos < n_valid[:, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhs,bhsk->bhk", w, vx)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return y, {"k": kc, "v": vc}

@@ -1,0 +1,245 @@
+"""Zamba2 hybrid family [arXiv:2411.15242]: a Mamba2 backbone with ONE
+weight-tied shared attention+MLP block applied every
+``shared_attn_every`` layers.
+
+The Zamba trick: the shared block's parameters are used at every
+application point but exist once — param memory stays SSM-sized while
+the model gains periodic global attention.  Each *application* still
+needs its own KV cache (activations differ per depth), so the decode
+cache carries (n_apps, B, KH, C, dh).
+
+Layer schedule for n_layers=38, every=6:
+  [6 mamba] attn [6 mamba] attn ... (6 groups of 6) ... [2 mamba tail]
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, cross_entropy_loss, rms_norm, split_keys, \
+    dense_init
+from .lm import (_init_attn_block, _init_mlp, attention_block,
+                 decode_attention_block, embed_tokens, lm_logits,
+                 mlp_block, padded_vocab)
+from .ssm import (init_ssm_block, mamba_block, mamba_decode_block,
+                  ssm_empty_cache)
+
+Params = Dict[str, Any]
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _group_split(cfg: ModelConfig):
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    tail = cfg.n_layers - n_groups * every
+    return n_groups, every, tail
+
+
+def init_hybrid_lm(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jnp_dtype()
+    vp = padded_vocab(cfg)
+    ks = split_keys(key, 6)
+    shared = {
+        "ln1": jnp.ones((1, cfg.d_model), dtype),
+        "ln2": jnp.ones((1, cfg.d_model), dtype),
+        "attn": _init_attn_block(ks[2], cfg, dtype, 1),
+        "mlp": _init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype,
+                         lead=(1,)),
+    }
+    params: Params = {
+        "embed": dense_init(ks[0], (vp, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "blocks": init_ssm_block(ks[1], cfg, dtype, cfg.n_layers),
+        "shared": jax.tree.map(lambda a: a[0], shared),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[4], (cfg.d_model, vp),
+                                       scale=0.02, dtype=dtype)
+    return params
+
+
+def _shared_attn_fwd(shared: Params, cfg: ModelConfig, x, *,
+                     window: Optional[int] = None):
+    h = x + attention_block(shared["attn"], cfg,
+                            rms_norm(x, shared["ln1"], cfg.norm_eps),
+                            window=window)
+    return h + mlp_block(shared["mlp"], cfg,
+                         rms_norm(h, shared["ln2"], cfg.norm_eps))
+
+
+def hybrid_backbone(params, cfg: ModelConfig, x, *, remat: bool = False,
+                    window: Optional[int] = None):
+    """Scan groups of ``every`` mamba layers; shared attn at boundaries."""
+    n_groups, every, tail = _group_split(cfg)
+    head = jax.tree.map(
+        lambda a: a[:n_groups * every].reshape(n_groups, every, *a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[n_groups * every:], params["blocks"])
+
+    def mamba_stack(h, stacked):
+        def inner(hh, p_l):
+            return mamba_block(p_l, cfg, hh), None
+        inner_fn = jax.checkpoint(inner) if remat else inner
+        h, _ = jax.lax.scan(inner_fn, h, stacked)
+        return h
+
+    def group(h, p_group):
+        h = mamba_stack(h, p_group)
+        h = _shared_attn_fwd(params["shared"], cfg, h, window=window)
+        return h, None
+
+    x, _ = jax.lax.scan(group, x, head)
+    if tail:
+        x = mamba_stack(x, tail_p)
+    return x
+
+
+def hybrid_loss(params, cfg: ModelConfig, batch, *, remat: bool = True,
+                data_shards: int = 16):
+    x = embed_tokens(params, cfg, batch["tokens"])
+    h = hybrid_backbone(params, cfg, x, remat=remat)
+    logits = lm_logits(params, cfg, h)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    labels = jnp.maximum(batch["labels"], 0)
+    loss = cross_entropy_loss(logits, labels, mask)
+    return loss, {"ce_loss": loss}
+
+
+def hybrid_empty_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                       dtype) -> Dict:
+    cache = ssm_empty_cache(cfg, batch, dtype)
+    apps = n_shared_apps(cfg)
+    cache["attn_k"] = jnp.zeros(
+        (apps, batch, cfg.n_kv_heads, cache_len, cfg.dh), dtype)
+    cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+    return cache
+
+
+def hybrid_prefill(params, cfg: ModelConfig, tokens,
+                   cache_len: Optional[int] = None, *,
+                   window: Optional[int] = None, **_):
+    """Prefill via teacher-forced decode-free pass capturing SSD state,
+    conv tails and shared-block KV at each application point."""
+    from .lm import _proj_qkv, chunked_attention
+    from .ssm import ssm_prefill as _unused  # noqa: F401
+    b, s = tokens.shape
+    c = cache_len or s
+    n_groups, every, tail = _group_split(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    head = jax.tree.map(
+        lambda a: a[:n_groups * every].reshape(n_groups, every,
+                                               *a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[n_groups * every:], params["blocks"])
+
+    def mamba_capture(h, p_l):
+        # reuse ssm_prefill body logic via mamba_block + state capture
+        from .ssm import (_causal_conv, _split_proj, ssd_chunked)
+        bb, ss, _ = h.shape
+        k = cfg.ssm_conv
+        xin = rms_norm(h, p_l["ln"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("bsd,de->bse", xin, p_l["in_proj"])
+        z, xBC, dt = _split_proj(cfg, zxbcdt)
+        conv_tail = jnp.pad(xBC, ((0, 0), (max(k - 1 - ss, 0), 0),
+                                  (0, 0)))[:, -(k - 1):]
+        xBC = _causal_conv(xBC, p_l["conv_w"], p_l["conv_b"])
+        di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+        hh, ph = cfg.ssm_heads, cfg.ssm_head_dim
+        xs = xBC[..., :di].reshape(bb, ss, hh, ph)
+        Bm = xBC[..., di:di + g * n].reshape(bb, ss, g, n)
+        Cm = xBC[..., di + g * n:].reshape(bb, ss, g, n)
+        dtf = jax.nn.softplus(dt.astype(jnp.float32) + p_l["dt_bias"])
+        A = -jnp.exp(p_l["A_log"])
+        y, state = ssd_chunked(xs, dtf, A, Bm, Cm)
+        y = y + xs * p_l["D"][None, None, :, None].astype(y.dtype)
+        y = y.reshape(bb, ss, di)
+        y = rms_norm(y * jax.nn.silu(z), p_l["norm"], cfg.norm_eps)
+        return h + jnp.einsum("bse,ed->bsd", y, p_l["out_proj"]), \
+            (conv_tail, state)
+
+    def to_cache(kk):
+        kc = jnp.zeros((b, cfg.n_kv_heads, c, cfg.dh), kk.dtype)
+        take = min(s, c)
+        src = kk[:, s - take:].transpose(0, 2, 1, 3)
+        if c >= s:
+            return jax.lax.dynamic_update_slice(kc, src, (0, 0, 0, 0))
+        pos = (jnp.arange(s - take, s) % c)
+        return kc.at[:, :, pos].set(src)
+
+    def group(h, p_group):
+        h, caps = jax.lax.scan(mamba_capture, h, p_group)
+        sh = params["shared"]
+        xin = rms_norm(h, sh["ln1"], cfg.norm_eps)
+        q, kk, vv = _proj_qkv(sh["attn"], cfg, xin, jnp.arange(s))
+        att = chunked_attention(q, kk, vv, cfg, window=window)
+        h2 = h + jnp.einsum("bqhk,hkd->bqd", att, sh["attn"]["wo"])
+        h2 = h2 + mlp_block(sh["mlp"], cfg,
+                            rms_norm(h2, sh["ln2"], cfg.norm_eps))
+        return h2, (caps, to_cache(kk), to_cache(vv))
+
+    x, (caps, ks_, vs_) = jax.lax.scan(group, x, head)
+    convs = caps[0].reshape(-1, *caps[0].shape[2:])
+    states = caps[1].reshape(-1, *caps[1].shape[2:])
+    if tail:
+        x, (ct, st) = jax.lax.scan(mamba_capture, x, tail_p)
+        convs = jnp.concatenate([convs, ct])
+        states = jnp.concatenate([states, st])
+    logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, {"conv": convs, "state": states,
+                    "attn_k": ks_, "attn_v": vs_}
+
+
+def hybrid_decode(params, cfg: ModelConfig, cache, tokens, lengths, *,
+                  window: Optional[int] = None, **_):
+    n_groups, every, tail = _group_split(cfg)
+    x = embed_tokens(params, cfg, tokens)
+
+    def mamba_step(h, layer_in):
+        p_l, conv, state = layer_in
+        h, conv, state = mamba_decode_block(p_l, cfg, h, conv, state)
+        return h, (conv, state)
+
+    head_n = n_groups * every
+    head = jax.tree.map(
+        lambda a: a[:head_n].reshape(n_groups, every, *a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[head_n:], params["blocks"])
+    conv_h = cache["conv"][:head_n].reshape(
+        n_groups, every, *cache["conv"].shape[1:])
+    state_h = cache["state"][:head_n].reshape(
+        n_groups, every, *cache["state"].shape[1:])
+    sh = params["shared"]
+
+    def group(h, gin):
+        p_group, conv_g, state_g, ck, cv = gin
+        h, (conv_g, state_g) = jax.lax.scan(mamba_step, h,
+                                            (p_group, conv_g, state_g))
+        xin = rms_norm(h, sh["ln1"], cfg.norm_eps)
+        att, ck, cv = decode_attention_block(sh["attn"], cfg, xin, ck, cv,
+                                             lengths)
+        h2 = h + att
+        h2 = h2 + mlp_block(sh["mlp"], cfg,
+                            rms_norm(h2, sh["ln2"], cfg.norm_eps))
+        return h2, (conv_g, state_g, ck, cv)
+
+    x, (conv_g, state_g, ks_, vs_) = jax.lax.scan(
+        group, x, (head, conv_h, state_h, cache["attn_k"],
+                   cache["attn_v"]))
+    convs = conv_g.reshape(-1, *conv_g.shape[2:])
+    states = state_g.reshape(-1, *state_g.shape[2:])
+    if tail:
+        x, (ct, st) = jax.lax.scan(
+            mamba_step, x, (tail_p, cache["conv"][head_n:],
+                            cache["state"][head_n:]))
+        convs = jnp.concatenate([convs, ct])
+        states = jnp.concatenate([states, st])
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, {"conv": convs, "state": states,
+                    "attn_k": ks_, "attn_v": vs_}

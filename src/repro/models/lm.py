@@ -1,0 +1,568 @@
+"""Decoder-only LM family (dense GQA + MoE) — the pod-path model.
+
+Covers phi4-mini, phi3-mini, qwen3-32b, yi-6b (dense) and
+deepseek-moe-16b, qwen3-moe-30b-a3b (MoE).  PaliGemma reuses these blocks
+through models/vlm.py (prefix-LM masking), Whisper through
+models/encdec.py (cross-attention), Zamba2 through models/hybrid.py
+(shared attention block).
+
+Design notes (TPU-native, see DESIGN.md §6):
+  * layers are **scan-stacked**: every per-layer parameter carries a
+    leading ``L`` dim and the forward pass is one ``lax.scan`` — keeps
+    HLO size O(1) in depth so 64-layer dry-runs lower fast.
+  * attention is **query-chunked** (flash-attention structure in pure
+    jnp): causal logits are never materialized beyond
+    (B, H, chunk, S) — prefill_32k and train_4k stay within VMEM-scale
+    transients instead of the O(S²) mask path.
+  * GQA uses grouped einsums (no ``jnp.repeat`` of K/V to H heads).
+  * MoE uses per-group capacity dispatch (Switch-style): tokens are
+    grouped by data shard, top-k routed, gathered to (G, E, C, D) and
+    expert-matmul'd with experts sharded on the ``model`` axis — the
+    (data → model) reshard of the dispatch tensor is the all-to-all.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import (gather_expert_weights,
+                                            shard_act, shard_expert,
+                                            shard_group, shard_heads,
+                                            shard_kv, shard_logits,
+                                            shard_seq)
+
+from .common import (ModelConfig, apply_rope, cross_entropy_loss,
+                     dense_init, rms_norm, rope_cos_sin, split_keys)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# vocab padding (model-axis shardability: pad to a multiple of 2048 =
+# 16 shards x 128 lanes)
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD = 2048
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, dtype, n_layers: int):
+    """Stacked attention params: leading dim = n_layers."""
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    ks = split_keys(key, 4)
+    L = n_layers
+    p = {
+        "wq": dense_init(ks[0], (L, d, h, dh), dtype=dtype),
+        "wk": dense_init(ks[1], (L, d, kh, dh), dtype=dtype),
+        "wv": dense_init(ks[2], (L, d, kh, dh), dtype=dtype),
+        "wo": dense_init(ks[3], (L, h, dh, d),
+                         scale=1.0 / math.sqrt(h * dh), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((L, dh), dtype)
+        p["k_norm"] = jnp.ones((L, dh), dtype)
+    return p
+
+
+GATED_ACTS = ("silu", "geglu")
+
+
+def _gate(act: str, g):
+    return jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+
+
+def _init_mlp(key, d: int, f: int, act: str, dtype, lead=()):
+    ks = split_keys(key, 3)
+    p = {"wi": dense_init(ks[0], (*lead, d, f), dtype=dtype),
+         "wo": dense_init(ks[1], (*lead, f, d),
+                          scale=1.0 / math.sqrt(f), dtype=dtype)}
+    if act in GATED_ACTS:
+        p["wg"] = dense_init(ks[2], (*lead, d, f), dtype=dtype)
+    return p
+
+
+def _init_moe(key, cfg: ModelConfig, dtype, n_layers: int):
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = split_keys(key, 3)
+    L = n_layers
+    p = {
+        "router": dense_init(ks[0], (L, d, e), scale=0.02, dtype=jnp.float32),
+        "experts": _init_mlp(ks[1], d, fe, cfg.act, dtype, lead=(L, e)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        p["shared"] = _init_mlp(ks[2], d, fs, cfg.act, dtype, lead=(L,))
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jnp_dtype()
+    vp = padded_vocab(cfg)
+    d = cfg.d_model
+    ks = split_keys(key, 8)
+    n_moe = cfg.n_layers - (1 if cfg.first_layer_dense_ff else 0)
+    params: Params = {
+        "embed": dense_init(ks[0], (vp, d), scale=0.02, dtype=dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    L = n_moe if cfg.n_experts else cfg.n_layers
+    blocks = {
+        "ln1": jnp.ones((L, d), dtype),
+        "ln2": jnp.ones((L, d), dtype),
+        "attn": _init_attn_block(ks[1], cfg, dtype, L),
+    }
+    if cfg.n_experts:
+        blocks["moe"] = _init_moe(ks[2], cfg, dtype, L)
+    else:
+        blocks["mlp"] = _init_mlp(ks[2], d, cfg.d_ff, cfg.act, dtype,
+                                  lead=(L,))
+    params["blocks"] = blocks
+    if cfg.first_layer_dense_ff:
+        params["first_block"] = {
+            "ln1": jnp.ones((1, d), dtype),
+            "ln2": jnp.ones((1, d), dtype),
+            "attn": _init_attn_block(ks[3], cfg, dtype, 1),
+            "mlp": _init_mlp(ks[4], d, cfg.first_layer_dense_ff, cfg.act,
+                             dtype, lead=(1,)),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[5], (d, vp), scale=0.02,
+                                       dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# attention — query-chunked causal/prefix/windowed (flash structure, jnp)
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(p: Params, cfg: ModelConfig, x, positions):
+    """x (B,S,D) -> q (B,S,H,dh), k/v (B,S,KH,dh) with qk_norm + RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_base:
+        cos, sin = rope_cos_sin(positions, cfg.dh, cfg.rope_base)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, cfg: ModelConfig, *,
+                      prefix_len: int = 0,
+                      window: Optional[int] = None,
+                      chunk: int = 512) -> jnp.ndarray:
+    """Causal (+prefix, +sliding-window) attention, O(S·chunk) transients.
+
+    q (B,S,H,dh); k,v (B,S,KH,dh).  Returns (B,S,H,dh).
+
+    GQA is handled by expanding K/V to the FLAT head dim (jnp.repeat)
+    instead of reshaping Q to (KH, G, dh): the flat H axis stays
+    model-sharded under GSPMD (H=64 shards 16-way; the grouped (8,8)
+    reshape forced a resharding — §Perf iteration q1), and the expanded
+    K/V are H-sharded so their per-device footprint is the same as the
+    grouped form.
+    """
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    scale = 1.0 / math.sqrt(dh)
+    kx = shard_kv(jnp.repeat(k, g, axis=2)) if g > 1 else shard_kv(k)
+    vx = shard_kv(jnp.repeat(v, g, axis=2)) if g > 1 else shard_kv(v)
+    q = shard_heads(q)
+    kpos = jnp.arange(s)
+
+    def body(carry, qc_and_start):
+        qc, start = qc_and_start           # (B,chunk,H,dh), ()
+        qpos = start + jnp.arange(chunk)
+        logits = jnp.einsum("bqhd,bshd->bhqs", qc, kx,
+                            preferred_element_type=jnp.float32)
+        logits = logits * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        if prefix_len:
+            mask = mask | (kpos[None, :] < prefix_len)
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", w, vx)
+        return carry, out
+
+    qs = q.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * chunk
+    # checkpoint the chunk body: without this, autodiff saves the softmax
+    # weights of EVERY chunk — the full S^2 attention matrix — as scan
+    # residuals (flash-attention recomputes instead; so do we)
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qs, starts))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return out
+
+
+def attention_block(p: Params, cfg: ModelConfig, x, *,
+                    prefix_len: int = 0,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    b, s, _ = x.shape
+    q, k, v = _proj_qkv(p, cfg, x, jnp.arange(s))
+    out = chunked_attention(q, k, v, cfg, prefix_len=prefix_len,
+                            window=window)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one token, ring KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention_block(p: Params, cfg: ModelConfig, x, cache_k, cache_v,
+                           lengths) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                             jnp.ndarray]:
+    """x (B,1,D); cache_k/v (B,KH,C,dh); lengths (B,) = tokens already in
+    context (the new token's absolute position).  Ring-buffer update.
+    Returns (out (B,1,D), new_k, new_v)."""
+    b = x.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    g = h // kh
+    c = cache_k.shape[2]
+    q, k, v = _proj_qkv(p, cfg, x, lengths[:, None])
+    q = q[:, 0].reshape(b, kh, g, dh)
+    slot = (lengths % c).astype(jnp.int32)
+    onehot = jax.nn.one_hot(slot, c, dtype=x.dtype)          # (B,C)
+    kc = cache_k * (1 - onehot)[:, None, :, None] \
+        + k[:, 0].transpose(0, 1, 2)[:, :, None, :] * onehot[:, None, :, None]
+    vc = cache_v * (1 - onehot)[:, None, :, None] \
+        + v[:, 0][:, :, None, :] * onehot[:, None, :, None]
+    n_valid = jnp.minimum(lengths + 1, c)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bkgd,bkcd->bkgc", q, kc,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(c)[None, None, None, :]
+    valid = pos < n_valid[:, None, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgc,bkcd->bkgd", w, vc).reshape(b, 1, h, dh)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+    return y, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# FFN — dense (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_block(p: Params, cfg: ModelConfig, x) -> jnp.ndarray:
+    hidden = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.act in GATED_ACTS:
+        gate = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        hidden = _gate(cfg.act, gate) * hidden
+    else:
+        hidden = jax.nn.gelu(hidden)
+    return jnp.einsum("bsf,fd->bsd", hidden, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# FFN — MoE (per-group capacity dispatch, Switch-style)
+# ---------------------------------------------------------------------------
+
+def moe_groups(n_tokens: int, data_shards: int = 16) -> int:
+    """Group count for capacity dispatch: one group per data shard when
+    groups stay usefully large, else a single global group."""
+    if n_tokens >= 16 * 1024:
+        return data_shards
+    return 1
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)          # >=4, multiple of 4
+
+
+def moe_dispatch(router_logits, cfg: ModelConfig, capacity: int):
+    """router_logits (G,T,E) -> (dispatch_idx (G,E*C) int32 token ids
+    [T = dropped], combine (G,E*C) weights, aux_loss scalar)."""
+    g, t, e = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)          # (G,T,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch):  E * sum_e f_e * p_e
+    density = jnp.mean(jax.nn.one_hot(top_ids[..., 0], e), axis=1)   # (G,E)
+    p_mean = jnp.mean(probs, axis=1)                                  # (G,E)
+    aux = jnp.mean(jnp.sum(density * p_mean, axis=-1)) * e
+
+    flat_ids = top_ids.reshape(g, t * cfg.top_k)              # (G,TK)
+    flat_w = top_w.reshape(g, t * cfg.top_k)
+    # position of each (token,k) within its expert queue
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)     # (G,TK,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1                 # (G,TK,E)
+    pos = jnp.take_along_axis(pos_in_e, flat_ids[..., None],
+                              axis=-1)[..., 0]                # (G,TK)
+    keep = pos < capacity
+    slot = flat_ids * capacity + pos                          # (G,TK)
+    slot = jnp.where(keep, slot, e * capacity)                # overflow bin
+    token_of = jnp.arange(t * cfg.top_k) // cfg.top_k         # (TK,)
+    # scatter token ids into slots; default T = dummy token
+    dispatch = jnp.full((g, e * capacity + 1), t, jnp.int32)
+    combine = jnp.zeros((g, e * capacity + 1), jnp.float32)
+    gi = jnp.arange(g)[:, None]
+    dispatch = dispatch.at[gi, slot].set(
+        jnp.broadcast_to(token_of, (g, t * cfg.top_k)).astype(jnp.int32),
+        mode="drop")
+    combine = combine.at[gi, slot].set(flat_w, mode="drop")
+    return dispatch[:, :-1], combine[:, :-1], aux
+
+
+def moe_block(p: Params, cfg: ModelConfig, x,
+              data_shards: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> (y, aux_loss).  Expert-parallel capacity dispatch.
+
+    When an activation-sharding context is active and shapes divide,
+    delegates to the shard_map all-to-all implementation (§Perf C4) —
+    explicit EP collectives instead of GSPMD-inferred ones."""
+    b, s, d = x.shape
+    from .moe_ep import ep_applicable, moe_block_ep
+    if ep_applicable(cfg, b, s):
+        return moe_block_ep(p, cfg, x)
+    t_all = b * s
+    g = moe_groups(t_all, data_shards)
+    t = t_all // g
+    xg = shard_group(x.reshape(g, t, d))
+    cap = moe_capacity(cfg, t)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    dispatch, combine, aux = moe_dispatch(logits, cfg, cap)
+    # pad a zero token row for dropped/dummy slots
+    xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    xe = jnp.take_along_axis(xpad, dispatch[..., None], axis=1)  # (G,EC,D)
+    # pin dispatch tensors expert-parallel: groups on data, experts on
+    # model — the reshard from token-grouped to expert-parallel IS the
+    # all-to-all; without the pins GSPMD replicates (§Perf C2)
+    xe = shard_expert(xe.reshape(g, cfg.n_experts, cap, d))
+    we = p["experts"]
+    wi = gather_expert_weights(we["wi"])
+    wo = gather_expert_weights(we["wo"])
+    hid = jnp.einsum("gecd,edf->gecf", xe, wi)
+    if cfg.act in GATED_ACTS:
+        gate = jnp.einsum("gecd,edf->gecf", xe,
+                          gather_expert_weights(we["wg"]))
+        hid = _gate(cfg.act, gate) * hid
+    else:
+        hid = jax.nn.gelu(hid)
+    hid = shard_expert(hid)
+    ye = shard_expert(jnp.einsum("gecf,efd->gecd", hid, wo))
+    ye = (ye.reshape(g, cfg.n_experts * cap, d)
+          * combine[..., None].astype(ye.dtype))
+    # combine back: scatter-add slots to tokens
+    ypad = jnp.zeros((g, t + 1, d), ye.dtype)
+    y = shard_group(
+        ypad.at[jnp.arange(g)[:, None], dispatch].add(ye)[:, :t])
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        hid = jnp.einsum("gtd,df->gtf", xg, sh["wi"])
+        if cfg.act in GATED_ACTS:
+            gate = jnp.einsum("gtd,df->gtf", xg, sh["wg"])
+            hid = _gate(cfg.act, gate) * hid
+        else:
+            hid = jax.nn.gelu(hid)
+        y = y + jnp.einsum("gtf,fd->gtd", hid, sh["wo"])
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# transformer layers (scan-stacked)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: ModelConfig, x, p_l, *, prefix_len=0, window=None,
+               data_shards: int = 16):
+    # layer boundaries are sequence-parallel (§Perf A2): the remat
+    # residual and the norm/elementwise traffic shard S over `model`;
+    # GSPMD gathers before the projections and scatters after
+    x = shard_seq(x)
+    h = x + attention_block(p_l["attn"], cfg,
+                            rms_norm(x, p_l["ln1"], cfg.norm_eps),
+                            prefix_len=prefix_len, window=window)
+    h = shard_seq(h)
+    hin = rms_norm(h, p_l["ln2"], cfg.norm_eps)
+    if "moe" in p_l:
+        y, aux = moe_block(p_l["moe"], cfg, hin, data_shards)
+    elif "mlp" in p_l:
+        y, aux = mlp_block(p_l["mlp"], cfg, hin), 0.0
+    return shard_seq(h + y), aux
+
+
+def lm_backbone(params: Params, cfg: ModelConfig, x, *,
+                prefix_len: int = 0, window: Optional[int] = None,
+                remat: bool = False, data_shards: int = 16) -> Tuple:
+    """Embedded input x (B,S,D) -> (hidden (B,S,D), aux_loss)."""
+    aux_total = 0.0
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        x, aux = _layer_fwd(cfg, x, fb, prefix_len=prefix_len, window=window,
+                            data_shards=data_shards)
+        aux_total += aux
+
+    def body(carry, p_l):
+        h, aux_acc = carry
+        h, aux = _layer_fwd(cfg, h, p_l, prefix_len=prefix_len,
+                            window=window, data_shards=data_shards)
+        return (h, aux_acc + aux), None
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(aux_total)),
+                               params["blocks"])
+    return x, aux
+
+
+def lm_logits(params: Params, cfg: ModelConfig, h) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return shard_logits(jnp.einsum("bsd,dv->bsv", h, head))
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    return shard_act(jnp.take(params["embed"], tokens, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# public steps
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, remat: bool = True, data_shards: int = 16) -> Tuple:
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = pad)."""
+    x = embed_tokens(params, cfg, batch["tokens"])
+    h, aux = lm_backbone(params, cfg, x, remat=remat,
+                         data_shards=data_shards)
+    logits = lm_logits(params, cfg, h)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    labels = jnp.maximum(batch["labels"], 0)
+    loss = cross_entropy_loss(logits, labels, mask)
+    metrics = {"ce_loss": loss, "aux_loss": aux}
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux
+    return loss, metrics
+
+
+def lm_prefill(params: Params, cfg: ModelConfig, tokens,
+               cache_len: Optional[int] = None, *,
+               window: Optional[int] = None,
+               prefix_len: int = 0, data_shards: int = 16,
+               prefix_embed: Optional[jnp.ndarray] = None,
+               embed_scale: Optional[float] = None):
+    """tokens (B,S) -> (last-token logits (B,V), cache dict).
+
+    cache layout: k/v (L, B, KH, C, dh) ring-indexed by absolute pos.
+    ``prefix_embed`` (B,P,D) prepends already-embedded tokens (VLM
+    vision prefix); combined with ``prefix_len`` for prefix-LM masking.
+    """
+    x = embed_tokens(params, cfg, tokens)
+    if embed_scale is not None:
+        x = x * jnp.asarray(embed_scale, x.dtype)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    c = cache_len or s
+    # run backbone while capturing per-layer K/V
+    kvs = []
+
+    def layer_with_kv(x, p_l):
+        xin = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _proj_qkv(p_l["attn"], cfg, xin, jnp.arange(s))
+        out = chunked_attention(q, k, v, cfg, prefix_len=prefix_len,
+                                window=window)
+        h = x + jnp.einsum("bqhk,hkd->bqd", out, p_l["attn"]["wo"])
+        hin = rms_norm(h, p_l["ln2"], cfg.norm_eps)
+        if "moe" in p_l:
+            y, _ = moe_block(p_l["moe"], cfg, hin, data_shards)
+        else:
+            y = mlp_block(p_l["mlp"], cfg, hin)
+        return h + y, (k, v)
+
+    def scan_body(h, p_l):
+        h, kv = layer_with_kv(h, p_l)
+        return h, kv
+
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        x, kv0 = layer_with_kv(x, fb)
+        kvs.append(kv0)
+    x, (ks_, vs_) = jax.lax.scan(scan_body, x, params["blocks"])
+    logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
+
+    def to_cache(k):                       # (B,S,KH,dh) -> (B,KH,C,dh)
+        kc = jnp.zeros((b, cfg.n_kv_heads, c, cfg.dh), k.dtype)
+        take = min(s, c)
+        src = k[:, s - take:].transpose(0, 2, 1, 3)
+        if c >= s:
+            return jax.lax.dynamic_update_slice(kc, src, (0, 0, 0, 0))
+        # ring: last c tokens land at slots (pos % c)
+        pos = (jnp.arange(s - take, s) % c)
+        return kc.at[:, :, pos].set(src)
+
+    if kvs:
+        k0, v0 = kvs[0]
+        ks_ = jnp.concatenate([to_cache(k0)[None], jax.vmap(to_cache)(ks_)])
+        vs_ = jnp.concatenate([to_cache(v0)[None], jax.vmap(to_cache)(vs_)])
+    else:
+        ks_ = jax.vmap(to_cache)(ks_)
+        vs_ = jax.vmap(to_cache)(vs_)
+    return logits, {"k": ks_, "v": vs_}
+
+
+def lm_decode(params: Params, cfg: ModelConfig, cache: Dict, tokens,
+              lengths, *, data_shards: int = 16,
+              embed_scale: Optional[float] = None):
+    """One decode step.  tokens (B,1); lengths (B,) absolute positions;
+    cache {k,v}: (L,B,KH,C,dh).  Returns (logits (B,V), new_cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    if embed_scale is not None:
+        x = x * jnp.asarray(embed_scale, x.dtype)
+    i0 = 0
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        xin = rms_norm(x, fb["ln1"], cfg.norm_eps)
+        att, kc, vc = decode_attention_block(fb["attn"], cfg, xin,
+                                             cache["k"][0], cache["v"][0],
+                                             lengths)
+        h = x + att
+        hin = rms_norm(h, fb["ln2"], cfg.norm_eps)
+        x = h + mlp_block(fb["mlp"], cfg, hin)
+        first_kv = (kc, vc)
+        i0 = 1
+
+    def body(h, layer_in):
+        p_l, ck, cv = layer_in
+        xin = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+        att, kc, vc = decode_attention_block(p_l["attn"], cfg, xin, ck, cv,
+                                             lengths)
+        hh = h + att
+        hin = rms_norm(hh, p_l["ln2"], cfg.norm_eps)
+        if "moe" in p_l:
+            y, _ = moe_block(p_l["moe"], cfg, hin, data_shards)
+        else:
+            y = mlp_block(p_l["mlp"], cfg, hin)
+        return hh + y, (kc, vc)
+
+    x, (ks_, vs_) = jax.lax.scan(body, x,
+                                 (params["blocks"], cache["k"][i0:],
+                                  cache["v"][i0:]))
+    if i0:
+        ks_ = jnp.concatenate([first_kv[0][None], ks_])
+        vs_ = jnp.concatenate([first_kv[1][None], vs_])
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, {"k": ks_, "v": vs_}

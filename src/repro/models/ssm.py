@@ -1,0 +1,314 @@
+"""Mamba-2 (SSD — state-space duality) family [arXiv:2405.21060].
+
+Pure-jnp chunked SSD for the pod path (GSPMD-shardable: heads on the
+``model`` axis, batch on ``data``; the chunk scan carries state through
+``lax.scan`` — no cross-chip collectives inside the scan, sequence stays
+on-chip).  ``repro.kernels.ssd_scan`` is the Pallas TPU kernel for the
+same math (selected via the vendor-tag mechanism on the micro path).
+
+Decode is O(1) per token: the "KV cache" is the (B,G,gh,P,N) SSD state
+plus the (K-1)-deep causal-conv ring — this is why mamba2/zamba2 run
+long_500k natively.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import shard_act
+
+from .common import (ModelConfig, cross_entropy_loss, dense_init, rms_norm,
+                     split_keys)
+from .lm import embed_tokens, lm_logits, padded_vocab
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_ssm_block(key, cfg: ModelConfig, dtype, n_layers: int) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, k = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    conv_ch = di + 2 * g * n
+    d_in_proj = 2 * di + 2 * g * n + h
+    ks = split_keys(key, 4)
+    L = n_layers
+    import numpy as np
+    rng = np.random.default_rng(7)
+    dt = np.exp(rng.uniform(math.log(1e-3), math.log(1e-1), (L, h)))
+    dt_bias = dt + np.log(-np.expm1(-dt))          # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (L, d, d_in_proj), dtype=dtype),
+        "conv_w": dense_init(ks[1], (L, k, conv_ch), scale=0.5,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((L, conv_ch), dtype),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, h + 1, dtype=jnp.float32),
+                                  (L, 1)) / h + 0.5),
+        "D": jnp.ones((L, h), jnp.float32),
+        "norm": jnp.ones((L, di), dtype),
+        "out_proj": dense_init(ks[2], (L, di, d),
+                               scale=1.0 / math.sqrt(di), dtype=dtype),
+        "ln": jnp.ones((L, d), dtype),
+    }
+
+
+def init_ssm_lm(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jnp_dtype()
+    vp = padded_vocab(cfg)
+    ks = split_keys(key, 3)
+    params: Params = {
+        "embed": dense_init(ks[0], (vp, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "blocks": init_ssm_block(ks[1], cfg, dtype, cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.d_model, vp),
+                                       scale=0.02, dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (pure jnp; heads grouped for B/C sharing)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 128,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm/Cm (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,G,gh,P,N))."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2:]
+    gh = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xg = x.reshape(b, nc, chunk, g, gh, p)
+    dtg = dt.reshape(b, nc, chunk, g, gh)
+    Bc = Bm.reshape(b, nc, chunk, g, n)
+    Cc = Cm.reshape(b, nc, chunk, g, n)
+    Ag = A.reshape(g, gh)
+    if init_state is None:
+        init_state = jnp.zeros((b, g, gh, p, n), jnp.float32)
+
+    def body(state, inp):
+        xc, dtc, bc, cc = inp              # (B,Q,G,gh,P) (B,Q,G,gh) ...
+        dA = dtc * Ag                      # (B,Q,G,gh) log-decay, <0
+        La = jnp.cumsum(dA, axis=1)        # cumulative within chunk
+        # --- intra-chunk (masked attention-like) ---
+        cb = jnp.einsum("bign,bjgn->bgij", cc, bc,
+                        preferred_element_type=jnp.float32)
+        ldiff = La[:, :, None] - La[:, None]          # (B,i,j,G,gh)
+        q_ = jnp.arange(chunk)
+        causal = (q_[:, None] >= q_[None, :])
+        # mask in log space BEFORE exp: ldiff > 0 for j > i would overflow
+        # (and poison gradients through the masked branch)
+        ldiff = jnp.where(causal[None, :, :, None, None], ldiff, -1e30)
+        m = jnp.exp(ldiff)
+        m = m * dtc[:, None]                          # * dt_j
+        m = m * cb.transpose(0, 2, 3, 1)[..., None]   # (B,i,j,G,gh)
+        y_intra = jnp.einsum("bijgh,bjghp->bighp", m,
+                             xc.astype(jnp.float32))
+        # --- inter-chunk (state from previous chunks) ---
+        y_inter = jnp.einsum("bign,bghpn->bighp", cc.astype(jnp.float32),
+                             state) * jnp.exp(La)[..., None]
+        # --- state update ---
+        la_end = La[:, -1]                            # (B,G,gh)
+        decay_to_end = jnp.exp(la_end[:, None] - La) * dtc  # (B,Q,G,gh)
+        ds = jnp.einsum("bjgn,bjgh,bjghp->bghpn", bc.astype(jnp.float32),
+                        decay_to_end, xc.astype(jnp.float32))
+        state = state * jnp.exp(la_end)[..., None, None] + ds
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    xs = (xg.transpose(1, 0, 2, 3, 4, 5), dtg.transpose(1, 0, 2, 3, 4),
+          Bc.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3, 4))
+    # checkpoint: avoid saving the (Q,Q) intra-chunk matrices per chunk
+    state, ys = jax.lax.scan(jax.checkpoint(body), init_state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, p)
+    return y, state
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrence.  state (B,G,gh,P,N); x_t (B,H,P);
+    dt_t (B,H); B_t/C_t (B,G,N).  Returns (y_t (B,H,P), new_state)."""
+    b, h, p = x_t.shape
+    g, n = B_t.shape[1:]
+    gh = h // g
+    xg = x_t.reshape(b, g, gh, p).astype(jnp.float32)
+    dtg = dt_t.reshape(b, g, gh)
+    Ag = A.reshape(g, gh)
+    dA = jnp.exp(dtg * Ag)                            # (B,G,gh)
+    ds = jnp.einsum("bgn,bgh,bghp->bghpn", B_t.astype(jnp.float32),
+                    dtg, xg)
+    state = state * dA[..., None, None] + ds
+    y = jnp.einsum("bgn,bghpn->bghp", C_t.astype(jnp.float32), state)
+    return y.reshape(b, h, p).astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block (conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                   cfg.ssm_heads)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """xBC (B,S,C) depthwise causal conv, kernel (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _conv_step(conv_cache, x_t, w, b):
+    """conv_cache (B,K-1,C); x_t (B,C).  Returns (y_t, new_cache)."""
+    k = w.shape[0]
+    full = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full, w) + b[None]
+    return jax.nn.silu(y), full[:, 1:]
+
+
+def mamba_block(p_l: Params, cfg: ModelConfig, x, *,
+                chunk: int = 128) -> jnp.ndarray:
+    """Full-sequence mamba2 block: x (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    x = shard_act(x)
+    xin = rms_norm(x, p_l["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p_l["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p_l["conv_w"], p_l["conv_b"])
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, ph = cfg.ssm_heads, cfg.ssm_head_dim
+    xs = xBC[..., :di].reshape(b, s, h, ph)
+    Bm = xBC[..., di:di + g * n].reshape(b, s, g, n)
+    Cm = xBC[..., di + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_l["dt_bias"])
+    A = -jnp.exp(p_l["A_log"])
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=chunk)
+    y = y + xs * p_l["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p_l["norm"], cfg.norm_eps)
+    return x + jnp.einsum("bse,ed->bsd", y, p_l["out_proj"])
+
+
+def mamba_decode_block(p_l: Params, cfg: ModelConfig, x, conv_cache,
+                       state) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray]:
+    """One-token mamba2 block.  x (B,1,D).  Returns (y, conv, state)."""
+    b = x.shape[0]
+    xin = rms_norm(x, p_l["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p_l["in_proj"])[:, 0]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_cache = _conv_step(conv_cache, xBC, p_l["conv_w"],
+                                 p_l["conv_b"])
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, ph = cfg.ssm_heads, cfg.ssm_head_dim
+    xs = xBC[..., :di].reshape(b, h, ph)
+    Bm = xBC[..., di:di + g * n].reshape(b, g, n)
+    Cm = xBC[..., di + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_l["dt_bias"])
+    A = -jnp.exp(p_l["A_log"])
+    y, state = ssd_step(state, xs, dt, A, Bm, Cm)
+    y = y + xs * p_l["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(b, di)
+    y = rms_norm(y * jax.nn.silu(z), p_l["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("be,ed->bd", y, p_l["out_proj"])[:, None]
+    return out, conv_cache, state
+
+
+# ---------------------------------------------------------------------------
+# public steps (pure-SSM LM: mamba2-780m)
+# ---------------------------------------------------------------------------
+
+def ssm_backbone(params, cfg: ModelConfig, x, *, remat: bool = False,
+                 chunk: int = 128):
+    def body(h, p_l):
+        return mamba_block(p_l, cfg, h, chunk=chunk), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    return x
+
+
+def ssm_loss(params, cfg: ModelConfig, batch, *, remat: bool = True,
+             data_shards: int = 16):
+    x = embed_tokens(params, cfg, batch["tokens"])
+    h = ssm_backbone(params, cfg, x, remat=remat)
+    logits = lm_logits(params, cfg, h)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    labels = jnp.maximum(batch["labels"], 0)
+    loss = cross_entropy_loss(logits, labels, mask)
+    return loss, {"ce_loss": loss}
+
+
+def ssm_empty_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    gh, ph = cfg.ssm_heads // g, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * g * n
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((L, batch, g, gh, ph, n), jnp.float32),
+    }
+
+
+def ssm_prefill(params, cfg: ModelConfig, tokens,
+                cache_len: Optional[int] = None, **_):
+    """Prefill = full forward capturing final conv window + SSD state."""
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    k = cfg.ssm_conv
+
+    def body(h, p_l):
+        bb, ss, d = h.shape
+        xin = rms_norm(h, p_l["ln"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("bsd,de->bse", xin, p_l["in_proj"])
+        z, xBC, dt = _split_proj(cfg, zxbcdt)
+        conv_tail = jnp.pad(xBC, ((0, 0), (max(k - 1 - ss, 0), 0),
+                                  (0, 0)))[:, -(k - 1):]
+        xBC = _causal_conv(xBC, p_l["conv_w"], p_l["conv_b"])
+        di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+        hh, ph = cfg.ssm_heads, cfg.ssm_head_dim
+        xs = xBC[..., :di].reshape(bb, ss, hh, ph)
+        Bm = xBC[..., di:di + g * n].reshape(bb, ss, g, n)
+        Cm = xBC[..., di + g * n:].reshape(bb, ss, g, n)
+        dtf = jax.nn.softplus(dt.astype(jnp.float32) + p_l["dt_bias"])
+        A = -jnp.exp(p_l["A_log"])
+        y, state = ssd_chunked(xs, dtf, A, Bm, Cm)
+        y = y + xs * p_l["D"][None, None, :, None].astype(y.dtype)
+        y = y.reshape(bb, ss, di)
+        y = rms_norm(y * jax.nn.silu(z), p_l["norm"], cfg.norm_eps)
+        return h + jnp.einsum("bse,ed->bsd", y, p_l["out_proj"]), \
+            (conv_tail, state)
+
+    x, (convs, states) = jax.lax.scan(body, x, params["blocks"])
+    logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, {"conv": convs, "state": states}
+
+
+def ssm_decode(params, cfg: ModelConfig, cache, tokens, lengths, **_):
+    x = embed_tokens(params, cfg, tokens)
+
+    def body(h, layer_in):
+        p_l, conv, state = layer_in
+        h, conv, state = mamba_decode_block(p_l, cfg, h, conv, state)
+        return h, (conv, state)
+
+    x, (convs, states) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["state"]))
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, {"conv": convs, "state": states}

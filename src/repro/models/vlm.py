@@ -1,0 +1,76 @@
+"""PaliGemma-3B backbone [arXiv:2407.07726]: Gemma-2B decoder consuming
+a SigLIP vision prefix through a linear projector, with prefix-LM
+masking (bidirectional attention over the image tokens + prompt).
+
+The SigLIP ViT is a STUB per the assignment carve-out: ``input_specs``
+supplies precomputed patch embeddings (B, n_vision_tokens, d_vision);
+the in-model linear projector (d_vision -> d_model) and everything after
+it is real.  Gemma details kept: GeGLU MLP, MQA (kv=1), RoPE, tied
+embeddings, sqrt(d_model)-scaled token embeddings.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, cross_entropy_loss, dense_init, split_keys
+from .lm import (embed_tokens, init_lm, lm_backbone, lm_decode, lm_logits,
+                 lm_prefill)
+
+Params = Dict[str, Any]
+
+
+def init_vlm(key, cfg: ModelConfig) -> Params:
+    k1, k2 = split_keys(key, 2)
+    params = init_lm(k1, cfg)
+    params["projector"] = dense_init(
+        k2, (cfg.d_vision, cfg.d_model),
+        scale=1.0 / math.sqrt(cfg.d_vision), dtype=cfg.jnp_dtype())
+    return params
+
+
+def _embed_multimodal(params, cfg: ModelConfig, vision, tokens):
+    """vision (B,P,d_vision) + tokens (B,S) -> (B,P+S,D)."""
+    scale = math.sqrt(cfg.d_model)
+    xt = embed_tokens(params, cfg, tokens) * scale
+    xv = jnp.einsum("bpe,ed->bpd", vision.astype(xt.dtype),
+                    params["projector"])
+    return jnp.concatenate([xv, xt], axis=1)
+
+
+def vlm_loss(params, cfg: ModelConfig, batch, *, remat: bool = True,
+             data_shards: int = 16):
+    """batch: vision (B,P,d_vision), tokens (B,S), labels (B,S).
+    Loss only over the text positions (vision prefix has no labels)."""
+    x = _embed_multimodal(params, cfg, batch["vision"], batch["tokens"])
+    p = cfg.n_vision_tokens
+    h, _ = lm_backbone(params, cfg, x, prefix_len=p, remat=remat,
+                       data_shards=data_shards)
+    logits = lm_logits(params, cfg, h[:, p:])
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    labels = jnp.maximum(batch["labels"], 0)
+    loss = cross_entropy_loss(logits, labels, mask)
+    return loss, {"ce_loss": loss}
+
+
+def vlm_prefill(params, cfg: ModelConfig, batch,
+                cache_len: Optional[int] = None, *,
+                window: Optional[int] = None, **_):
+    """batch: vision (B,P,d_vision) + tokens (B,S).  The cache covers
+    vision prefix + prompt (vision tokens occupy cache slots)."""
+    xv = jnp.einsum("bpe,ed->bpd",
+                    batch["vision"].astype(cfg.jnp_dtype()),
+                    params["projector"])
+    return lm_prefill(params, cfg, batch["tokens"], cache_len,
+                      window=window, prefix_len=cfg.n_vision_tokens,
+                      prefix_embed=xv, embed_scale=math.sqrt(cfg.d_model))
+
+
+def vlm_decode(params, cfg: ModelConfig, cache, tokens, lengths, **_):
+    """lengths are absolute positions *including* the vision prefix."""
+    return lm_decode(params, cfg, cache, tokens, lengths,
+                     embed_scale=math.sqrt(cfg.d_model))

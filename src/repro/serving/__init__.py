@@ -1,0 +1,7 @@
+"""Serving substrate: batched prefill/decode engine with KV arenas
+planned by the TFLM memory planner, multitenant hosting."""
+
+from .engine import Request, RequestResult, ServingEngine
+from .host import MultiTenantHost
+
+__all__ = ["Request", "RequestResult", "ServingEngine", "MultiTenantHost"]

@@ -1,0 +1,195 @@
+"""Batched serving engine — the pod-scale analogue of the TF Micro
+invoke loop (paper §4.1), with the same allocation discipline:
+
+  * ALL buffers (decode slots, KV cache, sampling state) are created at
+    engine construction — nothing allocates inside the serving loop
+    (the paper's "no allocation after init" invariant, C3);
+  * cache capacity is budgeted through the SAME TwoStackArena +
+    memory-planner machinery the micro interpreter uses: KV is a
+    persistent (interpreter-lifetime) allocation, prefill scratch is a
+    function-lifetime head allocation released between requests;
+  * continuous batching: fixed decode slots, requests admitted as slots
+    free up, one fused decode step advances every active slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import TwoStackArena, align_up
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelBundle
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 = greedy
+    extras: Optional[Dict[str, np.ndarray]] = None   # vision / frames
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    prompt_len: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    done: bool = False
+
+
+def _cache_bytes(tree: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+class ServingEngine:
+    """One model, ``max_slots`` concurrent sequences."""
+
+    def __init__(self, bundle: ModelBundle, params: Any, *,
+                 max_slots: int = 4, cache_len: int = 256,
+                 arena: Optional[TwoStackArena] = None,
+                 arena_bytes: Optional[int] = None, seed: int = 0):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        dtype = self.cfg.jnp_dtype()
+
+        # --- arena accounting (C3/C4): KV is interpreter-lifetime ----
+        cache = bundle.empty_cache(max_slots, cache_len, dtype)
+        kv_bytes = _cache_bytes(cache)
+        if arena is None:
+            arena = TwoStackArena(arena_bytes or align_up(
+                kv_bytes + (64 << 10)) * 2)
+        self.arena = arena
+        self.kv_offset = arena.allocate_persistent(kv_bytes, tag="kv_cache")
+        self.cache = cache
+
+        # --- slot bookkeeping (host side, fixed size) -----------------
+        self.slot_req: List[Optional[RequestResult]] = [None] * max_slots
+        self.slot_budget = np.zeros(max_slots, np.int64)
+        self.lengths = jnp.zeros((max_slots,), jnp.int32)
+        self.cur_tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self.active = np.zeros(max_slots, bool)
+        self.rng = np.random.default_rng(seed)
+        self.queue: List[Request] = []
+        self.results: Dict[int, RequestResult] = {}
+
+        # --- compiled steps (init-time, like interpreter prepare) -----
+        self._decode = jax.jit(
+            lambda p, c, t, l: bundle.decode(p, c, t, l,
+                                             window=self.cfg.sliding_window))
+        # prefill jits once per distinct prompt length (a production
+        # engine would bucket; exact-length keeps SSM state unpolluted)
+        self._prefill = jax.jit(
+            lambda p, b: bundle.prefill(p, b, cache_len=cache_len,
+                                        window=self.cfg.sliding_window))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.results[req.uid] = RequestResult(uid=req.uid,
+                                              prompt_len=len(req.tokens))
+
+    def _insert_cache(self, slot: int, new_cache: Any) -> None:
+        """Place a prefilled (batch=1) cache into slot ``slot``."""
+        def ins(full, one):
+            # batch dim differs per leaf family; find the axis whose size
+            # is max_slots and the matching axis of size 1 in `one`
+            for ax in range(full.ndim):
+                if full.shape[ax] == self.max_slots \
+                        and one.shape[ax] == 1:
+                    idx = [slice(None)] * full.ndim
+                    start = [0] * full.ndim
+                    start[ax] = slot
+                    return jax.lax.dynamic_update_slice(
+                        full, one.astype(full.dtype), tuple(start))
+            raise ValueError((full.shape, one.shape))
+        self.cache = jax.tree.map(ins, self.cache, new_cache)
+
+    def _prefill_one(self, req: Request, slot: int) -> None:
+        """Prefill tokens[:-1], then hand the LAST prompt token to the
+        decode loop: the first decode step integrates it (KV write /
+        SSD state update) and emits the first new token — one uniform
+        decode path for every family, no double-integration for SSM."""
+        t0 = time.perf_counter()
+        n = len(req.tokens)
+        if n >= 2:
+            batch = {"tokens": jnp.asarray(req.tokens[None, :-1])}
+            if req.extras:
+                for k, v in req.extras.items():
+                    batch[k] = jnp.asarray(v[None])
+            _, cache1 = self._prefill(self.params, batch)
+        else:   # single-token prompt: slot starts from a fresh cache
+            cache1 = self.bundle.empty_cache(1, self.cache_len,
+                                             self.cfg.jnp_dtype())
+        self._insert_cache(slot, cache1)
+        res = self.results[req.uid]
+        res.prefill_s = time.perf_counter() - t0
+        last_pos = n - 1 + (self.cfg.n_vision_tokens
+                            if self.cfg.family == "vlm" else 0)
+        self.slot_req[slot] = res
+        self.slot_budget[slot] = req.max_new_tokens
+        self.active[slot] = True
+        self.lengths = self.lengths.at[slot].set(last_pos)
+        self.cur_tokens = self.cur_tokens.at[slot, 0].set(
+            int(req.tokens[-1]))
+
+    def _sample(self, logits, temperature: float) -> np.ndarray:
+        logits = np.asarray(logits[:, :self.cfg.vocab], np.float32)
+        if temperature <= 0:
+            return logits.argmax(-1)
+        z = logits / temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self.rng.choice(len(row), p=row) for row in p])
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit + one decode step.  Returns True if work remains."""
+        for slot in range(self.max_slots):
+            if not self.active[slot] and self.queue:
+                self._prefill_one(self.queue.pop(0), slot)
+        if not self.active.any():
+            return bool(self.queue)
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.cur_tokens, self.lengths)
+        dt = time.perf_counter() - t0
+        toks = self._sample(logits, 0.0)
+        self.lengths = self.lengths + 1
+        new_cur = np.array(self.cur_tokens)    # writable host copy
+        eos = self.cfg.vocab - 1
+        for slot in range(self.max_slots):
+            if not self.active[slot]:
+                continue
+            res = self.slot_req[slot]
+            res.decode_s += dt
+            tok = int(toks[slot])
+            res.output.append(tok)
+            self.slot_budget[slot] -= 1
+            new_cur[slot, 0] = tok
+            if self.slot_budget[slot] <= 0 or tok == eos:
+                res.done = True
+                self.active[slot] = False
+                self.slot_req[slot] = None
+        self.cur_tokens = jnp.asarray(new_cur)
+        return bool(self.active.any() or self.queue)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, RequestResult]:
+        steps = 0
+        while self.step():
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving loop did not converge")
+        return self.results

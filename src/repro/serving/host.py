@@ -1,0 +1,78 @@
+"""Multitenant model hosting (paper §4.5, Figure 5) at pod scale.
+
+Several ``ServingEngine`` instances share ONE TwoStackArena exactly the
+way TF Micro lets multiple interpreters share one arena:
+
+  * each model's KV cache is an interpreter-lifetime (tail/persistent)
+    allocation — persistent sections STACK per tenant;
+  * prefill/decode scratch is function-lifetime (head) — the
+    nonpersistent section is sized to the LARGEST requirement across
+    tenants and is reused because tenants run non-concurrently;
+  * admission fails loudly (ArenaOverflowError) when the stacks would
+    cross — the paper's capacity-error semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.arena import TwoStackArena, align_up
+from repro.models.registry import ModelBundle
+
+from .engine import Request, RequestResult, ServingEngine
+
+
+def _scratch_bytes(bundle: ModelBundle, max_prompt: int) -> int:
+    """Head-section budget: activation scratch for the largest prefill."""
+    cfg = bundle.cfg
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    # hidden + attention transients for one prompt (engine batch=1)
+    return align_up(max_prompt * cfg.d_model * dt * 8)
+
+
+class MultiTenantHost:
+    """One arena, many models — never running concurrently."""
+
+    def __init__(self, arena_bytes: int):
+        self.arena = TwoStackArena(arena_bytes)
+        self.engines: Dict[str, ServingEngine] = {}
+        self._scratch_high = 0
+
+    def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
+                  max_slots: int = 2, cache_len: int = 128,
+                  max_prompt: int = 64) -> ServingEngine:
+        """Admit a tenant: its KV cache stacks persistently; the shared
+        nonpersistent (head) section grows to the max requirement."""
+        eng = ServingEngine(bundle, params, max_slots=max_slots,
+                            cache_len=cache_len, arena=self.arena)
+        scratch = _scratch_bytes(bundle, max_prompt)
+        if scratch > self._scratch_high:
+            # grow the shared head-section reservation to the new max
+            self.arena.allocate_temp(scratch - self._scratch_high)
+            self.arena.reset_temp()
+            self._scratch_high = scratch
+        self.engines[name] = eng
+        return eng
+
+    def submit(self, name: str, req: Request) -> None:
+        self.engines[name].submit(req)
+
+    def run_all(self) -> Dict[str, Dict[int, RequestResult]]:
+        """Round-robin the tenants until all queues drain (tenants are
+        time-multiplexed — TF Micro's 'not concurrently' contract)."""
+        out = {}
+        pending = True
+        while pending:
+            pending = False
+            for name, eng in self.engines.items():
+                if eng.step():
+                    pending = True
+        for name, eng in self.engines.items():
+            out[name] = eng.results
+        return out
+
+    def usage(self):
+        return self.arena.usage()

@@ -1,0 +1,10 @@
+"""Training substrate: AdamW, LR schedules, TrainState, train-step
+factory (remat + grad clipping + pjit shardings)."""
+
+from .optimizer import (AdamWState, adamw_init, adamw_update,
+                        cosine_schedule, clip_by_global_norm)
+from .trainer import TrainState, make_train_step, train_state_sharding
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "clip_by_global_norm", "TrainState", "make_train_step",
+           "train_state_sharding"]

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture is instantiated at REDUCED scale (2 layers,
+d_model<=512, <=4 experts) and run through one train step (loss +
+grads), one prefill and one decode step on CPU, asserting output shapes
+and absence of NaNs.  The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import get_model
+from repro.models.lm import padded_vocab
+
+ARCHS = list_archs()
+SEQ = 32
+BATCH = 2
+
+
+def _bundle(arch):
+    cfg = get_config(arch, reduced=True)
+    return cfg, get_model(cfg)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_shapes_finite(arch):
+    cfg, m = _bundle(arch)
+    params = m.init(jax.random.PRNGKey(0))
+    leaves = jax.tree.leaves(params)
+    assert leaves, arch
+    for leaf in leaves:
+        assert jnp.all(jnp.isfinite(leaf.astype(jnp.float32))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg, m = _bundle(arch)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    batch = m.make_batch(rng, "train", BATCH, SEQ)
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            m.loss, has_aux=True)(p, b, remat=False, data_shards=1)
+        return loss, metrics, grads
+
+    loss, metrics, grads = step(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    assert float(loss) > 0
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and float(gnorm) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg, m = _bundle(arch)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    cache_len = SEQ + 8
+    batch = m.make_batch(rng, "prefill", BATCH, SEQ)
+    logits, cache = jax.jit(
+        lambda p, b: m.prefill(p, b, cache_len=cache_len))(params, batch)
+    vp = padded_vocab(cfg)
+    assert logits.shape == (BATCH, vp), (arch, logits.shape)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), arch
+
+    prompt_len = SEQ + (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+    tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    lengths = jnp.full((BATCH,), prompt_len, jnp.int32)
+    decode = jax.jit(lambda p, c, t, l: m.decode(p, c, t, l))
+    for step_i in range(3):
+        logits, cache = decode(params, cache, tok[:, None], lengths)
+        assert logits.shape == (BATCH, vp), arch
+        assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), arch
+        tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+        lengths = lengths + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill_continuation(arch):
+    """Teacher-forcing consistency: prefill(t0..tn) last logits must match
+    decoding token t_n with cache built from prefill(t0..t_{n-1})."""
+    cfg, m = _bundle(arch)
+    if cfg.family in ("vlm",):
+        pytest.skip("vlm prefix offsets exercised in test_prefill")
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    full = m.make_batch(rng, "prefill", BATCH, SEQ)
+    cache_len = SEQ + 4
+    part = {k: (v[:, :SEQ - 1] if k == "tokens" else v)
+            for k, v in full.items()}
+    logits_full, _ = jax.jit(
+        lambda p, b: m.prefill(p, b, cache_len=cache_len))(params, full)
+    _, cache = jax.jit(
+        lambda p, b: m.prefill(p, b, cache_len=cache_len))(params, part)
+    lengths = jnp.full((BATCH,), SEQ - 1, jnp.int32)
+    logits_dec, _ = jax.jit(
+        lambda p, c, t, l: m.decode(p, c, t, l))(
+            params, cache, full["tokens"][:, SEQ - 1:SEQ], lengths)
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    """Analytic param count must be in the ballpark the name claims."""
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    expected = {
+        "phi4-mini-3.8b": 3.8e9, "mamba2-780m": 0.78e9,
+        "qwen3-32b": 32.8e9, "phi3-mini-3.8b": 3.8e9,
+        "deepseek-moe-16b": 16.4e9, "yi-6b": 6.1e9,
+        "qwen3-moe-30b-a3b": 30.5e9, "paligemma-3b": 2.9e9,
+        "whisper-large-v3": 1.55e9, "zamba2-1.2b": 1.2e9,
+    }[arch]
+    assert 0.6 * expected < n < 1.45 * expected, (arch, n, expected)

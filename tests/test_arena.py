@@ -1,0 +1,93 @@
+"""Two-stack arena allocator invariants (paper §4.4.1, Figure 3)."""
+
+import pytest
+
+from repro.core.arena import (ArenaOverflowError, TwoStackArena, align_up)
+
+
+def test_head_and_tail_grow_toward_each_other():
+    a = TwoStackArena(1024)
+    h1 = a.allocate_nonpersistent(100, "h1")
+    t1 = a.allocate_persistent(100, "t1")
+    h2 = a.allocate_nonpersistent(50, "h2")
+    t2 = a.allocate_persistent(50, "t2")
+    assert h1 == 0
+    assert h2 >= h1 + 100
+    assert t1 > h2 + 50
+    assert t2 < t1
+    assert t1 + 100 <= 1024
+    # alignment
+    assert h1 % 16 == 0 and h2 % 16 == 0
+    assert t1 % 16 == 0 and t2 % 16 == 0
+
+
+def test_crossing_stacks_raises():
+    a = TwoStackArena(256)
+    a.allocate_nonpersistent(128)
+    a.allocate_persistent(64)
+    with pytest.raises(ArenaOverflowError):
+        a.allocate_persistent(128)
+
+
+def test_exact_accounting():
+    a = TwoStackArena(4096)
+    a.allocate_nonpersistent(100)
+    a.allocate_persistent(200)
+    u = a.usage()
+    assert u.nonpersistent == 100
+    # persistent is tail_used: size - tail; tail = align_down(4096-200)=3888
+    assert u.persistent == 4096 - 3888 == 208
+    assert u.total == u.persistent + u.nonpersistent
+
+
+def test_temp_region_between_stacks():
+    a = TwoStackArena(1024)
+    a.allocate_nonpersistent(64)
+    off = a.allocate_temp(128)
+    assert off >= 64
+    assert a.usage().temp_high_water >= 128
+    a.reset_temp()
+    assert a.free_bytes == a._tail - a._head
+
+
+def test_temp_overflow_raises():
+    a = TwoStackArena(256)
+    a.allocate_nonpersistent(100)
+    a.allocate_persistent(100)
+    with pytest.raises(ArenaOverflowError):
+        a.allocate_temp(100)
+
+
+def test_no_allocation_after_freeze():
+    a = TwoStackArena(1024)
+    a.allocate_nonpersistent(64)
+    a.freeze()
+    with pytest.raises(RuntimeError):
+        a.allocate_nonpersistent(1)
+    with pytest.raises(RuntimeError):
+        a.allocate_persistent(1)
+
+
+def test_freeze_with_outstanding_temp_raises():
+    a = TwoStackArena(1024)
+    a.allocate_temp(64)
+    with pytest.raises(RuntimeError):
+        a.freeze()
+
+
+def test_multitenant_fork_stacks_persistent_and_shares_head():
+    a = TwoStackArena(4096)
+    a.allocate_persistent(256, "m1")
+    a.allocate_nonpersistent(512, "m1_plan")
+    child = a.fork_tenant()
+    # child persistents stack BELOW parent's tail
+    t = child.allocate_persistent(128, "m2")
+    assert t + 128 <= a._tail
+    # child head restarts at 0 (shared nonpersistent region, Figure 5)
+    h = child.allocate_nonpersistent(256, "m2_plan")
+    assert h == 0
+    a.absorb_tenant(child)
+    u = a.usage()
+    # nonpersistent requirement = max(tenants), not sum
+    assert u.nonpersistent == 512
+    assert u.persistent >= 256 + 128

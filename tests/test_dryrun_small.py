@@ -1,0 +1,68 @@
+"""Dry-run machinery integration test on a small placeholder mesh.
+
+Runs in a subprocess (XLA device count must be set before jax init, and
+the main test process must keep seeing 1 device).  Uses REDUCED configs
+on a 2x4 mesh — same code path as the production dry-run, minutes
+cheaper."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.launch.dryrun import build_step
+    from repro.launch.shapes import InputShape
+    from repro.launch.hlo_analysis import analyze
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    out = {}
+    for arch, shape in [
+        ("qwen3-32b", InputShape("t", 64, 4, "train")),
+        ("mamba2-780m", InputShape("t", 64, 4, "train")),
+        ("deepseek-moe-16b", InputShape("p", 64, 4, "prefill")),
+        ("zamba2-1.2b", InputShape("d", 64, 4, "decode")),
+        ("whisper-large-v3", InputShape("d", 64, 4, "decode")),
+        ("paligemma-3b", InputShape("p", 64, 4, "prefill")),
+    ]:
+        cfg = get_config(arch, reduced=True)
+        bundle = get_model(cfg)
+        fn, args, shards = build_step(bundle, shape, mesh)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=shards).lower(*args) \\
+                .compile()
+        hc = analyze(compiled.as_text())
+        out[arch + ":" + shape.mode] = {
+            "flops": hc.flops,
+            "collective_bytes": hc.total_collective_bytes,
+        }
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_configs_on_8dev_mesh():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert len(out) == 6
+    for key, v in out.items():
+        assert v["flops"] > 0, key
+        # every mode on a >1-chip mesh must communicate something
+        assert v["collective_bytes"] > 0, key

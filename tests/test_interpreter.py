@@ -1,0 +1,197 @@
+"""MicroInterpreter behaviour (paper §4.1–4.5)."""
+
+import numpy as np
+import pytest
+
+from repro.apps import build_conv_reference, build_hotword
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, ArenaOverflowError, GraphBuilder,
+                        GreedyMemoryPlanner, LinearMemoryPlanner,
+                        MicroInterpreter, MicroModel,
+                        MicroMutableOpResolver, OpCode, OpResolutionError,
+                        SharedArenaState, export)
+
+
+@pytest.fixture(scope="module")
+def conv_model():
+    return MicroModel(export(build_conv_reference()))
+
+
+@pytest.fixture(scope="module")
+def resolver():
+    return AllOpsResolver()
+
+
+def _run(model, resolver, x, **kw):
+    size = MicroInterpreter.required_arena_size(model, resolver)
+    it = MicroInterpreter(model, resolver, size, **kw)
+    it.set_input(0, x)
+    it.invoke()
+    return it
+
+
+def test_invoke_matches_repeatedly(conv_model, resolver):
+    x = np.random.default_rng(0).normal(0, 1, (1, 16, 16, 1)
+                                        ).astype(np.float32)
+    it = _run(conv_model, resolver, x)
+    first = it.output(0)
+    assert first.shape == (1, 10)
+    assert np.isfinite(first).all()
+    np.testing.assert_allclose(first.sum(), 1.0, rtol=1e-5)
+    it.set_input(0, x)
+    it.invoke()
+    np.testing.assert_array_equal(it.output(0), first)
+
+
+def test_arena_too_small_raises(conv_model, resolver):
+    with pytest.raises(ArenaOverflowError):
+        MicroInterpreter(conv_model, resolver, 512)
+
+
+def test_unregistered_op_raises(conv_model):
+    r = MicroMutableOpResolver().add_many(
+        [OpCode.CONV_2D, OpCode.MAX_POOL_2D])   # missing FC etc.
+    with pytest.raises(OpResolutionError):
+        MicroInterpreter(conv_model, r, 1 << 20)
+
+
+def test_selective_resolver_smaller_than_all_ops(conv_model):
+    minimal = MicroMutableOpResolver().add_many(
+        [OpCode.CONV_2D, OpCode.MAX_POOL_2D, OpCode.MEAN,
+         OpCode.FULLY_CONNECTED, OpCode.SOFTMAX])
+    assert minimal.code_nbytes() < AllOpsResolver().code_nbytes()
+    x = np.zeros((1, 16, 16, 1), np.float32)
+    it = _run(conv_model, minimal, x)
+    assert it.output(0).shape == (1, 10)
+
+
+def test_planner_choice_changes_bytes_not_results(conv_model, resolver):
+    x = np.random.default_rng(1).normal(0, 1, (1, 16, 16, 1)
+                                        ).astype(np.float32)
+    def run_with(planner):
+        it = MicroInterpreter(conv_model, resolver, 1 << 20,
+                              planner=planner)
+        it.set_input(0, x)
+        it.invoke()
+        return it
+
+    it_ffd = run_with(GreedyMemoryPlanner())
+    it_lin = run_with(LinearMemoryPlanner())
+    np.testing.assert_array_equal(it_ffd.output(0), it_lin.output(0))
+    assert (it_ffd.arena_used_bytes()["nonpersistent"]
+            <= it_lin.arena_used_bytes()["nonpersistent"])
+
+
+def test_offline_plan_used_and_matches(resolver):
+    gb = build_conv_reference()
+    blob = export(gb, offline_plan=True)
+    model = MicroModel(blob)
+    assert "OfflineMemoryAllocation" in model.metadata
+    x = np.random.default_rng(2).normal(0, 1, (1, 16, 16, 1)
+                                        ).astype(np.float32)
+    it = _run(model, resolver, x)
+    assert it.planner_name == "offline"
+    it2 = _run(model, resolver, x, prefer_offline_plan=False)
+    assert it2.planner_name == "greedy_ffd"
+    np.testing.assert_array_equal(it.output(0), it2.output(0))
+
+
+def test_no_allocation_after_init(conv_model, resolver):
+    """The arena is frozen after init; invoke must not allocate from it."""
+    x = np.zeros((1, 16, 16, 1), np.float32)
+    it = _run(conv_model, resolver, x)
+    assert it.arena.frozen
+    before = it.arena_used_bytes()
+    for _ in range(3):
+        it.set_input(0, x)
+        it.invoke()
+    assert it.arena_used_bytes() == before
+
+
+def test_variable_tensors_persist_and_reset(resolver):
+    """SVDF state is a persistent (interpreter-lifetime) variable tensor:
+    streaming the same frame twice gives different outputs (state moved),
+    and reset_variable_tensors() restores the initial response."""
+    model = MicroModel(export(build_hotword(n_layers=1)))
+    size = MicroInterpreter.required_arena_size(model, resolver)
+    it = MicroInterpreter(model, resolver, size)
+    x = np.random.default_rng(3).normal(0, 1, (1, 40)).astype(np.float32)
+    it.set_input(0, x)
+    it.invoke()
+    first = it.output(0)
+    it.set_input(0, x)
+    it.invoke()
+    second = it.output(0)
+    assert not np.array_equal(first, second)
+    it.reset_variable_tensors()
+    it.set_input(0, x)
+    it.invoke()
+    np.testing.assert_allclose(it.output(0), first, rtol=1e-5, atol=1e-6)
+
+
+def test_int8_model_close_to_float(resolver):
+    gb = build_conv_reference()
+    x = np.random.default_rng(4).normal(0, 1, (1, 16, 16, 1)
+                                        ).astype(np.float32)
+    mf = MicroModel(export(gb))
+    itf = _run(mf, resolver, x)
+    want = itf.output(0)
+    ds = representative_dataset(gb)
+    mq = MicroModel(export(gb, representative_dataset=ds,
+                           quantize_int8=True))
+    itq = _run(mq, resolver, x)
+    got = itq.output(0)
+    assert np.abs(got - want).max() < 0.1
+    assert got.argmax() == want.argmax()
+
+
+def test_multitenancy_shared_arena(resolver):
+    """§4.5: two models in one arena — persistent stacks, nonpersistent is
+    the max of the two, results identical to private-arena runs."""
+    m1 = MicroModel(export(build_conv_reference()))
+    m2 = MicroModel(export(build_hotword(n_layers=1)))
+    x1 = np.random.default_rng(5).normal(0, 1, (1, 16, 16, 1)
+                                         ).astype(np.float32)
+    x2 = np.random.default_rng(6).normal(0, 1, (1, 40)).astype(np.float32)
+
+    # private runs
+    p1 = _run(m1, resolver, x1)
+    p2 = _run(m2, resolver, x2)
+
+    # shared arena
+    total = (p1.arena_used_bytes()["total"]
+             + p2.arena_used_bytes()["total"] + 4096)
+    it1 = MicroInterpreter(m1, resolver, total)
+    it2 = MicroInterpreter(m2, resolver, 0, parent=it1)
+    it1.set_input(0, x1)
+    it1.invoke()
+    it2.set_input(0, x2)
+    it2.invoke()
+    np.testing.assert_array_equal(it1.output(0), p1.output(0))
+    np.testing.assert_array_equal(it2.output(0), p2.output(0))
+
+    shared_usage = it1.arena.usage()
+    np1 = p1.arena_used_bytes()["nonpersistent"]
+    np2 = p2.arena_used_bytes()["nonpersistent"]
+    assert shared_usage.nonpersistent == max(np1, np2)   # Figure 5
+    pp1 = p1.arena_used_bytes()["persistent"]
+    pp2 = p2.arena_used_bytes()["persistent"]
+    assert shared_usage.persistent >= pp1 + pp2 - 32     # stacks (±align)
+
+
+def test_interleaved_multitenant_invokes(resolver):
+    """Models alternate invocations sharing one nonpersistent buffer."""
+    m1 = MicroModel(export(build_conv_reference()))
+    m2 = MicroModel(export(build_hotword(n_layers=1)))
+    it1 = MicroInterpreter(m1, resolver, 1 << 22)
+    it2 = MicroInterpreter(m2, resolver, 0, parent=it1)
+    x1 = np.zeros((1, 16, 16, 1), np.float32)
+    x2 = np.zeros((1, 40), np.float32)
+    outs = []
+    for _ in range(2):
+        it1.set_input(0, x1)
+        it1.invoke()
+        outs.append(it1.output(0).copy())
+        it2.set_input(0, x2)
+        it2.invoke()
+    np.testing.assert_array_equal(outs[0], outs[1])

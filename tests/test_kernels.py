@@ -1,0 +1,233 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus the vendor-tag swap behaviour."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+def _rand(rng, shape, dtype):
+    if dtype == np.int8:
+        return rng.integers(-128, 128, shape, dtype=np.int8)
+    return rng.normal(0, 1, shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 16, 8), (8, 64, 32), (128, 128, 128), (100, 96, 40),
+    (256, 512, 64), (3, 300, 7),
+])
+def test_quant_matmul_shapes(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    x = _rand(rng, (m, k), np.int8)
+    w = _rand(rng, (k, n), np.int8)
+    bias = rng.integers(-500, 500, (n,), dtype=np.int32)
+    scale = rng.uniform(1e-4, 5e-3, (n,)).astype(np.float32)
+    x_zp, out_zp = int(rng.integers(-10, 10)), int(rng.integers(-10, 10))
+    got = ops.quant_matmul(jnp.asarray(x), jnp.asarray(w),
+                           jnp.asarray(bias), x_zp, jnp.asarray(scale),
+                           out_zp)
+    want = R.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w),
+                              jnp.asarray(bias), x_zp, jnp.asarray(scale),
+                              out_zp)
+    diff = np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32))
+    assert diff.max() <= 1                 # f32-requant vs round: ≤1 LSB
+
+
+def test_quant_matmul_no_bias():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (16, 32), np.int8)
+    w = _rand(rng, (32, 16), np.int8)
+    scale = np.full((16,), 1e-3, np.float32)
+    got = ops.quant_matmul(jnp.asarray(x), jnp.asarray(w), None, 0,
+                           jnp.asarray(scale), 0)
+    want = R.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), None, 0,
+                              jnp.asarray(scale), 0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 2, 2, 128, 32), (2, 4, 2, 256, 64), (1, 8, 1, 128, 64),
+    (1, 4, 4, 512, 16),
+])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_flash_attention_sweep(b, h, kh, s, d, dtype):
+    rng = np.random.default_rng(b + h + s)
+    if dtype == "bfloat16":
+        import ml_dtypes
+        dtype = ml_dtypes.bfloat16
+        tol = 2e-2
+    else:
+        tol = 2e-5
+    q = rng.normal(0, 1, (b, h, s, d)).astype(dtype)
+    k = rng.normal(0, 1, (b, kh, s, d)).astype(dtype)
+    v = rng.normal(0, 1, (b, kh, s, d)).astype(dtype)
+    got = ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                              jnp.asarray(v), causal=True)
+    want = R.mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                     causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.default_rng(window)
+    q = rng.normal(0, 1, (1, 2, 256, 32)).astype(np.float32)
+    k = rng.normal(0, 1, (1, 2, 256, 32)).astype(np.float32)
+    v = rng.normal(0, 1, (1, 2, 256, 32)).astype(np.float32)
+    got = ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                              jnp.asarray(v), causal=True, window=window)
+    want = R.mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                     causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(7)
+    q = rng.normal(0, 1, (1, 2, 128, 32)).astype(np.float32)
+    k = rng.normal(0, 1, (1, 2, 128, 32)).astype(np.float32)
+    v = rng.normal(0, 1, (1, 2, 128, 32)).astype(np.float32)
+    got = ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                              jnp.asarray(v), causal=False)
+    want = R.mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                     causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 4, 1, 256, 64), (2, 8, 2, 512, 64), (4, 4, 4, 128, 32),
+])
+@pytest.mark.parametrize("window", [None, 64])
+def test_decode_attention_sweep(b, h, kh, s, d, window):
+    rng = np.random.default_rng(b * 10 + h)
+    q = rng.normal(0, 1, (b, h, d)).astype(np.float32)
+    k = rng.normal(0, 1, (b, kh, s, d)).astype(np.float32)
+    v = rng.normal(0, 1, (b, kh, s, d)).astype(np.float32)
+    lengths = rng.integers(max(1, window or 1), s + 1, (b,)
+                           ).astype(np.int32)
+    got = ops.decode_attention(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), lengths, window=window)
+    want = R.decode_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v), jnp.asarray(lengths),
+                                  window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_len1():
+    """Degenerate cache with a single valid entry: output == v[0]."""
+    rng = np.random.default_rng(3)
+    q = rng.normal(0, 1, (1, 2, 16)).astype(np.float32)
+    k = rng.normal(0, 1, (1, 2, 128, 16)).astype(np.float32)
+    v = rng.normal(0, 1, (1, 2, 128, 16)).astype(np.float32)
+    got = ops.decode_attention(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), np.array([1], np.int32))
+    np.testing.assert_allclose(np.asarray(got)[0], v[0, :, 0, :],
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,g,n", [
+    (1, 128, 2, 16, 1, 32), (2, 256, 4, 32, 2, 64), (1, 512, 2, 64, 1, 16),
+])
+def test_ssd_scan_sweep(b, s, h, p, g, n):
+    rng = np.random.default_rng(s + h)
+    x = rng.normal(0, 1, (b, s, h, p)).astype(np.float32)
+    dt = rng.uniform(0.001, 0.1, (b, s, h)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (h,)).astype(np.float32)
+    Bm = rng.normal(0, 1, (b, s, g, n)).astype(np.float32)
+    Cm = rng.normal(0, 1, (b, s, g, n)).astype(np.float32)
+    D = rng.normal(0, 1, (h,)).astype(np.float32)
+    y, st = ops.ssd_scan(*map(jnp.asarray, (x, dt, A, Bm, Cm, D)))
+    yr, sr = R.ssd_ref(*map(jnp.asarray, (x, dt, A, Bm, Cm, D)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Different chunk sizes must give identical results (the chunked dual
+    form is exact, not an approximation)."""
+    rng = np.random.default_rng(11)
+    args = (rng.normal(0, 1, (1, 256, 2, 16)).astype(np.float32),
+            rng.uniform(0.001, 0.1, (1, 256, 2)).astype(np.float32),
+            -rng.uniform(0.5, 2.0, (2,)).astype(np.float32),
+            rng.normal(0, 1, (1, 256, 1, 32)).astype(np.float32),
+            rng.normal(0, 1, (1, 256, 1, 32)).astype(np.float32),
+            None)
+    y64, s64 = ops.ssd_scan(*args, chunk=64)
+    y128, s128 = ops.ssd_scan(*args, chunk=128)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y128),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s64), np.asarray(s128),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_no_d_skip():
+    rng = np.random.default_rng(13)
+    x = rng.normal(0, 1, (1, 128, 2, 16)).astype(np.float32)
+    dt = rng.uniform(0.001, 0.1, (1, 128, 2)).astype(np.float32)
+    A = -np.ones((2,), np.float32)
+    Bm = rng.normal(0, 1, (1, 128, 1, 16)).astype(np.float32)
+    Cm = rng.normal(0, 1, (1, 128, 1, 16)).astype(np.float32)
+    y, _ = ops.ssd_scan(*map(jnp.asarray, (x, dt, A, Bm, Cm)), None)
+    yr, _ = R.ssd_ref(*map(jnp.asarray, (x, dt, A, Bm, Cm)), None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# vendor-tag swap (§4.8): pallas kernels via the resolver
+# ---------------------------------------------------------------------------
+
+def test_pallas_tag_swaps_into_interpreter():
+    from repro.apps import build_conv_reference
+    from repro.apps.models import representative_dataset
+    from repro.core import (AllOpsResolver, MicroInterpreter, MicroModel,
+                            export)
+    import repro.kernels.ops  # noqa: F401  (registers pallas tag)
+
+    gb = build_conv_reference()
+    ds = representative_dataset(gb, n=2)
+    model = MicroModel(export(gb, representative_dataset=ds,
+                              quantize_int8=True))
+    x = np.random.default_rng(5).normal(0, 1, (1, 16, 16, 1)
+                                        ).astype(np.float32)
+
+    ref_res = AllOpsResolver(tags=("reference",))
+    opt_res = AllOpsResolver(tags=("pallas", "reference"))
+    fc_ref = ref_res.resolve(2)           # FULLY_CONNECTED
+    fc_opt = opt_res.resolve(2)
+    assert fc_ref.tag == "reference" and fc_opt.tag == "pallas"
+
+    outs = []
+    for res in (ref_res, opt_res):
+        size = MicroInterpreter.required_arena_size(model, res)
+        it = MicroInterpreter(model, res, size)
+        it.set_input(0, x)
+        it.invoke()
+        outs.append(it.output(0))
+    # optimized-vs-reference may differ by ≤1 LSB of the output scale
+    assert np.abs(outs[0] - outs[1]).max() <= 1.5 / 256.0

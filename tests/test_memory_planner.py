@@ -1,0 +1,130 @@
+"""Memory planner invariants (paper §4.4.2, Figure 4) incl. property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory_planner import (BufferRequest, GreedyMemoryPlanner,
+                                       LinearMemoryPlanner, MemoryPlan,
+                                       OfflineMemoryPlanner,
+                                       lifetimes_from_graph)
+
+
+def _reqs(tuples):
+    return [BufferRequest(nb, f, l, f"b{i}")
+            for i, (nb, f, l) in enumerate(tuples)]
+
+
+def test_ffd_reuses_disjoint_lifetimes():
+    reqs = _reqs([(1024, 0, 1), (1024, 2, 3), (1024, 4, 5)])
+    plan = GreedyMemoryPlanner().plan(reqs)
+    plan.validate()
+    assert plan.total_bytes == 1024        # all three share one slot
+    linear = LinearMemoryPlanner().plan(reqs)
+    assert linear.total_bytes == 3 * 1024
+
+
+def test_ffd_keeps_live_buffers_apart():
+    reqs = _reqs([(100, 0, 5), (100, 0, 5), (100, 0, 5)])
+    plan = GreedyMemoryPlanner().plan(reqs)
+    plan.validate()
+    assert plan.total_bytes >= 300
+
+
+def test_ffd_figure4_example():
+    # overlapping chain: A feeds B feeds C; A dies when B is born etc.
+    reqs = _reqs([(4096, 0, 1), (2048, 1, 2), (4096, 2, 3)])
+    plan = GreedyMemoryPlanner().plan(reqs)
+    plan.validate()
+    # A and C can share; B must coexist with both
+    assert plan.total_bytes <= 4096 + 2048 + 16
+
+
+def test_validate_catches_overlap():
+    reqs = _reqs([(100, 0, 2), (100, 1, 3)])
+    bad = MemoryPlan([0, 50], 150, reqs)
+    with pytest.raises(AssertionError):
+        bad.validate()
+
+
+def test_offline_plan_roundtrip():
+    reqs = _reqs([(512, 0, 1), (256, 1, 2), (512, 2, 3)])
+    plan = GreedyMemoryPlanner().plan(reqs)
+    md = plan.to_metadata()
+    offline = OfflineMemoryPlanner(md)
+    replay = offline.plan(reqs)
+    assert replay.offsets == plan.offsets
+    assert replay.total_bytes == plan.total_bytes
+
+
+def test_offline_plan_length_mismatch_raises():
+    plan = GreedyMemoryPlanner().plan(_reqs([(512, 0, 1)]))
+    offline = OfflineMemoryPlanner(plan.to_metadata())
+    with pytest.raises(ValueError):
+        offline.plan(_reqs([(512, 0, 1), (128, 0, 0)]))
+
+
+def test_lifetimes_from_graph():
+    # op0: in=t0 out=t1 ; op1: in=t1 out=t2 ; op2: in=t1,t2 out=t3
+    reqs, ids = lifetimes_from_graph(
+        3,
+        op_inputs=[[0], [1], [1, 2]],
+        op_outputs=[[1], [2], [3]],
+        tensor_nbytes={0: 16, 1: 16, 2: 16, 3: 16},
+        graph_inputs=[0],
+        graph_outputs=[3],
+    )
+    by_id = dict(zip(ids, reqs))
+    assert by_id[0].first_use == 0 and by_id[0].last_use == 0
+    assert by_id[1].first_use == 0 and by_id[1].last_use == 2
+    assert by_id[2].first_use == 1 and by_id[2].last_use == 2
+    assert by_id[3].first_use == 2 and by_id[3].last_use == 2
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+buffer_st = st.tuples(
+    st.integers(min_value=0, max_value=4096),      # nbytes
+    st.integers(min_value=0, max_value=20),        # first
+    st.integers(min_value=0, max_value=20),        # duration
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(buffer_st, min_size=1, max_size=24))
+def test_property_ffd_valid_and_never_worse_than_linear(raw):
+    reqs = [BufferRequest(nb, f, f + d, f"b{i}")
+            for i, (nb, f, d) in enumerate(raw)]
+    ffd = GreedyMemoryPlanner().plan(reqs)
+    ffd.validate()                     # no time+space overlap, in bounds
+    linear = LinearMemoryPlanner().plan(reqs)
+    # ≤ linear modulo one alignment pad (FFD places big-first, which can
+    # cost one align_up over linear's packing order)
+    assert ffd.total_bytes <= linear.total_bytes + 15
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(buffer_st, min_size=1, max_size=16))
+def test_property_ffd_at_least_peak_demand(raw):
+    """Plan size can never be below the peak concurrent demand."""
+    reqs = [BufferRequest(nb, f, f + d, f"b{i}")
+            for i, (nb, f, d) in enumerate(raw)]
+    plan = GreedyMemoryPlanner().plan(reqs)
+    peak = 0
+    for t in range(0, 45):
+        live = sum(r.nbytes for r in reqs
+                   if r.first_use <= t <= r.last_use)
+        peak = max(peak, live)
+    assert plan.total_bytes >= peak
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(buffer_st, min_size=1, max_size=16))
+def test_property_offsets_aligned(raw):
+    reqs = [BufferRequest(nb, f, f + d, f"b{i}")
+            for i, (nb, f, d) in enumerate(raw)]
+    plan = GreedyMemoryPlanner().plan(reqs)
+    for off in plan.offsets:
+        assert off % 16 == 0

@@ -1,0 +1,99 @@
+"""Property tests on the MoE capacity-dispatch invariants (hypothesis).
+
+Invariants:
+  * every kept (token, k) pair lands in the queue slot of the expert it
+    was routed to, at a position < capacity;
+  * no expert receives more than `capacity` tokens;
+  * combine weights are the normalized top-k router probabilities for
+    kept slots and 0 for dropped/dummy slots;
+  * with a dropless capacity factor nothing is dropped and the block
+    output equals the dense mixture of the same experts.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.common import ModelConfig
+from repro.models.lm import moe_capacity, moe_dispatch
+
+
+def _cfg(e, k, cf):
+    base = get_config("qwen3-moe-30b-a3b", reduced=True)
+    return dataclasses.replace(base, n_experts=e, top_k=k,
+                               capacity_factor=cf)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]), st.integers(8, 64))
+def test_dispatch_invariants(seed, e, k, t):
+    cfg = _cfg(e, k, 1.25)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(0, 1, (1, t, e)), jnp.float32)
+    cap = moe_capacity(cfg, t)
+    dispatch, combine, aux = jax.jit(
+        lambda l: moe_dispatch(l, cfg, cap))(logits)
+    dispatch = np.asarray(dispatch)[0]          # (E*C,)
+    combine = np.asarray(combine)[0]
+    assert dispatch.shape == (e * cap,)
+    # capacity respected: each expert's queue has exactly `cap` slots
+    per_expert = dispatch.reshape(e, cap)
+    for ei in range(e):
+        kept = per_expert[ei][per_expert[ei] < t]
+        assert len(kept) <= cap
+        # every kept token actually routed to this expert (top-k)
+        probs = np.asarray(jax.nn.softmax(logits[0], axis=-1))
+        for tok in kept:
+            topk = np.argsort(probs[tok])[-k:]
+            assert ei in topk, (ei, tok, topk)
+    # dummy slots have zero combine weight
+    assert (combine[dispatch == t] == 0).all()
+    # kept combine weights are positive and <= 1
+    kept_w = combine[dispatch < t]
+    assert (kept_w >= 0).all() and (kept_w <= 1 + 1e-6).all()
+    assert np.isfinite(float(aux)) and float(aux) > 0
+
+
+def test_dropless_matches_dense_mixture():
+    """capacity_factor high enough -> block output == explicit dense
+    top-k mixture computed with plain numpy-style einsums."""
+    cfg = _cfg(4, 2, 16.0)
+    key = jax.random.PRNGKey(0)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    p = {"router": jax.random.normal(key, (d, e), jnp.float32) * 0.1,
+         "experts": {
+             "wi": jax.random.normal(key, (e, d, f)) * 0.05,
+             "wg": jax.random.normal(jax.random.fold_in(key, 1),
+                                     (e, d, f)) * 0.05,
+             "wo": jax.random.normal(jax.random.fold_in(key, 2),
+                                     (e, f, d)) * 0.05}}
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 8, d))
+    from repro.models.lm import moe_block
+    y, aux = jax.jit(lambda p, x: moe_block(p, cfg, x, data_shards=1)
+                     )(p, x)
+
+    # dense reference: run every expert on every token, weight by the
+    # renormalized top-k probabilities
+    xt = x.reshape(-1, d)
+    probs = jax.nn.softmax(xt.astype(jnp.float32) @ p["router"], -1)
+    top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / top_w.sum(-1, keepdims=True)
+    hid = jnp.einsum("td,edf->tef", xt, p["experts"]["wi"])
+    gate = jnp.einsum("td,edf->tef", xt, p["experts"]["wg"])
+    out_e = jnp.einsum("tef,efd->ted", jax.nn.silu(gate) * hid,
+                       p["experts"]["wo"])
+    mask = jax.nn.one_hot(top_ids, e).sum(1)        # (T,E) 0/1
+    w_full = jnp.zeros_like(probs)
+    for kk in range(cfg.top_k):
+        w_full = w_full + jax.nn.one_hot(top_ids[:, kk], e) \
+            * top_w[:, kk:kk + 1]
+    want = jnp.einsum("te,ted->td", w_full, out_e).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-3)

@@ -1,0 +1,45 @@
+"""MicroProfiler (§5.4) — per-op attribution identifies the bottleneck
+operator and its eager totals are consistent."""
+
+import numpy as np
+
+from repro.apps import build_conv_reference, build_vww
+from repro.core import AllOpsResolver, MicroInterpreter, MicroModel, export
+from repro.core.profiler import MicroProfiler
+
+
+def _interp(gb):
+    resolver = AllOpsResolver()
+    model = MicroModel(export(gb))
+    size = MicroInterpreter.required_arena_size(model, resolver)
+    return MicroInterpreter(model, resolver, size)
+
+
+def test_profile_conv_reference():
+    gb = build_conv_reference()
+    interp = _interp(gb)
+    rng = np.random.default_rng(0)
+    xs = [rng.normal(0, 1, gb.tensors[t].shape).astype(np.float32)
+          for t in gb.inputs]
+    rep = MicroProfiler.profile(interp, xs, warmup=1, iters=3)
+    assert len(rep.per_op) == len(interp._op_plans)
+    assert rep.eager_total_us > 0 and rep.fused_total_us > 0
+    assert all(p.wall_us >= 0 for p in rep.per_op)
+    # conv model: convolutions must dominate (the paper's premise that
+    # linear algebra dominates run time)
+    assert rep.bottleneck() in ("CONV_2D", "FULLY_CONNECTED",
+                                "DEPTHWISE_CONV_2D")
+    text = rep.render()
+    assert "bottlenecks first" in text and "CONV_2D" in text
+
+
+def test_profile_vww_bottleneck_is_conv():
+    gb = build_vww()
+    interp = _interp(gb)
+    rng = np.random.default_rng(1)
+    xs = [rng.normal(0, 1, gb.tensors[t].shape).astype(np.float32)
+          for t in gb.inputs]
+    rep = MicroProfiler.profile(interp, xs, warmup=1, iters=2)
+    by_type = rep.by_op_type()
+    conv_us = sum(v for k, v in by_type.items() if "CONV" in k)
+    assert conv_us > 0.5 * rep.eager_total_us, by_type

@@ -1,0 +1,94 @@
+"""Quantization math: bit-faithfulness of the gemmlowp fixed-point path."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as Q
+
+
+def test_quantize_multiplier_decomposition():
+    for m in [0.25, 0.5, 0.9999, 1.0, 1.5, 1e-3, 0.0003]:
+        q, s = Q.quantize_multiplier(m)
+        approx = q / (1 << 31) * (2.0 ** s)
+        assert abs(approx - m) / m < 1e-6
+
+
+def test_quantize_multiplier_zero():
+    assert Q.quantize_multiplier(0.0) == (0, 0)
+
+
+def test_quantize_multiplier_negative_raises():
+    with pytest.raises(ValueError):
+        Q.quantize_multiplier(-0.5)
+
+
+def test_choose_quant_params_covers_range():
+    s, z = Q.choose_quant_params(-6.0, 6.0)
+    assert Q.INT8_MIN <= z <= Q.INT8_MAX
+    lo = (Q.INT8_MIN - z) * s
+    hi = (Q.INT8_MAX - z) * s
+    # covers [rmin, rmax] to within one quantization step (zp nudging)
+    assert lo <= -6.0 + s and hi >= 6.0 - s
+
+
+def test_choose_quant_params_straddles_zero():
+    s, z = Q.choose_quant_params(2.0, 6.0)   # must widen to include 0
+    lo = (Q.INT8_MIN - z) * s
+    hi = (Q.INT8_MAX - z) * s
+    assert lo <= 0.0 <= hi                    # zero exactly representable
+    assert abs((z - z) * s) == 0.0
+
+
+def test_per_channel_weight_quantization_roundtrip():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.3, (16, 3, 3, 8)).astype(np.float32)
+    qw, scales = Q.quantize_weights_per_channel(w, axis=0)
+    assert qw.dtype == np.int8 and scales.shape == (16,)
+    deq = qw.astype(np.float32) * scales[:, None, None, None]
+    err = np.abs(deq - w).max()
+    assert err <= scales.max() * 0.5 + 1e-7   # within half an LSB per chan
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.integers(min_value=-(2 ** 28), max_value=2 ** 28),   # accumulator
+    st.floats(min_value=1e-6, max_value=0.9999),            # real multiplier
+)
+def test_property_fixed_point_requant_within_1lsb(acc, real_mult):
+    """TFLM's int-only requant must match float scaling within 1 LSB."""
+    mult, shift = Q.quantize_multiplier(real_mult)
+    got = Q.multiply_by_quantized_multiplier_np(
+        np.array([acc], np.int32), mult, shift)[0]
+    want = acc * real_mult
+    assert abs(got - want) <= 1.0 + abs(want) * 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(min_value=-(2 ** 20), max_value=2 ** 20),
+                min_size=1, max_size=32),
+       st.floats(min_value=1e-4, max_value=0.999))
+def test_property_jnp_matches_numpy_requant(accs, real_mult):
+    """The traced (jnp) requant path is bit-identical to the numpy twin."""
+    import jax.numpy as jnp
+
+    mult, shift = Q.quantize_multiplier(real_mult)
+    a = np.asarray(accs, np.int32)
+    want = Q.multiply_by_quantized_multiplier_np(a, mult, shift)
+    with Q.x64_scope():
+        got = np.asarray(Q.multiply_by_quantized_multiplier(
+            jnp.asarray(a), mult, shift))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_requantize_np_saturates():
+    out = Q.requantize_np(np.array([10 ** 9], np.int32), 1 << 30, 1, 0)
+    assert out[0] == Q.INT8_MAX
+    out = Q.requantize_np(np.array([-10 ** 9], np.int32), 1 << 30, 1, 0)
+    assert out[0] == Q.INT8_MIN
+
+
+def test_bias_quantization():
+    b = np.array([0.5, -0.25], np.float32)
+    bq = Q.quantize_bias(b, 0.02, np.array([0.01, 0.01]))
+    np.testing.assert_array_equal(bq, [2500, -1250])

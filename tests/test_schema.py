@@ -1,0 +1,87 @@
+"""µFB serialization: round trip, zero-copy, source embedding."""
+
+import numpy as np
+import pytest
+
+from repro.core.schema import (MicroModel, OpCode, OpDef, QuantParams,
+                               TensorDef, TensorFlags, model_to_source,
+                               serialize_model)
+
+
+def _toy_blob():
+    tensors = [
+        TensorDef("x", (1, 4), "float32", TensorFlags.IS_MODEL_INPUT),
+        TensorDef("w", (3, 4), "float32"),
+        TensorDef("y", (1, 3), "float32", TensorFlags.IS_MODEL_OUTPUT),
+        TensorDef("wq", (3, 4), "int8", 0,
+                  QuantParams(0.0, 0, np.array([0.1, 0.2, 0.3], np.float32),
+                              0)),
+    ]
+    ops = [OpDef(OpCode.FULLY_CONNECTED, (0, 1, -1), (2,),
+                 {"activation": "relu"})]
+    w = np.arange(12, dtype=np.float32).reshape(3, 4)
+    wq = (np.arange(12) % 5).astype(np.int8).reshape(3, 4)
+    return serialize_model(tensors, ops, [0], [2], {1: w, 3: wq},
+                           {"note": b"hello"}), w, wq
+
+
+def test_roundtrip():
+    blob, w, wq = _toy_blob()
+    m = MicroModel(blob)
+    assert m.inputs == (0,) and m.outputs == (2,)
+    assert [t.name for t in m.tensors] == ["x", "w", "y", "wq"]
+    assert m.tensors[1].is_const and not m.tensors[0].is_const
+    assert m.operators[0].opcode == OpCode.FULLY_CONNECTED
+    assert m.operators[0].inputs == (0, 1, -1)
+    assert m.operators[0].params == {"activation": "relu"}
+    assert m.metadata["note"] == b"hello"
+    np.testing.assert_array_equal(m.const_data(1), w)
+    np.testing.assert_array_equal(m.const_data(3), wq)
+    np.testing.assert_allclose(m.tensors[3].quant.channel_scales,
+                               [0.1, 0.2, 0.3], rtol=1e-6)
+
+
+def test_zero_copy_views():
+    blob, w, _ = _toy_blob()
+    m = MicroModel(blob)
+    view = m.const_data(1)
+    # a frombuffer view over the blob: read-only and non-owning
+    assert not view.flags.owndata
+    assert not view.flags.writeable
+
+
+def test_const_data_alignment():
+    blob, _, _ = _toy_blob()
+    m = MicroModel(blob)
+    for i, t in enumerate(m.tensors):
+        if t.is_const:
+            assert t.buffer_offset % 16 == 0
+
+
+def test_bad_magic_rejected():
+    blob, _, _ = _toy_blob()
+    with pytest.raises(ValueError):
+        MicroModel(b"XXXX" + blob[4:])
+
+
+def test_truncated_blob_rejected():
+    blob, _, _ = _toy_blob()
+    with pytest.raises(ValueError):
+        MicroModel(blob[:-8])
+
+
+def test_model_to_source_roundtrip():
+    blob, w, _ = _toy_blob()
+    src = model_to_source(blob, "g_model")
+    ns: dict = {}
+    exec(src, ns)
+    assert ns["g_model_len"] == len(blob)
+    m = MicroModel(ns["g_model"])
+    np.testing.assert_array_equal(m.const_data(1), w)
+
+
+def test_nonconst_tensor_data_access_raises():
+    blob, _, _ = _toy_blob()
+    m = MicroModel(blob)
+    with pytest.raises(ValueError):
+        m.const_data(0)

@@ -1,0 +1,84 @@
+"""Sharding-policy validation for every assigned architecture on the
+production mesh shape — divisibility of every sharded dim, for params,
+batches and caches, without touching real devices (AbstractMesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import (cache_sharding, make_policy,
+                                        param_spec)
+from repro.models import get_model
+from repro.models.registry import SDS
+
+
+def _mesh(multi_pod=False):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _check_divisible(tree_specs, tree_vals, mesh, label):
+    flat_s = jax.tree.leaves(tree_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    flat_v = jax.tree.leaves(tree_vals)
+    assert len(flat_s) == len(flat_v), label
+    for spec, val in zip(flat_s, flat_v):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+            assert val.shape[dim] % size == 0, \
+                (label, spec, val.shape, dim, ax)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    bundle = get_model(cfg)
+    mesh = _mesh(multi_pod)
+    params = jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+    pol = make_policy(cfg, mesh)
+    spec = param_spec(cfg, pol, params)
+    _check_divisible(spec, params, mesh, arch)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    bundle = get_model(cfg)
+    mesh = _mesh()
+    for batch, cl in ((128, 32768), (1, cfg.sliding_window or 8192)):
+        cache = jax.eval_shape(
+            lambda: bundle.empty_cache(batch, cl, cfg.jnp_dtype()))
+        shards = cache_sharding(cfg, mesh, cache, batch)
+        specs = jax.tree.map(lambda s: s.spec, shards)
+        _check_divisible(specs, cache, mesh, f"{arch}:cache{batch}")
+
+
+def test_heads_fallback_policy():
+    mesh = _mesh()
+    for arch, want in (("qwen3-32b", "heads"), ("phi4-mini-3.8b",
+                                                "replicated"),
+                       ("paligemma-3b", "replicated"),
+                       ("whisper-large-v3", "replicated"),
+                       ("phi3-mini-3.8b", "heads")):
+        pol = make_policy(get_config(arch), mesh)
+        assert pol.attn_mode == want, (arch, pol.attn_mode)
+
+
+def test_kv_cache_mode_policy():
+    mesh = _mesh()
+    for arch, want in (("phi3-mini-3.8b", "kv_heads"),
+                       ("qwen3-32b", "sequence"),
+                       ("yi-6b", "sequence"),
+                       ("deepseek-moe-16b", "kv_heads")):
+        pol = make_policy(get_config(arch), mesh)
+        assert pol.kv_cache_mode == want, (arch, pol.kv_cache_mode)

@@ -1,0 +1,120 @@
+"""Training substrate tests: optimizer math, loss descent, grad accum,
+checkpoint round-trip, data pipeline invariants."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import PackedLMDataset
+from repro.models import get_model
+from repro.training import (adamw_init, adamw_update, clip_by_global_norm,
+                            cosine_schedule)
+from repro.training.trainer import (TrainState, init_train_state,
+                                    make_train_step)
+
+
+def test_adamw_matches_reference_math():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]], jnp.float32)}
+    g = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.4]], jnp.float32)}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+    new_p, new_st = adamw_update(g, st, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                                 weight_decay=wd)
+    gn = np.asarray(g["w"])
+    m = (1 - b1) * gn
+    v = (1 - b2) * gn ** 2
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    want = np.asarray(p["w"]) - lr * (mhat / (np.sqrt(vhat) + eps)
+                                      + wd * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-6)
+    assert int(new_st.step) == 1
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0, rtol=1e-5)
+    got = np.linalg.norm(np.asarray(clipped["a"]))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.asarray(100))) < float(lr(jnp.asarray(50)))
+    assert float(lr(jnp.asarray(100))) >= 1e-4 - 1e-9   # floor
+
+
+def test_loss_decreases_on_markov_data():
+    """Markov source has learnable structure: 30 steps must cut loss."""
+    cfg = get_config("yi-6b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    state = init_train_state(params)
+    step = jax.jit(make_train_step(m.loss, lr=3e-3, remat=False,
+                                   data_shards=1))
+    ds = PackedLMDataset(cfg, batch=8, seq=32, seed=0)
+    losses = []
+    for _ in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["ce_loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+
+def test_grad_accum_equivalence():
+    """grad_accum=2 must equal a single big-batch step (linear loss)."""
+    cfg = get_config("yi-6b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    ds = PackedLMDataset(cfg, batch=4, seq=16, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+
+    s_big = jax.jit(make_train_step(m.loss, lr=1e-3, remat=False,
+                                    data_shards=1))(
+        init_train_state(params), batch)
+    s_acc = jax.jit(make_train_step(m.loss, lr=1e-3, grad_accum=2,
+                                    remat=False, data_shards=1))(
+        init_train_state(params), batch)
+    # losses close (not identical: per-microbatch mask renorm)
+    assert abs(float(s_big[1]["loss"]) - float(s_acc[1]["loss"])) < 0.1
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(2))
+    state = init_train_state(params)
+    out = save_checkpoint(str(tmp_path), 7, state)
+    assert os.path.exists(os.path.join(out, "manifest.json"))
+    like = jax.tree.map(lambda x: x, state)
+    restored = restore_checkpoint(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_packed_dataset_invariants():
+    cfg = get_config("yi-6b", reduced=True)
+    ds = PackedLMDataset(cfg, batch=4, seq=64, seed=3)
+    eos = cfg.vocab - 1
+    for _ in range(3):
+        b = ds.next_batch()
+        assert b["tokens"].shape == (4, 64)
+        assert b["labels"].shape == (4, 64)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab
+        # label after EOS is masked
+        assert (b["labels"][b["tokens"] == eos] == -1).all()
+        # determinism: same seed -> same stream
+    ds2 = PackedLMDataset(cfg, batch=4, seq=64, seed=3)
+    b1 = PackedLMDataset(cfg, batch=4, seq=64, seed=3).next_batch()
+    b2 = ds2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])

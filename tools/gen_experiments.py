@@ -1,0 +1,73 @@
+"""Regenerate the §Dry-run and §Roofline markdown tables in
+EXPERIMENTS.md from benchmarks/results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python tools/gen_experiments.py   (prints tables)
+"""
+
+import glob
+import json
+import os
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "results", "dryrun")
+
+
+def rows(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        if "__iter" in p:
+            continue
+        d = json.load(open(p))
+        if d["mesh"] != mesh:
+            continue
+        out.append(d)
+    return out
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def dryrun_table(mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | mode | compile_s | args_MiB/dev | "
+          "temp_GiB/dev | flops/dev | coll_GB/dev | top collective |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows(mesh):
+        c = d["collectives"]
+        top = max(c["bytes"], key=lambda k: c["bytes"][k])
+        tops = f"{top} ({c['bytes'][top] / 1e9:.2f} GB x" \
+               f"{int(c['counts'][top])})" if c["bytes"][top] else "-"
+        print(f"| {d['arch']} | {d['shape']} | {d['mode']} "
+              f"| {d['compile_s']} "
+              f"| {d['memory']['argument_bytes'] / 2**20:.0f} "
+              f"| {d['memory']['temp_bytes'] / 2**30:.1f} "
+              f"| {fmt(d['cost']['flops_per_device'])} "
+              f"| {d['collectives']['total_bytes_per_device'] / 1e9:.2f} "
+              f"| {tops} |")
+
+
+def roofline_table(mesh):
+    print(f"\n### Roofline, mesh {mesh} (seconds per step, per device)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "dominant | MODEL_FLOPS | useful_frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in rows(mesh):
+        r = d["roofline"]
+        print(f"| {d['arch']} | {d['shape']} | {fmt(r['compute_s'])} "
+              f"| {fmt(r['memory_s'])} | {fmt(r['collective_s'])} "
+              f"| **{r['dominant'].replace('_s', '')}** "
+              f"| {r['model_flops']:.3g} "
+              f"| {r['useful_flops_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    print("## §Dry-run")
+    dryrun_table("16x16")
+    dryrun_table("2x16x16")
+    print("\n## §Roofline")
+    roofline_table("16x16")
