@@ -15,8 +15,8 @@ import numpy as np
 
 from repro.apps import build_conv_reference, build_hotword, build_vww
 from repro.apps.models import representative_dataset
-from repro.core import (AllOpsResolver, MicroInterpreter, MicroModel,
-                        export)
+from repro.core import (AllOpsResolver, InterpreterPool, MicroInterpreter,
+                        MicroModel, export)
 
 from .common import print_table, save_result, time_call
 
@@ -110,6 +110,70 @@ def bench_model(name: str, gb, quantize: bool) -> dict:
     }
 
 
+def bench_batched(name: str, gb, quantize: bool,
+                  batches=(1, 4, 16)) -> list:
+    """Batched-invoke throughput sweep: per-request dispatch time of ONE
+    vmapped dispatch advancing B lanes vs B sequential single invokes.
+    The interpreter's per-invoke cost is dominated by host dispatch for
+    tiny models — exactly what the batch axis amortizes."""
+    resolver = AllOpsResolver()
+    kwargs = {}
+    if quantize:
+        kwargs = dict(representative_dataset=representative_dataset(gb),
+                      quantize_int8=True)
+    model = MicroModel(export(gb, **kwargs))
+    size = MicroInterpreter.required_arena_size(model, resolver)
+    interp = MicroInterpreter(model, resolver, size)
+
+    rng = np.random.default_rng(0)
+    max_b = max(batches)
+    xs = [[rng.normal(0, 1, gb.tensors[t].shape).astype(np.float32)
+           for t in gb.inputs] for _ in range(max_b)]
+
+    def sequential_one():
+        for pos, x in enumerate(xs[0]):
+            interp.set_input(pos, x)
+        interp.invoke()
+        interp.output(0)
+
+    t_seq = time_call(sequential_one, iters=20)
+
+    rows = []
+    for b in batches:
+        pool = InterpreterPool(model, resolver, batch=b)
+
+        def batched():
+            for lane in range(b):
+                for pos, x in enumerate(xs[lane]):
+                    pool.set_input(lane, pos, x)
+            pool.invoke()
+            pool.outputs(0)
+
+        t_b = time_call(batched, iters=20)
+        per_req = t_b / b
+        rows.append({
+            "model": name + (" int8" if quantize else " float"),
+            "batch": b,
+            "us_per_req_batched": round(per_req * 1e6, 1),
+            "us_per_req_sequential": round(t_seq * 1e6, 1),
+            "speedup": round(t_seq / per_req, 2),
+        })
+    return rows
+
+
+def run_batched() -> list:
+    rows = []
+    for name, builder, quants in (
+            ("conv_reference", build_conv_reference, (False, True)),
+            ("hotword", build_hotword, (False,))):   # SVDF: float only
+        for quantize in quants:
+            rows.extend(bench_batched(name, builder(), quantize))
+    print_table("Batched invoke throughput (B-lane vmapped dispatch)",
+                rows)
+    save_result("BENCH_batched_invoke", rows)
+    return rows
+
+
 def run() -> list:
     rows = []
     for name, builder, quants in (
@@ -125,3 +189,4 @@ def run() -> list:
 
 if __name__ == "__main__":
     run()
+    run_batched()

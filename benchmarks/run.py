@@ -1,6 +1,7 @@
 """Benchmark orchestrator — one entry per paper table/figure:
 
   interpreter_overhead   Fig. 6  total vs calculation cycles
+  batched_invoke         batched-invoke throughput sweep (B ∈ {1,4,16})
   memory_overhead        Tab. 2  persistent/nonpersistent arena split
   planner_bench          Fig. 4  naive vs FFD memory compaction
   kernel_speedup         Fig. 6  reference vs optimized kernels
@@ -22,6 +23,7 @@ def main(argv=None) -> None:
 
     benches = {
         "interpreter_overhead": interpreter_overhead.run,
+        "batched_invoke": interpreter_overhead.run_batched,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,
         "kernel_speedup": kernel_speedup.run,

@@ -6,8 +6,10 @@ from . import quantize  # keep the module visible as repro.core.quantize
 from .arena import ArenaOverflowError, TwoStackArena
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
+from .executor import (AllocationPlan, ArenaPool, CompiledPlan,
+                       InterpreterPool, SharedArenaState)
 from .graph_builder import GraphBuilder
-from .interpreter import MicroInterpreter, SharedArenaState
+from .interpreter import MicroInterpreter
 from .memory_planner import (BufferRequest, GreedyMemoryPlanner,
                              LinearMemoryPlanner, MemoryPlan,
                              OfflineMemoryPlanner)
@@ -20,7 +22,8 @@ from .schema import (MicroModel, OpCode, QuantParams, TensorDef,
 __all__ = [
     "ArenaOverflowError", "TwoStackArena", "export", "fold_constants",
     "quantize", "quantize_graph", "strip_training_ops", "GraphBuilder",
-    "MicroInterpreter",
+    "MicroInterpreter", "AllocationPlan", "ArenaPool", "CompiledPlan",
+    "InterpreterPool",
     "SharedArenaState", "BufferRequest", "GreedyMemoryPlanner",
     "LinearMemoryPlanner", "MemoryPlan", "OfflineMemoryPlanner",
     "AllOpsResolver", "MicroMutableOpResolver", "OpResolutionError",

@@ -1,26 +1,24 @@
-"""MicroInterpreter (paper §4.1–4.2).
+"""MicroInterpreter (paper §4.1–4.2) — thin facade over the executor.
 
 Life cycle, exactly as the paper describes:
 
   1. the application builds an OpResolver (which ops "link in"),
   2. supplies a contiguous memory arena,
-  3. constructs the interpreter — ALL allocation happens now: the op list
-     is walked once, each op's prepare() communicates its memory needs,
-     the memory planner bin-packs the nonpersistent section, and the
-     two-stack arena is frozen,
+  3. constructs the interpreter — ALL allocation happens now: the
+     executor's AllocationPlan walks the op list once, each op's
+     prepare() communicates its memory needs, the memory planner
+     bin-packs the nonpersistent section, and the two-stack arena is
+     frozen,
   4. the application writes inputs and calls invoke() — a blocking call
-     that loops over the topologically sorted op list; no allocation, no
-     graph processing, just dispatch into kernel eval functions,
+     into the executor's CompiledPlan: no allocation, no graph
+     processing, just one jitted dispatch,
   5. outputs are read back from the arena.
 
-JAX adaptation: the nonpersistent arena section is a real flat ``uint8``
-device buffer.  Tensors are static-offset byte ranges; every eval's
-outputs are bitcast and written back at their planned offsets.  The whole
-invoke loop is traced ONCE into a single jitted program whose buffer is
-donated — so steady-state invoke does no Python dispatch and allocates
-nothing beyond the arena it was given (the malloc-free discipline).
-Interpreter "overhead" is the trace+dispatch cost paid at init, matching
-the paper's claim that run-time overhead stays out of the math.
+The plan/trace/dispatch machinery itself lives in ``core/executor.py``
+(AllocationPlan → CompiledPlan → dispatch) so the same compiled layer
+also powers batched invoke (``InterpreterPool``) and the pod-scale
+serving path.  This class only adds the paper's application API and the
+multitenant arena-sharing construction (§4.5).
 
 Constant tensors (weights) are NOT in the arena: they are zero-copy views
 into the model blob, the analogue of TFLM reading weights from flash.
@@ -28,114 +26,21 @@ into the model blob, the analogue of TFLM reading weights from flash.
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import quantize as Q
-from .arena import ArenaOverflowError, TwoStackArena, align_up
-from .memory_planner import (BufferRequest, GreedyMemoryPlanner,
-                             MemoryPlan, OfflineMemoryPlanner,
-                             lifetimes_from_graph)
-from .op_resolver import (MicroMutableOpResolver, PrepareResult, TensorSpec)
-from .schema import MicroModel, OpCode, QuantParams, TensorFlags
-
-# TFLM persistent-arena runtime records (TfLiteTensor ≈ 64 B, node ≈ 48 B);
-# we account the same way so Table-2 numbers are comparable.
-TENSOR_RUNTIME_NBYTES = 64
-NODE_RUNTIME_NBYTES = 48
-
-
-def _itemsize(dtype: str) -> int:
-    return 2 if dtype == "bfloat16" else np.dtype(dtype).itemsize
-
-
-def _spec_nbytes(spec: TensorSpec) -> int:
-    n = 1
-    for d in spec.shape:
-        n *= int(d)
-    return n * _itemsize(spec.dtype)
-
-
-def _jnp_dtype(name: str):
-    return jnp.bfloat16 if name == "bfloat16" else jnp.dtype(name)
-
-
-# ---------------------------------------------------------------------------
-# contexts handed to kernel prepare()/eval() (the TFLM C-API analogue)
-# ---------------------------------------------------------------------------
-
-class PrepareContext:
-    def __init__(self, interp: "MicroInterpreter"):
-        self._it = interp
-
-    def tensor_spec(self, idx: int) -> TensorSpec:
-        return self._it._specs[idx]
-
-    def quant(self, idx: int) -> QuantParams:
-        return self._it.model.tensor(idx).quant
-
-    def const_value(self, idx: int) -> Optional[np.ndarray]:
-        t = self._it.model.tensor(idx)
-        return self._it.model.const_data(idx) if t.is_const else None
-
-    def is_const(self, idx: int) -> bool:
-        return self._it.model.tensor(idx).is_const
-
-
-class EvalContext:
-    __slots__ = ("op_data", "_out_specs", "_out_quants")
-
-    def __init__(self, op_data, out_specs, out_quants):
-        self.op_data = op_data
-        self._out_specs = out_specs
-        self._out_quants = out_quants
-
-    def output_shape(self, k: int) -> Tuple[int, ...]:
-        return self._out_specs[k].shape
-
-    def quant_of_output(self, k: int) -> QuantParams:
-        return self._out_quants[k]
-
-
-# ---------------------------------------------------------------------------
-# shared arena buffer for multitenancy (§4.5)
-# ---------------------------------------------------------------------------
-
-class SharedArenaState:
-    """Holds the one physical nonpersistent buffer multiple interpreters
-    reuse between (non-concurrent) invocations."""
-
-    def __init__(self) -> None:
-        self.nbytes = 0
-        self.buf: Optional[jnp.ndarray] = None
-
-    def ensure(self, nbytes: int) -> None:
-        if nbytes > self.nbytes:
-            self.nbytes = int(nbytes)
-            self.buf = jnp.zeros((self.nbytes,), jnp.uint8)
-
-    def take(self) -> jnp.ndarray:
-        assert self.buf is not None
-        b, self.buf = self.buf, None
-        return b
-
-    def put(self, buf: jnp.ndarray) -> None:
-        self.buf = buf
-
-
-# ---------------------------------------------------------------------------
-
-@dataclass
-class _OpPlan:
-    op: Any                               # schema.OpDef
-    registration: Any                     # OpRegistration
-    prep: PrepareResult
-    eval_ctx: EvalContext
+from .arena import TwoStackArena
+from .executor import (NODE_RUNTIME_NBYTES, TENSOR_RUNTIME_NBYTES,
+                       AllocationPlan, ArenaPool, CompiledPlan, EvalContext,
+                       InterpreterPool, OpPlan, PrepareContext,
+                       SharedArenaState, _jnp_dtype, required_arena_size)
+from .memory_planner import MemoryPlan
+from .op_resolver import MicroMutableOpResolver, TensorSpec
+from .schema import MicroModel
 
 
 class MicroInterpreter:
@@ -148,7 +53,7 @@ class MicroInterpreter:
         arena_size_bytes: int,
         planner: Optional[object] = None,
         prefer_offline_plan: bool = True,
-        shared: Optional[SharedArenaState] = None,
+        shared: Optional[ArenaPool] = None,
         parent: Optional["MicroInterpreter"] = None,
     ):
         self.model = model
@@ -159,183 +64,59 @@ class MicroInterpreter:
             self._shared = parent._shared
         else:
             self.arena = TwoStackArena(arena_size_bytes)
-            self._shared = shared or SharedArenaState()
-        self._specs: List[TensorSpec] = []
-        self._const_pos: Dict[int, int] = {}
-        self._var_pos: Dict[int, int] = {}
-        self._tensor_offset: Dict[int, int] = {}
-        self._plan: Optional[MemoryPlan] = None
-        self._op_plans: List[_OpPlan] = []
+            self._shared = shared or ArenaPool()
         self._inputs: Dict[int, np.ndarray] = {}
         self._invoke_count = 0
-        self._allocate_and_prepare(planner, prefer_offline_plan)
+
+        # phases 1+2: plan, then compile (all cost paid here, at init)
+        self.alloc = AllocationPlan.build(
+            model, op_resolver, self.arena, planner, prefer_offline_plan)
+        self.compiled = CompiledPlan(self.alloc)
+        self._variables: List[jnp.ndarray] = list(self.alloc.init_variables)
+        self._shared.ensure(self.alloc.nonpersistent_nbytes)
         if parent is not None:
             parent.arena.absorb_tenant(self.arena)
 
     # ------------------------------------------------------------------
-    # init phase (TFLM AllocateTensors)
+    # executor-layer views (kept for reporting and the benchmarks)
     # ------------------------------------------------------------------
 
-    def _allocate_and_prepare(self, planner, prefer_offline_plan) -> None:
-        m = self.model
-        # 0. initial specs from the serialized model
-        for t in m.tensors:
-            self._specs.append(TensorSpec(t.shape, t.dtype))
+    @property
+    def planner_name(self) -> str:
+        return self.alloc.planner_name
 
-        # 1. persistent runtime records (tensor structs + node structs)
-        self.arena.allocate_persistent(
-            TENSOR_RUNTIME_NBYTES * len(m.tensors), "tensor_structs")
-        self.arena.allocate_persistent(
-            NODE_RUNTIME_NBYTES * len(m.operators), "node_structs")
+    @property
+    def _specs(self) -> List[TensorSpec]:
+        return self.alloc.specs
 
-        # 2. const tensors -> zero-copy views ("flash"); variables -> tail
-        self._consts: List[jnp.ndarray] = []
-        self._variables: List[jnp.ndarray] = []
-        self._var_specs: List[TensorSpec] = []
-        for i, t in enumerate(m.tensors):
-            if t.is_const:
-                self._const_pos[i] = len(self._consts)
-                self._consts.append(jnp.asarray(m.const_data(i)))
-            elif t.is_variable:
-                self._var_pos[i] = len(self._variables)
-                self.arena.allocate_persistent(t.nbytes, f"variable{i}")
-                self._variables.append(
-                    jnp.zeros(t.shape, _jnp_dtype(t.dtype)))
-                self._var_specs.append(TensorSpec(t.shape, t.dtype))
+    @property
+    def _op_plans(self) -> List[OpPlan]:
+        return self.alloc.op_plans
 
-        # 3. prepare each op in topological order
-        pctx = PrepareContext(self)
-        scratch: Dict[int, List[int]] = {}
-        for oi, op in enumerate(m.operators):
-            reg = self.resolver.resolve(op.opcode)
-            # planning-time temp (paper: the between-stack temp region)
-            self.arena.allocate_temp(256)
-            prep = reg.prepare(pctx, op)
-            self.arena.reset_temp()
-            if prep.persistent_nbytes:
-                self.arena.allocate_persistent(
-                    prep.persistent_nbytes, f"opdata{oi}")
-            assert len(prep.output_specs) == len(op.outputs), \
-                f"{reg.name}: prepare produced {len(prep.output_specs)} " \
-                f"specs for {len(op.outputs)} outputs"
-            for t, spec in zip(op.outputs, prep.output_specs):
-                declared = self._specs[t]
-                if tuple(declared.shape) != tuple(spec.shape):
-                    raise ValueError(
-                        f"op {oi} ({reg.name}): computed output shape "
-                        f"{spec.shape} != serialized {declared.shape}")
-                self._specs[t] = spec
-            if prep.scratch_nbytes:
-                scratch[oi] = list(prep.scratch_nbytes)
-            out_quants = [m.tensor(t).quant for t in op.outputs]
-            ectx = EvalContext(prep.op_data,
-                               [self._specs[t] for t in op.outputs],
-                               out_quants)
-            self._op_plans.append(_OpPlan(op, reg, prep, ectx))
+    @property
+    def _consts(self) -> List[jnp.ndarray]:
+        return self.alloc.consts
 
-        # 4. lifetimes + memory plan for the nonpersistent section
-        planned_nbytes = {
-            i: _spec_nbytes(self._specs[i])
-            for i, t in enumerate(m.tensors)
-            if not t.is_const and not t.is_variable}
-        tensor_requests, tensor_ids = lifetimes_from_graph(
-            len(m.operators),
-            [op.inputs for op in m.operators],
-            [op.outputs for op in m.operators],
-            planned_nbytes, m.inputs, m.outputs, None)
-        scratch_requests, _ = lifetimes_from_graph(
-            len(m.operators), [()] * len(m.operators),
-            [()] * len(m.operators), {}, (), (), scratch)
-        if planner is None:
-            offline = m.metadata.get(OfflineMemoryPlanner.METADATA_KEY)
-            if prefer_offline_plan and offline is not None:
-                planner = OfflineMemoryPlanner(offline)
-            else:
-                planner = GreedyMemoryPlanner()
-        self.planner_name = getattr(planner, "name", type(planner).__name__)
-        self._plan = planner.plan(tensor_requests)
-        for req_idx, tid in enumerate(tensor_ids):
-            if tid >= 0:
-                self._tensor_offset[tid] = self._plan.offsets[req_idx]
-        # op-local scratch is always planned online, even under an offline
-        # tensor plan (TFLM: scratch comes from RequestScratchBufferInArena
-        # at prepare time); it packs into its own region above the tensors.
-        scratch_plan = GreedyMemoryPlanner().plan(scratch_requests) \
-            if scratch_requests else None
-        self._scratch_bytes = scratch_plan.total_bytes if scratch_plan else 0
+    @property
+    def _const_pos(self) -> Dict[int, int]:
+        return self.alloc.const_pos
 
-        # 5. reserve the planned section on the head stack and freeze
-        self.arena.reserve_nonpersistent_section(
-            self._plan.total_bytes + self._scratch_bytes)
-        self.arena.freeze()
+    @property
+    def _var_pos(self) -> Dict[int, int]:
+        return self.alloc.var_pos
 
-        # 6. physical buffer (shared across tenants)
-        self._shared.ensure(self._plan.total_bytes)
+    @property
+    def _tensor_offset(self) -> Dict[int, int]:
+        return self.alloc.tensor_offset
 
-        # 7. trace + compile invoke
-        self._jitted = jax.jit(self._execute, donate_argnums=(0, 1))
+    @property
+    def _plan(self) -> MemoryPlan:
+        return self.alloc.plan
 
-    # ------------------------------------------------------------------
-    # arena byte-view helpers (static offsets; traced inside invoke)
-    # ------------------------------------------------------------------
-
-    def _read(self, buf: jnp.ndarray, tid: int):
-        spec = self._specs[tid]
-        off = self._tensor_offset[tid]
-        nbytes = _spec_nbytes(spec)
-        raw = jax.lax.slice(buf, (off,), (off + nbytes,))
-        dt = _jnp_dtype(spec.dtype)
-        item = _itemsize(spec.dtype)
-        if item == 1:
-            return jax.lax.bitcast_convert_type(raw, dt).reshape(spec.shape)
-        arr = jax.lax.bitcast_convert_type(
-            raw.reshape(nbytes // item, item), dt)
-        return arr.reshape(spec.shape)
-
-    def _write(self, buf: jnp.ndarray, tid: int, value) -> jnp.ndarray:
-        spec = self._specs[tid]
-        off = self._tensor_offset[tid]
-        dt = _jnp_dtype(spec.dtype)
-        value = value.astype(dt).reshape(-1)
-        item = _itemsize(spec.dtype)
-        if item == 1:
-            raw = jax.lax.bitcast_convert_type(value, jnp.uint8)
-        else:
-            raw = jax.lax.bitcast_convert_type(value, jnp.uint8).reshape(-1)
-        return jax.lax.dynamic_update_slice(buf, raw, (off,))
-
-    # ------------------------------------------------------------------
-    # the traced invoke body
-    # ------------------------------------------------------------------
-
-    def _execute(self, buf, variables, consts, inputs):
-        # write model inputs into their planned arena slots
-        for pos, tid in enumerate(self.model.inputs):
-            buf = self._write(buf, tid, inputs[pos])
-        variables = list(variables)
-        for opp in self._op_plans:
-            op = opp.op
-            in_arrays = []
-            for t in op.inputs:
-                if t < 0:
-                    in_arrays.append(None)
-                elif t in self._const_pos:
-                    in_arrays.append(consts[self._const_pos[t]])
-                elif t in self._var_pos:
-                    in_arrays.append(variables[self._var_pos[t]])
-                else:
-                    in_arrays.append(self._read(buf, t))
-            outs = opp.registration.eval(opp.eval_ctx, op, in_arrays)
-            n_out = len(op.outputs)
-            for t, o in zip(op.outputs, outs[:n_out]):
-                buf = self._write(buf, t, o)
-            for t, v in zip(opp.prep.variable_updates, outs[n_out:]):
-                variables[self._var_pos[t]] = v
-        # read the model outputs inside the traced program: the host
-        # then receives small per-output arrays instead of slicing (or
-        # copying) the whole arena per invoke
-        model_outs = tuple(self._read(buf, t) for t in self.model.outputs)
-        return buf, tuple(variables), model_outs
+    @property
+    def _jitted(self):
+        """The one compiled invoke program (dispatch = a single call)."""
+        return self.compiled.jitted
 
     # ------------------------------------------------------------------
     # application API (paper §4.1 steps 4–5)
@@ -343,7 +124,7 @@ class MicroInterpreter:
 
     def set_input(self, pos: int, value: np.ndarray) -> None:
         tid = self.model.inputs[pos]
-        spec = self._specs[tid]
+        spec = self.alloc.specs[tid]
         value = np.asarray(value)
         if tuple(value.shape) != tuple(spec.shape):
             raise ValueError(f"input {pos}: shape {value.shape} != "
@@ -351,10 +132,10 @@ class MicroInterpreter:
         self._inputs[pos] = value.astype(_jnp_dtype(spec.dtype))
 
     def input_spec(self, pos: int) -> TensorSpec:
-        return self._specs[self.model.inputs[pos]]
+        return self.alloc.specs[self.model.inputs[pos]]
 
     def output_spec(self, pos: int) -> TensorSpec:
-        return self._specs[self.model.outputs[pos]]
+        return self.alloc.specs[self.model.outputs[pos]]
 
     def invoke(self) -> None:
         if len(self._inputs) != len(self.model.inputs):
@@ -363,8 +144,8 @@ class MicroInterpreter:
                     for p in range(len(self.model.inputs)))
         buf = self._shared.take()
         with Q.x64_scope():
-            buf, variables, outs = self._jitted(
-                buf, tuple(self._variables), tuple(self._consts), ins)
+            buf, variables, outs = self.compiled.jitted(
+                buf, tuple(self._variables), tuple(self.alloc.consts), ins)
         buf.block_until_ready()
         # outputs are read inside the traced program — the arena stays
         # on device and is donated into the next invoke.  (Copying the
@@ -403,20 +184,18 @@ class MicroInterpreter:
             f"nonpersistent (head):{u['nonpersistent']:>10,} B",
             f"total used:          {u['total']:>10,} B",
             f"planner:             {self.planner_name} "
-            f"({len(self._plan.requests)} buffers -> "
-            f"{self._plan.total_bytes:,} B)",
+            f"({len(self.alloc.plan.requests)} buffers -> "
+            f"{self.alloc.plan.total_bytes:,} B)",
             f"model blob (flash):  {self.model.nbytes():>10,} B",
             f"linked op code:      {self.resolver.code_nbytes():>10,} B",
         ]
         return "\n".join(lines)
 
     def memory_plan(self) -> MemoryPlan:
-        assert self._plan is not None
-        return self._plan
+        return self.alloc.plan
 
     @staticmethod
     def required_arena_size(model: MicroModel,
                             op_resolver: MicroMutableOpResolver,
                             slack: int = 1024) -> int:
-        probe = MicroInterpreter(model, op_resolver, 1 << 30)
-        return align_up(probe.arena.usage().total + slack)
+        return required_arena_size(model, op_resolver, slack)

@@ -162,6 +162,46 @@ class OfflineMemoryPlanner:
         return plan
 
 
+def select_planner(metadata: Dict[str, bytes], planner: Optional[object],
+                   prefer_offline_plan: bool = True):
+    """Planner choice for one model: an explicit planner wins; else the
+    offline plan shipped in model metadata (§4.4.2) when preferred and
+    present; else first-fit decreasing."""
+    if planner is not None:
+        return planner
+    offline = metadata.get(OfflineMemoryPlanner.METADATA_KEY)
+    if prefer_offline_plan and offline is not None:
+        return OfflineMemoryPlanner(offline)
+    return GreedyMemoryPlanner()
+
+
+def plan_nonpersistent(op_inputs, op_outputs, planned_nbytes,
+                       graph_inputs, graph_outputs, scratch, planner
+                       ) -> Tuple[MemoryPlan, Dict[int, int], int]:
+    """Plan a graph's nonpersistent arena section.
+
+    Derives lifetimes for every planned intermediate tensor, runs the
+    planner, and returns ``(plan, tensor_offset, scratch_bytes)``.
+    Op-local scratch is always planned online, even under an offline
+    tensor plan (TFLM: scratch comes from RequestScratchBufferInArena at
+    prepare time); it packs into its own region above the tensors.
+    """
+    n_ops = len(op_inputs)
+    tensor_requests, tensor_ids = lifetimes_from_graph(
+        n_ops, op_inputs, op_outputs, planned_nbytes,
+        graph_inputs, graph_outputs, None)
+    scratch_requests, _ = lifetimes_from_graph(
+        n_ops, [()] * n_ops, [()] * n_ops, {}, (), (), scratch)
+    plan = planner.plan(tensor_requests)
+    tensor_offset = {
+        tid: plan.offsets[req_idx]
+        for req_idx, tid in enumerate(tensor_ids) if tid >= 0}
+    scratch_plan = GreedyMemoryPlanner().plan(scratch_requests) \
+        if scratch_requests else None
+    return plan, tensor_offset, (scratch_plan.total_bytes
+                                 if scratch_plan else 0)
+
+
 def lifetimes_from_graph(
     n_ops: int,
     op_inputs: Sequence[Sequence[int]],

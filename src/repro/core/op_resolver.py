@@ -28,7 +28,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from .schema import OP_NAMES
+from .schema import OP_NAMES, SERVING_OPCODES
 
 REFERENCE_TAG = "reference"
 
@@ -120,6 +120,20 @@ class OpResolutionError(KeyError):
     pass
 
 
+def resolve_chain(opcode: int, tags: Sequence[str]) -> OpRegistration:
+    """Walk the tag priority chain for one opcode (the §4.8 build-tag
+    mechanism).  Shared by the per-model resolver below and by callers
+    that resolve directly against the global registry."""
+    for tag in tags:
+        reg = GLOBAL_REGISTRY.lookup(opcode, tag)
+        if reg is not None:
+            return reg
+    raise OpResolutionError(
+        f"no implementation of {OP_NAMES.get(opcode, opcode)} for "
+        f"tags {tuple(tags)}; available tags: "
+        f"{GLOBAL_REGISTRY.tags_for(opcode)}")
+
+
 class MicroMutableOpResolver:
     """The application-facing resolver: register exactly what you need.
 
@@ -134,15 +148,8 @@ class MicroMutableOpResolver:
         self._linked: Dict[int, OpRegistration] = {}
 
     def add(self, opcode: int) -> "MicroMutableOpResolver":
-        for tag in self.tags:
-            reg = GLOBAL_REGISTRY.lookup(opcode, tag)
-            if reg is not None:
-                self._linked[opcode] = reg
-                return self
-        raise OpResolutionError(
-            f"no implementation of {OP_NAMES.get(opcode, opcode)} for "
-            f"tags {self.tags}; available tags: "
-            f"{GLOBAL_REGISTRY.tags_for(opcode)}")
+        self._linked[opcode] = resolve_chain(opcode, self.tags)
+        return self
 
     def add_many(self, opcodes: Sequence[int]) -> "MicroMutableOpResolver":
         for oc in opcodes:
@@ -173,5 +180,7 @@ class AllOpsResolver(MicroMutableOpResolver):
     def __init__(self, tags: Sequence[str] = (REFERENCE_TAG,)):
         super().__init__(tags)
         for oc in GLOBAL_REGISTRY.opcodes():
+            if oc in SERVING_OPCODES:
+                continue        # pod-scale macro-ops: not micro kernels
             if any(GLOBAL_REGISTRY.lookup(oc, t) for t in tags):
                 self.add(oc)

@@ -38,8 +38,13 @@ def x64_scope():
     silently widen.  TPU-native Pallas kernels instead requantize via f32
     scaling (see kernels/quant_matmul.py) because the MXU int8 pipeline has
     no 64-bit scalar path — a documented hardware adaptation.
+
+    ``jax.enable_x64`` was removed from the top-level namespace in
+    jax 0.4.x; the supported spelling is the context manager in
+    ``jax.experimental``.
     """
-    return jax.enable_x64(True)
+    from jax.experimental import enable_x64
+    return enable_x64(True)
 
 
 # ---------------------------------------------------------------------------

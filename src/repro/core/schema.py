@@ -124,6 +124,19 @@ class OpCode:
     NEG = 38
     MINIMUM = 39
     MAXIMUM = 40
+    # serving macro-ops: the pod-scale engine resolves its compiled
+    # prefill/decode steps through the same vendor-tag registry as the
+    # micro kernels (§4.7–4.8), so TAGS=("pallas", "reference") swaps
+    # optimized serving kernels in with no engine changes
+    SERVING_PREFILL = 41
+    SERVING_DECODE = 42
+
+
+# Pod-scale macro-ops: resolvable through the tag chain but never part
+# of a µFB graph, so AllOpsResolver must not link them (they would
+# distort the Table-2 code-size accounting depending on import order).
+SERVING_OPCODES = frozenset({OpCode.SERVING_PREFILL,
+                             OpCode.SERVING_DECODE})
 
 
 OP_NAMES = {v: k for k, v in vars(OpCode).items() if not k.startswith("_")}

@@ -311,6 +311,8 @@ def cache_sharding(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
             return P(None, b_ax, None, None)
         return P(*([None] * nd))
 
-    return jax.tree.map_with_path(
+    # jax 0.4.x spells this jax.tree_util.tree_map_with_path; the
+    # jax.tree.map_with_path alias only exists in later releases
+    return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf)),
         cache_tree)

@@ -104,7 +104,7 @@ def decode_attention_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
                           window=window),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM),
             pl.BlockSpec((1, 1, group, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ik: (b_, h_, ik, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ik: (b_, h_, ik, 0)),

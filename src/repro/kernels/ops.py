@@ -181,3 +181,37 @@ class PallasAttention:
         q, k, v = inputs
         return [flash_attention(q, k, v,
                                 causal=op.params.get("causal", True))]
+
+
+# ---------------------------------------------------------------------------
+# vendor-tag registration for the SERVING path (§4.8 at pod scale)
+# ---------------------------------------------------------------------------
+
+@register_op(OpCode.SERVING_DECODE, tag="pallas")
+class PallasServingDecode:
+    """Optimized pod-scale decode step: per-layer attention runs on the
+    flash-decoding Pallas kernel for dense-KV families.  prepare()
+    inspects the model family once at engine init and bakes the choice
+    into op_data — families without a dense (B,KH,C,dh) cache (SSM,
+    hybrid) fall back to the bundle's reference decode, the per-kernel
+    fallback the tag chain promises."""
+
+    @staticmethod
+    def prepare(ctx, op):
+        cfg = ctx.bundle.cfg
+        use_kernel = cfg.family in ("dense", "moe")
+        return PrepareResult(output_specs=[],
+                             op_data={"use_kernel": use_kernel})
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        params, cache, tokens, lengths = inputs
+        if not ctx.op_data["use_kernel"]:
+            return ctx.bundle.decode(params, cache, tokens, lengths,
+                                     window=op.params.get("window"))
+        from repro.models import lm
+        # no window= here on purpose: the dense-family reference decode
+        # (lm_decode) attends over the whole valid cache, so the vendor
+        # kernel must too — tag choice may never change semantics
+        return lm.lm_decode(params, ctx.bundle.cfg, cache, tokens,
+                            lengths, attn_impl=decode_attention)

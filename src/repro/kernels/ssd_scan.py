@@ -107,8 +107,8 @@ def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                           has_d=has_d),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),   # A
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),   # D
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM),   # A
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM),   # D
             pl.BlockSpec((1, chunk, 1, p),
                          lambda b_, h_, ic: (b_, ic, h_, 0)),    # x
             pl.BlockSpec((1, chunk, 1),

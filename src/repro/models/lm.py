@@ -230,17 +230,23 @@ def attention_block(p: Params, cfg: ModelConfig, x, *,
 # ---------------------------------------------------------------------------
 
 def decode_attention_block(p: Params, cfg: ModelConfig, x, cache_k, cache_v,
-                           lengths) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                             jnp.ndarray]:
+                           lengths, attn_impl=None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                      jnp.ndarray]:
     """x (B,1,D); cache_k/v (B,KH,C,dh); lengths (B,) = tokens already in
     context (the new token's absolute position).  Ring-buffer update.
-    Returns (out (B,1,D), new_k, new_v)."""
+    Returns (out (B,1,D), new_k, new_v).
+
+    ``attn_impl`` is the vendor-kernel hook (§4.8): when provided it
+    replaces only the attention math — called as
+    ``attn_impl(q (B,H,dh), kc, vc, n_valid) -> (B,H,dh)`` over the
+    already-updated cache; the ring update and output projection stay
+    identical to the reference path."""
     b = x.shape[0]
     h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
     g = h // kh
     c = cache_k.shape[2]
     q, k, v = _proj_qkv(p, cfg, x, lengths[:, None])
-    q = q[:, 0].reshape(b, kh, g, dh)
     slot = (lengths % c).astype(jnp.int32)
     onehot = jax.nn.one_hot(slot, c, dtype=x.dtype)          # (B,C)
     kc = cache_k * (1 - onehot)[:, None, :, None] \
@@ -248,14 +254,18 @@ def decode_attention_block(p: Params, cfg: ModelConfig, x, cache_k, cache_v,
     vc = cache_v * (1 - onehot)[:, None, :, None] \
         + v[:, 0][:, :, None, :] * onehot[:, None, :, None]
     n_valid = jnp.minimum(lengths + 1, c)
-    scale = 1.0 / math.sqrt(dh)
-    logits = jnp.einsum("bkgd,bkcd->bkgc", q, kc,
-                        preferred_element_type=jnp.float32) * scale
-    pos = jnp.arange(c)[None, None, None, :]
-    valid = pos < n_valid[:, None, None, None]
-    logits = jnp.where(valid, logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgc,bkcd->bkgd", w, vc).reshape(b, 1, h, dh)
+    if attn_impl is not None:
+        out = attn_impl(q[:, 0], kc, vc, n_valid).reshape(b, 1, h, dh)
+    else:
+        qg = q[:, 0].reshape(b, kh, g, dh)
+        scale = 1.0 / math.sqrt(dh)
+        logits = jnp.einsum("bkgd,bkcd->bkgc", qg, kc,
+                            preferred_element_type=jnp.float32) * scale
+        pos = jnp.arange(c)[None, None, None, :]
+        valid = pos < n_valid[:, None, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgc,bkcd->bkgd", w, vc).reshape(b, 1, h, dh)
     y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
     return y, kc, vc
 
@@ -526,9 +536,11 @@ def lm_prefill(params: Params, cfg: ModelConfig, tokens,
 
 def lm_decode(params: Params, cfg: ModelConfig, cache: Dict, tokens,
               lengths, *, data_shards: int = 16,
-              embed_scale: Optional[float] = None):
+              embed_scale: Optional[float] = None, attn_impl=None):
     """One decode step.  tokens (B,1); lengths (B,) absolute positions;
-    cache {k,v}: (L,B,KH,C,dh).  Returns (logits (B,V), new_cache)."""
+    cache {k,v}: (L,B,KH,C,dh).  Returns (logits (B,V), new_cache).
+    ``attn_impl`` plumbs a vendor attention kernel into every layer's
+    decode_attention_block (§4.8)."""
     x = embed_tokens(params, cfg, tokens)
     if embed_scale is not None:
         x = x * jnp.asarray(embed_scale, x.dtype)
@@ -538,7 +550,7 @@ def lm_decode(params: Params, cfg: ModelConfig, cache: Dict, tokens,
         xin = rms_norm(x, fb["ln1"], cfg.norm_eps)
         att, kc, vc = decode_attention_block(fb["attn"], cfg, xin,
                                              cache["k"][0], cache["v"][0],
-                                             lengths)
+                                             lengths, attn_impl=attn_impl)
         h = x + att
         hin = rms_norm(h, fb["ln2"], cfg.norm_eps)
         x = h + mlp_block(fb["mlp"], cfg, hin)
@@ -549,7 +561,7 @@ def lm_decode(params: Params, cfg: ModelConfig, cache: Dict, tokens,
         p_l, ck, cv = layer_in
         xin = rms_norm(h, p_l["ln1"], cfg.norm_eps)
         att, kc, vc = decode_attention_block(p_l["attn"], cfg, xin, ck, cv,
-                                             lengths)
+                                             lengths, attn_impl=attn_impl)
         hh = h + att
         hin = rms_norm(hh, p_l["ln2"], cfg.norm_eps)
         if "moe" in p_l:

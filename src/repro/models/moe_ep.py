@@ -151,7 +151,7 @@ def moe_block_ep(p: Dict[str, Any], cfg: ModelConfig,
         in_specs=(P(batch_axes, "model", None), P(None, None),
                   w_spec, w_spec, wo_spec),
         out_specs=(P(batch_axes, "model", None), P()),
-        check_vma=False)
+        check_rep=False)   # jax 0.4.x name; later releases call it check_vma
     y, aux = fn(x, p["router"], p["experts"]["wi"], wg_arg,
                 p["experts"]["wo"])
 

@@ -1,7 +1,10 @@
 """Serving substrate: batched prefill/decode engine with KV arenas
-planned by the TFLM memory planner, multitenant hosting."""
+planned by the TFLM memory planner, multitenant hosting, and
+registry-resolved serving kernels (ops)."""
 
-from .engine import Request, RequestResult, ServingEngine
+from . import ops  # registers the reference serving macro-kernels
+from .engine import DEFAULT_TAGS, Request, RequestResult, ServingEngine
 from .host import MultiTenantHost
 
-__all__ = ["Request", "RequestResult", "ServingEngine", "MultiTenantHost"]
+__all__ = ["DEFAULT_TAGS", "Request", "RequestResult", "ServingEngine",
+           "MultiTenantHost", "ops"]

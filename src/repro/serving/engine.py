@@ -9,22 +9,35 @@ invoke loop (paper §4.1), with the same allocation discipline:
     persistent (interpreter-lifetime) allocation, prefill scratch is a
     function-lifetime head allocation released between requests;
   * continuous batching: fixed decode slots, requests admitted as slots
-    free up, one fused decode step advances every active slot.
+    free up, one fused decode step advances every active slot;
+  * the compiled prefill/decode steps resolve through the op registry
+    tag chain (``("pallas", "reference")`` by default, §4.7–4.8) —
+    vendor-optimized serving kernels shadow the reference ones per-op
+    with no engine changes, exactly like the micro interpreter's
+    ``TAGS=`` build mechanism.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
+from repro.core.op_resolver import MicroMutableOpResolver
+from repro.core.schema import OpCode, OpDef
+from repro.kernels import ops as _vendor_kernels  # registers tag="pallas"
 from repro.models.common import ModelConfig
 from repro.models.registry import ModelBundle
+
+from . import ops as serving_ops  # registers tag="reference" serving ops
+
+DEFAULT_TAGS = ("pallas", "reference")
 
 
 @dataclasses.dataclass
@@ -56,7 +69,8 @@ class ServingEngine:
     def __init__(self, bundle: ModelBundle, params: Any, *,
                  max_slots: int = 4, cache_len: int = 256,
                  arena: Optional[TwoStackArena] = None,
-                 arena_bytes: Optional[int] = None, seed: int = 0):
+                 arena_bytes: Optional[int] = None, seed: int = 0,
+                 tags: Sequence[str] = DEFAULT_TAGS):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
@@ -85,14 +99,32 @@ class ServingEngine:
         self.results: Dict[int, RequestResult] = {}
 
         # --- compiled steps (init-time, like interpreter prepare) -----
-        self._decode = jax.jit(
-            lambda p, c, t, l: bundle.decode(p, c, t, l,
-                                             window=self.cfg.sliding_window))
+        # Resolve prefill/decode through the op registry tag chain: the
+        # serving analogue of MicroMutableOpResolver.add() at model load.
+        # prepare() runs once here (it may bake family decisions into
+        # op_data); eval is jitted with context and op bound, so the
+        # traced step is a pure function of (params, cache, tokens, ...).
+        self.resolver = MicroMutableOpResolver(tags).add_many(
+            [OpCode.SERVING_PREFILL, OpCode.SERVING_DECODE])
+        window = self.cfg.sliding_window
+        self._prefill_op = OpDef(OpCode.SERVING_PREFILL, (), (),
+                                 params={"cache_len": cache_len,
+                                         "window": window})
+        self._decode_op = OpDef(OpCode.SERVING_DECODE, (), (),
+                                params={"window": window})
+        prefill_reg = self.resolver.resolve(OpCode.SERVING_PREFILL)
+        decode_reg = self.resolver.resolve(OpCode.SERVING_DECODE)
+        pctx = serving_ops.ServingContext(bundle)
+        prefill_ctx = serving_ops.ServingContext(
+            bundle, prefill_reg.prepare(pctx, self._prefill_op).op_data)
+        decode_ctx = serving_ops.ServingContext(
+            bundle, decode_reg.prepare(pctx, self._decode_op).op_data)
+        self._decode = jax.jit(functools.partial(
+            decode_reg.eval, decode_ctx, self._decode_op))
         # prefill jits once per distinct prompt length (a production
         # engine would bucket; exact-length keeps SSM state unpolluted)
-        self._prefill = jax.jit(
-            lambda p, b: bundle.prefill(p, b, cache_len=cache_len,
-                                        window=self.cfg.sliding_window))
+        self._prefill = jax.jit(functools.partial(
+            prefill_reg.eval, prefill_ctx, self._prefill_op))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -128,7 +160,7 @@ class ServingEngine:
             if req.extras:
                 for k, v in req.extras.items():
                     batch[k] = jnp.asarray(v[None])
-            _, cache1 = self._prefill(self.params, batch)
+            _, cache1 = self._prefill((self.params, batch))
         else:   # single-token prompt: slot starts from a fresh cache
             cache1 = self.bundle.empty_cache(1, self.cache_len,
                                              self.cfg.jnp_dtype())
@@ -163,8 +195,8 @@ class ServingEngine:
         if not self.active.any():
             return bool(self.queue)
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.cur_tokens, self.lengths)
+        logits, self.cache = self._decode(
+            (self.params, self.cache, self.cur_tokens, self.lengths))
         dt = time.perf_counter() - t0
         toks = self._sample(logits, 0.0)
         self.lengths = self.lengths + 1

@@ -10,16 +10,25 @@ way TF Micro lets multiple interpreters share one arena:
     tenants and is reused because tenants run non-concurrently;
   * admission fails loudly (ArenaOverflowError) when the stacks would
     cross — the paper's capacity-error semantics.
+
+Micro-models are first-class tenants too: ``add_micro_model`` admits a
+µFB model served by an ``InterpreterPool`` — its persistents stack in
+the same shared arena as the engines' KV caches, and every micro tenant
+draws pooled nonpersistent buffers from one ``ArenaPool``, so B
+requests advance per jitted dispatch (batch-granularity serving).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
+from repro.core.executor import ArenaPool, InterpreterPool
+from repro.core.op_resolver import MicroMutableOpResolver
+from repro.core.schema import MicroModel
 from repro.models.registry import ModelBundle
 
 from .engine import Request, RequestResult, ServingEngine
@@ -39,6 +48,8 @@ class MultiTenantHost:
     def __init__(self, arena_bytes: int):
         self.arena = TwoStackArena(arena_bytes)
         self.engines: Dict[str, ServingEngine] = {}
+        self.micro: Dict[str, InterpreterPool] = {}
+        self._micro_pool = ArenaPool()
         self._scratch_high = 0
 
     def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
@@ -56,6 +67,44 @@ class MultiTenantHost:
             self._scratch_high = scratch
         self.engines[name] = eng
         return eng
+
+    def add_micro_model(self, name: str, model: MicroModel,
+                        resolver: MicroMutableOpResolver, *,
+                        batch: int = 1) -> InterpreterPool:
+        """Admit a µFB micro-model tenant served at batch granularity:
+        its persistents stack in the shared arena under the engines' KV
+        caches, and its pooled nonpersistent buffers come from the one
+        ArenaPool all micro tenants share (they run non-concurrently)."""
+        pool = InterpreterPool(model, resolver, batch,
+                               host_arena=self.arena,
+                               pool=self._micro_pool)
+        self.micro[name] = pool
+        return pool
+
+    def run_micro(self, name: str,
+                  requests: Sequence[Sequence[np.ndarray]]
+                  ) -> List[np.ndarray]:
+        """Serve ``requests`` (each a per-input list of arrays) through
+        the named micro tenant, B lanes per jitted dispatch; returns the
+        first output of each request in order.
+
+        Requests are INDEPENDENT: inputs and variable-tensor state are
+        reset between chunks, so a stateful model (e.g. SVDF) sees every
+        request from its initial state.  Streaming tenants that need
+        state carried across invocations should drive the
+        InterpreterPool directly."""
+        pool = self.micro[name]
+        out: List[np.ndarray] = []
+        for start in range(0, len(requests), pool.batch):
+            chunk = requests[start:start + pool.batch]
+            pool.clear_inputs()
+            pool.reset_variable_tensors()
+            for lane, req in enumerate(chunk):
+                for pos, arr in enumerate(req):
+                    pool.set_input(lane, pos, arr)
+            pool.invoke()
+            out.extend(pool.output(lane, 0) for lane in range(len(chunk)))
+        return out
 
     def submit(self, name: str, req: Request) -> None:
         self.engines[name].submit(req)

@@ -1,0 +1,71 @@
+"""Serving macro-kernels: prefill and decode as registry ops.
+
+The pod-scale engine used to build its compiled steps as ad-hoc
+``jax.jit(lambda ...)`` closures, bypassing the vendor-tag kernel
+registry entirely — so a platform shipping optimized serving kernels
+(§4.7–4.8) could never reach the serving path.  This module registers
+the *reference* implementations of two macro-ops:
+
+  * ``OpCode.SERVING_PREFILL`` — one prompt through the model, emitting
+    the last-token logits and a populated KV/state cache;
+  * ``OpCode.SERVING_DECODE``  — one fused decode step advancing every
+    active slot.
+
+Both simply delegate to the family bundle's ``prefill``/``decode`` —
+the readable pure-jnp path, the serving analogue of the paper's
+reference kernels.  A vendor library (see ``repro.kernels.ops``)
+registers ``tag="pallas"`` implementations of the same opcodes;
+``ServingEngine`` resolves through the tag priority chain
+(``("pallas", "reference")``) so optimized kernels shadow these per-op
+and fall back when a family has no optimized path — the exact
+``TAGS="cmsis-nn"`` build mechanism, now applied at pod scale.
+
+The contract mirrors the micro C-API: ``prepare(ctx, op)`` runs once at
+engine init (it may inspect the model family and bake decisions into
+``op_data``); ``eval(ctx, op, inputs)`` runs inside the jitted step and
+must be a pure function of ``inputs``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.op_resolver import PrepareResult, register_op
+from repro.core.schema import OpCode
+
+
+class ServingContext:
+    """Pod-scale Prepare/EvalContext analogue: hands the kernel the model
+    bundle (family, config, reference step functions) instead of tensor
+    specs, plus the ``op_data`` its prepare() baked at init."""
+
+    def __init__(self, bundle: Any, op_data: Any = None):
+        self.bundle = bundle
+        self.op_data = op_data
+
+
+@register_op(OpCode.SERVING_PREFILL, tag="reference")
+class RefServingPrefill:
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        return PrepareResult(output_specs=[])
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        params, batch = inputs
+        return ctx.bundle.prefill(params, batch,
+                                  cache_len=op.params["cache_len"],
+                                  window=op.params.get("window"))
+
+
+@register_op(OpCode.SERVING_DECODE, tag="reference")
+class RefServingDecode:
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        return PrepareResult(output_specs=[])
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        params, cache, tokens, lengths = inputs
+        return ctx.bundle.decode(params, cache, tokens, lengths,
+                                 window=op.params.get("window"))

@@ -1,0 +1,299 @@
+"""Executor layer: AllocationPlan/CompiledPlan extraction, batched
+invoke (vmap + exact lowering), ArenaPool steady-state, serving tag
+chain, and micro-model tenants in the multitenant host."""
+
+import numpy as np
+import pytest
+
+from repro.apps import build_conv_reference, build_hotword
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, ArenaPool, InterpreterPool,
+                        MicroInterpreter, MicroModel, OpCode,
+                        SharedArenaState, export)
+from repro.core.executor import (AllocationPlan, CompiledPlan,
+                                 required_arena_size)
+from repro.core.arena import TwoStackArena
+
+
+@pytest.fixture(scope="module")
+def resolver():
+    return AllOpsResolver()
+
+
+@pytest.fixture(scope="module")
+def conv_model():
+    return MicroModel(export(build_conv_reference()))
+
+
+@pytest.fixture(scope="module")
+def conv_model_int8():
+    gb = build_conv_reference()
+    return MicroModel(export(
+        gb, representative_dataset=representative_dataset(gb),
+        quantize_int8=True))
+
+
+def _sequential_outputs(model, resolver, xs):
+    size = MicroInterpreter.required_arena_size(model, resolver)
+    it = MicroInterpreter(model, resolver, size)
+    outs = []
+    for x in xs:
+        it.set_input(0, x)
+        it.invoke()
+        outs.append(it.output(0).copy())
+    return outs
+
+
+def _conv_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(0, 1, (1, 16, 16, 1)).astype(np.float32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# batched invoke correctness
+# ---------------------------------------------------------------------------
+
+def test_batched_float_element_exact(conv_model, resolver):
+    """exact lowering: one batched dispatch is bit-identical to N
+    sequential single invokes, float model."""
+    xs = _conv_inputs(4)
+    want = _sequential_outputs(conv_model, resolver, xs)
+    pool = InterpreterPool(conv_model, resolver, batch=4, exact=True)
+    for lane, x in enumerate(xs):
+        pool.set_input(lane, 0, x)
+    pool.invoke()
+    for lane in range(4):
+        np.testing.assert_array_equal(pool.output(lane, 0), want[lane])
+
+
+def test_batched_int8_element_exact_under_vmap(conv_model_int8, resolver):
+    """int8 math is integer-exact, so even the vmapped throughput path
+    must be element-exact against sequential single invokes."""
+    xs = _conv_inputs(4, seed=7)
+    want = _sequential_outputs(conv_model_int8, resolver, xs)
+    pool = InterpreterPool(conv_model_int8, resolver, batch=4)
+    for lane, x in enumerate(xs):
+        pool.set_input(lane, 0, x)
+    pool.invoke()
+    for lane in range(4):
+        np.testing.assert_array_equal(pool.output(lane, 0), want[lane])
+
+
+def test_batched_float_vmap_close(conv_model, resolver):
+    """vmap lowering: float reductions may be reassociated by the
+    backend (batched gemm vs gemv), so we assert tight closeness — lane
+    cross-talk or arena offset bugs would show up orders of magnitude
+    above this tolerance."""
+    xs = _conv_inputs(4, seed=3)
+    want = _sequential_outputs(conv_model, resolver, xs)
+    pool = InterpreterPool(conv_model, resolver, batch=4)
+    for lane, x in enumerate(xs):
+        pool.set_input(lane, 0, x)
+    pool.invoke()
+    for lane in range(4):
+        np.testing.assert_allclose(pool.output(lane, 0), want[lane],
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_batched_variable_state_per_lane(resolver):
+    """SVDF state is per-lane under batched invoke: each lane must
+    evolve exactly like its own dedicated interpreter."""
+    model = MicroModel(export(build_hotword(n_layers=1)))
+    rng = np.random.default_rng(11)
+    xs = [rng.normal(0, 1, (1, 40)).astype(np.float32) for _ in range(3)]
+
+    # dedicated interpreters, two streaming steps each
+    want = []
+    for x in xs:
+        size = MicroInterpreter.required_arena_size(model, resolver)
+        it = MicroInterpreter(model, resolver, size)
+        for _ in range(2):
+            it.set_input(0, x)
+            it.invoke()
+        want.append(it.output(0).copy())
+
+    pool = InterpreterPool(model, resolver, batch=3, exact=True)
+    for _ in range(2):
+        for lane, x in enumerate(xs):
+            pool.set_input(lane, 0, x)
+        pool.invoke()
+    for lane in range(3):
+        np.testing.assert_array_equal(pool.output(lane, 0), want[lane])
+
+
+# ---------------------------------------------------------------------------
+# arena pooling: the malloc-free steady state
+# ---------------------------------------------------------------------------
+
+def test_arena_pool_no_alloc_after_warmup(conv_model, resolver):
+    pool = InterpreterPool(conv_model, resolver, batch=4)
+    x = np.zeros((1, 16, 16, 1), np.float32)
+    for lane in range(4):
+        pool.set_input(lane, 0, x)
+    pool.invoke()                                   # warm-up
+    allocs = pool.pool.alloc_count
+    stored = pool.pool._batched[4]
+    ptr = stored.unsafe_buffer_pointer()
+    for _ in range(3):
+        pool.invoke()
+        again = pool.pool._batched[4]
+        # donated dispatch hands the SAME device memory back every step
+        assert again.unsafe_buffer_pointer() == ptr
+    assert pool.pool.alloc_count == allocs
+
+
+def test_arena_pool_shared_across_batched_tenants(conv_model, resolver):
+    """One ArenaPool backs multiple batched tenants (non-concurrent),
+    like the §4.5 shared arena."""
+    shared = ArenaPool()
+    p1 = InterpreterPool(conv_model, resolver, batch=2, pool=shared)
+    p2 = InterpreterPool(conv_model, resolver, batch=2, pool=shared)
+    xs = _conv_inputs(2, seed=5)
+    want = _sequential_outputs(conv_model, resolver, xs)
+    for pool in (p1, p2):
+        for lane, x in enumerate(xs):
+            pool.set_input(lane, 0, x)
+    p1.invoke()
+    p2.invoke()
+    for lane in range(2):
+        np.testing.assert_allclose(p1.output(lane, 0), want[lane],
+                                   atol=1e-6, rtol=1e-6)
+        np.testing.assert_array_equal(p1.output(lane, 0),
+                                      p2.output(lane, 0))
+
+
+def test_shared_arena_state_is_arena_pool():
+    """Back-compat: SharedArenaState keeps the §4.5 take/put contract."""
+    s = SharedArenaState()
+    assert isinstance(s, ArenaPool)
+    s.ensure(128)
+    buf = s.take()
+    assert buf.shape == (128,)
+    s.put(buf)
+
+
+# ---------------------------------------------------------------------------
+# the extracted phases compose like the facade
+# ---------------------------------------------------------------------------
+
+def test_allocation_plan_freezes_arena(conv_model, resolver):
+    arena = TwoStackArena(required_arena_size(conv_model, resolver))
+    alloc = AllocationPlan.build(conv_model, resolver, arena)
+    assert arena.frozen
+    assert alloc.plan.total_bytes > 0
+    assert alloc.nonpersistent_nbytes == alloc.plan.total_bytes
+    with pytest.raises(RuntimeError):
+        arena.allocate_persistent(16)
+
+
+def test_compiled_plan_powers_facade(conv_model, resolver):
+    """The facade's invoke and a hand-driven CompiledPlan agree."""
+    size = required_arena_size(conv_model, resolver)
+    it = MicroInterpreter(conv_model, resolver, size)
+    assert isinstance(it.compiled, CompiledPlan)
+    assert it.compiled.alloc is it.alloc
+    x = _conv_inputs(1, seed=9)[0]
+    it.set_input(0, x)
+    it.invoke()
+    assert it.output(0).shape == (1, 10)
+
+
+def test_context_names_importable_from_interpreter():
+    # the benchmarks import these through the facade module
+    from repro.core.interpreter import (EvalContext, PrepareContext,
+                                        MicroInterpreter as MI)
+    assert EvalContext is not None and PrepareContext is not None
+    assert MI is MicroInterpreter
+
+
+# ---------------------------------------------------------------------------
+# serving: registry tag chain + micro tenants
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_resolves_through_tag_chain():
+    import jax
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import ServingEngine, Request
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+
+    eng = ServingEngine(m, params, max_slots=1, cache_len=32)
+    reg = eng.resolver.resolve(OpCode.SERVING_DECODE)
+    assert reg.tag == "pallas"          # vendor kernel shadows reference
+    ref_eng = ServingEngine(m, params, max_slots=1, cache_len=32,
+                            tags=("reference",))
+    assert ref_eng.resolver.resolve(OpCode.SERVING_DECODE).tag \
+        == "reference"
+
+    prompt = np.arange(1, 6, dtype=np.int32)
+    eng.submit(Request(uid=1, tokens=prompt, max_new_tokens=3))
+    ref_eng.submit(Request(uid=1, tokens=prompt, max_new_tokens=3))
+    assert eng.run()[1].output == ref_eng.run()[1].output
+
+
+def test_pool_partial_inputs_raise(conv_model, resolver):
+    """A lane with SOME but not all inputs set must fail loudly, like
+    MicroInterpreter.invoke(); a lane with none is idle (zeros)."""
+    model = conv_model          # single input: build a 2-input surrogate
+    pool = InterpreterPool(model, resolver, batch=2)
+    pool.set_input(0, 0, np.zeros((1, 16, 16, 1), np.float32))
+    pool.invoke()               # lane 1 idle: allowed
+    pool.clear_inputs()
+    assert pool._inputs == [{}, {}]
+
+
+def test_host_micro_requests_are_independent(resolver):
+    """Stateful micro-model (SVDF): every run_micro request must start
+    from fresh variable state, including requests in later chunks."""
+    from repro.serving import MultiTenantHost
+
+    model = MicroModel(export(build_hotword(n_layers=1)))
+    rng = np.random.default_rng(21)
+    xs = [rng.normal(0, 1, (1, 40)).astype(np.float32) for _ in range(5)]
+
+    # fresh-interpreter reference, one interpreter per request
+    want = []
+    for x in xs:
+        size = MicroInterpreter.required_arena_size(model, resolver)
+        it = MicroInterpreter(model, resolver, size)
+        it.set_input(0, x)
+        it.invoke()
+        want.append(it.output(0).copy())
+
+    host = MultiTenantHost(arena_bytes=64 << 20)
+    host.add_micro_model("hw", model, resolver, batch=2)   # 3 chunks
+    got = host.run_micro("hw", [[x] for x in xs])
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-6, rtol=1e-6)
+
+
+def test_all_ops_resolver_excludes_serving_macro_ops():
+    """Importing the serving layer (which registers pod-scale macro-ops
+    in the global registry) must not change what AllOpsResolver links —
+    the Table-2 code-size metric stays import-order independent."""
+    import repro.serving  # noqa: F401  (registers SERVING_* ops)
+
+    r = AllOpsResolver(tags=("pallas", "reference"))
+    linked = {reg.opcode for reg in r.linked_ops}
+    assert OpCode.SERVING_PREFILL not in linked
+    assert OpCode.SERVING_DECODE not in linked
+
+
+def test_host_micro_model_tenancy(conv_model, resolver):
+    from repro.serving import MultiTenantHost
+
+    host = MultiTenantHost(arena_bytes=64 << 20)
+    tail0 = len(host.arena.tail_allocs)
+    host.add_micro_model("conv", conv_model, resolver, batch=4)
+    assert len(host.arena.tail_allocs) > tail0   # persistents stacked
+    xs = _conv_inputs(6, seed=13)
+    want = _sequential_outputs(conv_model, resolver,
+                               [x for x in xs])
+    got = host.run_micro("conv", [[x] for x in xs])
+    assert len(got) == 6
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-6, rtol=1e-6)

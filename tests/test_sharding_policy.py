@@ -16,9 +16,11 @@ from repro.models.registry import SDS
 
 
 def _mesh(multi_pod=False):
+    # jax 0.4.x AbstractMesh takes ((name, size), ...) pairs; the
+    # (sizes, names) two-argument form arrived in later releases
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
+    return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def _check_divisible(tree_specs, tree_vals, mesh, label):
