@@ -1,0 +1,127 @@
+"""Ragged-invoke throughput: masked per-bucket dispatch vs lockstep
+batch vs sequential single invokes, swept over lane occupancy.
+
+The lockstep ``InterpreterPool`` only helps when B identical requests
+arrive together; a fragmented workload (the serving norm) leaves lanes
+empty or forces head-of-line waiting.  ``RaggedInterpreterPool`` keeps
+one compiled masked program per bucket and admits/retires lanes between
+dispatches, so the question this benchmark answers is: at occupancy
+25/50/75/100%, what does ONE masked dispatch cost per *active* request,
+compared to
+
+  * ``sequential`` — each request alone through MicroInterpreter.invoke
+    (the B=1 paper path), and
+  * ``lockstep``  — a full-B InterpreterPool dispatch amortized over
+    the same number of live requests (idle lanes still run, and a
+    lockstep pool cannot retire them).
+
+Emits ``BENCH_ragged_invoke.json`` (same flat-row shape as
+``BENCH_batched_invoke.json``) via ``python -m benchmarks.run
+ragged_invoke``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import build_conv_reference, build_fc_stack
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, InterpreterPool, MicroInterpreter,
+                        MicroModel, RaggedInterpreterPool, export)
+
+from .common import print_table, save_result, time_call
+
+LANES = 16
+OCCUPANCIES = (0.25, 0.5, 0.75, 1.0)
+
+
+def _build(gb, quantize: bool) -> MicroModel:
+    kwargs = {}
+    if quantize:
+        kwargs = dict(representative_dataset=representative_dataset(gb),
+                      quantize_int8=True)
+    return MicroModel(export(gb, **kwargs))
+
+
+def bench_ragged(name: str, gb, quantize: bool, lanes: int = LANES,
+                 occupancies=OCCUPANCIES) -> list:
+    resolver = AllOpsResolver()
+    model = _build(gb, quantize)
+    label = name + (" int8" if quantize else " float")
+    in_shapes = [gb.tensors[t].shape for t in gb.inputs]
+    rng = np.random.default_rng(0)
+    xs = [[rng.normal(0, 1, s).astype(np.float32) for s in in_shapes]
+          for _ in range(lanes)]
+
+    # sequential baseline: one request alone, the paper's B=1 path
+    size = MicroInterpreter.required_arena_size(model, resolver)
+    interp = MicroInterpreter(model, resolver, size)
+
+    def sequential_one():
+        for pos, x in enumerate(xs[0]):
+            interp.set_input(pos, x)
+        interp.invoke()
+        interp.output(0)
+
+    t_seq = time_call(sequential_one, iters=20)
+
+    # lockstep baseline: the full-B pool has no way to shrink a wave
+    lock = InterpreterPool(model, resolver, batch=lanes)
+
+    def lockstep_wave():
+        for lane in range(lanes):
+            for pos, x in enumerate(xs[lane]):
+                lock.set_input(lane, pos, x)
+        lock.invoke()
+        lock.outputs(0)
+
+    t_lock = time_call(lockstep_wave, iters=20)
+
+    ragged = RaggedInterpreterPool()
+    ragged.add_bucket(name, model, resolver, lanes)
+
+    rows = []
+    for occ in occupancies:
+        k = max(1, round(lanes * occ))
+        slots = [ragged.admit(name) for _ in range(k)]
+
+        def wave():
+            for i, slot in enumerate(slots):
+                for pos, x in enumerate(xs[i]):
+                    ragged.set_input(name, slot, pos, x)
+            ragged.dispatch()
+            ragged.outputs(name, 0)
+
+        t_ragged = time_call(wave, iters=20)
+        for slot in slots:
+            ragged.retire(name, slot)
+        per_req = t_ragged / k
+        rows.append({
+            "model": label,
+            "lanes": lanes,
+            "occupancy_pct": int(round(100 * occ)),
+            "active": k,
+            "us_per_req_ragged": round(per_req * 1e6, 1),
+            "us_per_req_sequential": round(t_seq * 1e6, 1),
+            "us_per_req_lockstep": round(t_lock / k * 1e6, 1),
+            "speedup_vs_sequential": round(t_seq / per_req, 2),
+            "speedup_vs_lockstep": round((t_lock / k) / per_req, 2),
+        })
+    return rows
+
+
+def run() -> list:
+    rows = []
+    for name, builder, quantize in (
+            ("conv_reference", build_conv_reference, True),
+            ("fc_stack", build_fc_stack, True),
+            ("conv_reference", build_conv_reference, False)):
+        rows.extend(bench_ragged(name, builder(), quantize))
+    print_table("Ragged invoke throughput (masked dispatch, occupancy "
+                "sweep)", rows)
+    save_result("BENCH_ragged_invoke", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

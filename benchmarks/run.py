@@ -2,6 +2,8 @@
 
   interpreter_overhead   Fig. 6  total vs calculation cycles
   batched_invoke         batched-invoke throughput sweep (B ∈ {1,4,16})
+  ragged_invoke          masked ragged dispatch vs lockstep/sequential
+                         at occupancy 25/50/75/100%
   memory_overhead        Tab. 2  persistent/nonpersistent arena split
   planner_bench          Fig. 4  naive vs FFD memory compaction
   kernel_speedup         Fig. 6  reference vs optimized kernels
@@ -19,11 +21,13 @@ import time
 def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
     from . import (interpreter_overhead, kernel_speedup, memory_overhead,
-                   multitenancy_bench, planner_bench, roofline)
+                   multitenancy_bench, planner_bench, ragged_invoke,
+                   roofline)
 
     benches = {
         "interpreter_overhead": interpreter_overhead.run,
         "batched_invoke": interpreter_overhead.run_batched,
+        "ragged_invoke": ragged_invoke.run,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,
         "kernel_speedup": kernel_speedup.run,

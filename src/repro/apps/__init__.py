@@ -9,8 +9,8 @@
   (Chowdhery et al. 2019) at 96×96×1.
 """
 
-from .models import (build_conv_reference, build_hotword, build_vww,
-                     paper_models)
+from .models import (build_conv_reference, build_fc_stack, build_hotword,
+                     build_vww, paper_models)
 
-__all__ = ["build_conv_reference", "build_hotword", "build_vww",
-           "paper_models"]
+__all__ = ["build_conv_reference", "build_fc_stack", "build_hotword",
+           "build_vww", "paper_models"]

@@ -111,6 +111,32 @@ def build_vww(seed: int = 2, width: float = 0.25,
     return gb
 
 
+def build_fc_stack(seed: int = 3, features: int = 64,
+                   hidden: int = 32, n_layers: int = 2,
+                   n_classes: int = 8) -> GraphBuilder:
+    """A pure fully-connected classifier — the int8 "FC family" the
+    serving host routes at request granularity.  Stateless, so every
+    request is a single-frame continuation; quantized int8 it is
+    integer-exact, which makes it the bit-identity workhorse for the
+    ragged micro path."""
+    rng = np.random.default_rng(seed)
+    gb = GraphBuilder("fc_stack")
+    h = gb.input("features", (1, features))
+    dim = features
+    for li in range(n_layers):
+        w = gb.const(rng.normal(0, 1 / np.sqrt(dim),
+                                (hidden, dim)).astype(np.float32), f"w{li}")
+        b = gb.const(rng.normal(0, 0.05, (hidden,)).astype(np.float32),
+                     f"b{li}")
+        h = gb.fully_connected(h, w, b, activation="relu")
+        dim = hidden
+    wo = gb.const(rng.normal(0, 1 / np.sqrt(dim),
+                             (n_classes, dim)).astype(np.float32), "w_out")
+    bo = gb.const(np.zeros(n_classes, np.float32), "b_out")
+    gb.mark_output(gb.softmax(gb.fully_connected(h, wo, bo)))
+    return gb
+
+
 def paper_models() -> Dict[str, GraphBuilder]:
     return {
         "conv_reference": build_conv_reference(),

@@ -7,7 +7,8 @@ from .arena import ArenaOverflowError, TwoStackArena
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
 from .executor import (AllocationPlan, ArenaPool, CompiledPlan,
-                       InterpreterPool, SharedArenaState)
+                       InterpreterPool, LaneState, RaggedInterpreterPool,
+                       SharedArenaState)
 from .graph_builder import GraphBuilder
 from .interpreter import MicroInterpreter
 from .memory_planner import (BufferRequest, GreedyMemoryPlanner,
@@ -23,7 +24,7 @@ __all__ = [
     "ArenaOverflowError", "TwoStackArena", "export", "fold_constants",
     "quantize", "quantize_graph", "strip_training_ops", "GraphBuilder",
     "MicroInterpreter", "AllocationPlan", "ArenaPool", "CompiledPlan",
-    "InterpreterPool",
+    "InterpreterPool", "LaneState", "RaggedInterpreterPool",
     "SharedArenaState", "BufferRequest", "GreedyMemoryPlanner",
     "LinearMemoryPlanner", "MemoryPlan", "OfflineMemoryPlanner",
     "AllOpsResolver", "MicroMutableOpResolver", "OpResolutionError",

@@ -45,6 +45,9 @@ def align_down(n: int, a: int = DEFAULT_ALIGN) -> int:
 
 @dataclass
 class Allocation:
+    """One recorded arena allocation: byte offset, size, and the tag
+    that names what lives there (for the memory report)."""
+
     offset: int
     nbytes: int
     tag: str
@@ -52,6 +55,10 @@ class Allocation:
 
 @dataclass
 class ArenaUsage:
+    """Snapshot of arena occupancy: persistent (tail) and nonpersistent
+    (head) bytes, planning-time temp high water, and capacity — the
+    numbers behind the Table-2 memory split."""
+
     persistent: int
     nonpersistent: int
     temp_high_water: int

@@ -26,11 +26,40 @@ pool, pod-scale serving) builds on:
 
 **Arena pooling.**  ``ArenaPool`` generalizes the shared-arena idea of
 §4.5: it owns the physical nonpersistent byte buffers — one single
-buffer plus one stacked ``(B, nbytes)`` buffer per batch size — and
-recycles them across invocations.  Because the jitted programs donate
-their arena argument, steady state reuses the same device memory every
-step: the pool allocates during warm-up only (``alloc_count`` makes
-that observable and testable).
+buffer plus a small free list of stacked ``(B, nbytes)`` buffers per
+batch size — and recycles them across invocations.  Because the jitted
+programs donate their arena argument, steady state reuses the same
+device memory every step: the pool allocates during warm-up only
+(``alloc_count`` makes that observable and testable).  The free list is
+``depth`` deep (default 2), which is the donation-aware double-buffer
+contract: while wave N's donated dispatch is still computing on device,
+wave N+1 can take the second buffer and stage its host inputs, so
+host→device input staging overlaps device compute.
+
+**Ragged dispatch.**  ``InterpreterPool`` advances B identical lockstep
+lanes; ``RaggedInterpreterPool`` removes the lockstep restriction.  A
+*lane table* (``LaneState`` rows: model-family bucket, per-request step
+counter, active flag) drives one masked/vmapped dispatch per bucket:
+lanes of the same bucket share one AllocationPlan/CompiledPlan, lanes
+of different buckets run different models, and every lane carries its
+own continuation state (variable tensors, step count).  Admission and
+retirement happen between dispatches by flipping the active mask — the
+mask is a *traced argument* of the masked program, so occupancy changes
+never recompile.
+
+Compile-once invariants (what the rest of the repo may rely on):
+
+  * **traced once** — the arena read/bitcast/dispatch/write loop over
+    the op list, per (batch size, exact/vmap, masked/unmasked) key.
+    Tensor shapes, arena offsets, op_data, and the op list itself are
+    baked in at trace time and can never change afterwards.
+  * **donated** — the arena byte buffer(s) and the variable-tensor
+    stack.  Steady state hands the same device memory back every step;
+    the host must never hold a reference to a donated input after
+    dispatch.
+  * **may vary per call** — input values, variable *values*, and (for
+    masked programs) the active-lane mask.  Everything else varying
+    forces a retrace, which the freeze()-at-init discipline forbids.
 """
 
 from __future__ import annotations
@@ -74,6 +103,10 @@ def _jnp_dtype(name: str):
 # ---------------------------------------------------------------------------
 
 class PrepareContext:
+    """Init-phase context handed to each kernel's ``prepare()`` — the
+    analogue of TFLM's ``TfLiteContext`` during AllocateTensors: tensor
+    specs, quantization params, and const values, read-only."""
+
     def __init__(self, model: MicroModel, specs: List[TensorSpec]):
         self._model = model
         self._specs = specs
@@ -93,6 +126,10 @@ class PrepareContext:
 
 
 class EvalContext:
+    """Invoke-phase context handed to each kernel's ``eval()``: the
+    ``op_data`` its prepare() baked plus output specs/quant params.
+    Everything here is fixed at init — eval runs inside the trace."""
+
     __slots__ = ("op_data", "_out_specs", "_out_quants")
 
     def __init__(self, op_data, out_specs, out_quants):
@@ -109,6 +146,9 @@ class EvalContext:
 
 @dataclass
 class OpPlan:
+    """One prepared op: its definition, resolved kernel registration,
+    prepare() result, and the EvalContext eval() will receive."""
+
     op: Any                               # schema.OpDef
     registration: Any                     # OpRegistration
     prep: Any                             # PrepareResult
@@ -233,6 +273,29 @@ def required_arena_size(model: MicroModel,
     return align_up(probe.usage().total + slack)
 
 
+def plan_model(model: MicroModel, resolver: MicroMutableOpResolver,
+               arena_size_bytes: Optional[int] = None,
+               planner: Optional[object] = None,
+               prefer_offline_plan: bool = True,
+               host_arena: Optional[TwoStackArena] = None
+               ) -> AllocationPlan:
+    """Build an AllocationPlan in a fresh self-sized arena, or — when
+    ``host_arena`` is given — as a tenant of a shared arena (§4.5):
+    persistents stack under the host's, the nonpersistent head section
+    is shared (fork, build, absorb)."""
+    if host_arena is not None:
+        arena = host_arena.fork_tenant()
+    else:
+        if arena_size_bytes is None:
+            arena_size_bytes = required_arena_size(model, resolver)
+        arena = TwoStackArena(arena_size_bytes)
+    alloc = AllocationPlan.build(model, resolver, arena, planner,
+                                 prefer_offline_plan)
+    if host_arena is not None:
+        host_arena.absorb_tenant(arena)
+    return alloc
+
+
 # ---------------------------------------------------------------------------
 # phase 2: CompiledPlan
 # ---------------------------------------------------------------------------
@@ -332,21 +395,64 @@ class CompiledPlan:
         key = (batch, exact)
         fn = self._batched.get(key)
         if fn is None:
-            if exact:
-                def unrolled(bufs, variables, consts, inputs):
-                    lanes = [self.execute(
-                        bufs[i], tuple(v[i] for v in variables), consts,
-                        tuple(x[i] for x in inputs))
-                        for i in range(batch)]
-                    bs, vs, os = zip(*lanes)
-                    return (jnp.stack(bs),
-                            tuple(jnp.stack(z) for z in zip(*vs)),
-                            tuple(jnp.stack(z) for z in zip(*os)))
-                fn = jax.jit(unrolled, donate_argnums=(0, 1))
-            else:
-                fn = jax.jit(
-                    jax.vmap(self.execute, in_axes=(0, 0, None, 0)),
-                    donate_argnums=(0, 1))
+            fn = jax.jit(self._batched_body(batch, exact),
+                         donate_argnums=(0, 1))
+            self._batched[key] = fn
+        return fn
+
+    def _batched_body(self, batch: int, exact: bool):
+        """The unjitted B-lane body shared by ``batched`` and
+        ``masked_batched`` — vmapped (throughput) or unrolled (exact)."""
+        if exact:
+            def unrolled(bufs, variables, consts, inputs):
+                lanes = [self.execute(
+                    bufs[i], tuple(v[i] for v in variables), consts,
+                    tuple(x[i] for x in inputs))
+                    for i in range(batch)]
+                bs, vs, os = zip(*lanes)
+                return (jnp.stack(bs),
+                        tuple(jnp.stack(z) for z in zip(*vs)),
+                        tuple(jnp.stack(z) for z in zip(*os)))
+            return unrolled
+        return jax.vmap(self.execute, in_axes=(0, 0, None, 0))
+
+    def masked_batched(self, batch: int, exact: bool = False):
+        """The ragged lowering: ``batched(batch)`` plus an active-lane
+        mask argument.
+
+        Signature: ``(bufs, variables, consts, inputs, mask) -> (bufs,
+        variables, outs)`` where ``mask`` is a ``(batch,)`` bool array.
+        Every lane's math runs every dispatch (the program is fixed),
+        but an inactive lane's variable state is held: after the lane
+        bodies run, ``where(mask, new, old)`` selects per lane, so idle
+        lanes carry their continuation state unchanged across waves.
+
+        Because the mask is a *traced argument* — not a Python constant —
+        admitting or retiring lanes between dispatches changes only the
+        mask value.  One compiled program per (batch, exact) covers
+        every occupancy from 1 to batch: no recompilation, ever.
+
+        Active lanes are bit-identical to the unmasked lowering: the
+        selected "new" values are the same arrays ``batched`` returns,
+        and for ``exact=True`` those are bit-identical to sequential
+        single invokes.
+        """
+        key = (batch, exact, "masked")
+        fn = self._batched.get(key)
+        if fn is None:
+            body = self._batched_body(batch, exact)
+
+            def masked(bufs, variables, consts, inputs, mask):
+                new_bufs, new_vars, outs = body(
+                    bufs, variables, consts, inputs)
+                def sel(new, old):
+                    m = mask.reshape(mask.shape + (1,) * (new.ndim - 1))
+                    return jnp.where(m, new, old)
+                held = tuple(sel(n, o)
+                             for n, o in zip(new_vars, variables))
+                return new_bufs, held, outs
+
+            fn = jax.jit(masked, donate_argnums=(0, 1))
             self._batched[key] = fn
         return fn
 
@@ -359,16 +465,27 @@ class ArenaPool:
     """Owns the physical nonpersistent byte buffers that interpreters
     (and batched pools) recycle between non-concurrent invocations.
 
-    Holds one single-request buffer plus one stacked ``(B, nbytes)``
-    buffer per batch size.  Donated jitted programs hand the same device
-    memory back every step, so after warm-up ``alloc_count`` must stay
-    constant — the malloc-free steady state, observable."""
+    Holds one single-request buffer plus a free list of stacked
+    ``(B, nbytes)`` buffers per batch size.  Donated jitted programs
+    hand the same device memory back every step, so after warm-up
+    ``alloc_count`` must stay constant — the malloc-free steady state,
+    observable.
 
-    def __init__(self) -> None:
+    The free list is at most ``depth`` buffers deep (default 2): the
+    donation-aware double buffer.  A dispatch's donated output buffer is
+    ``put_batch`` back *as a future* — the host does not block on it —
+    so while wave N still computes on device, wave N+1 (same size,
+    another bucket, or the next wave of the same bucket) can
+    ``take_batch`` the second buffer and stage its host inputs
+    concurrently.  JAX's async dispatch tracks the data dependency; the
+    pool only bounds how much physical memory may be in flight."""
+
+    def __init__(self, depth: int = 2) -> None:
         self.nbytes = 0
+        self.depth = max(1, int(depth))
         self.buf: Optional[jnp.ndarray] = None
         self._taken = False
-        self._batched: Dict[int, jnp.ndarray] = {}
+        self._batched: Dict[int, List[jnp.ndarray]] = {}
         self.alloc_count = 0
 
     def _alloc(self, shape) -> jnp.ndarray:
@@ -398,15 +515,17 @@ class ArenaPool:
         self._taken = False
         self.buf = buf
 
-    # -- batched buffers -------------------------------------------------
+    # -- batched buffers (free list = the double buffer) -----------------
     def take_batch(self, batch: int) -> jnp.ndarray:
-        buf = self._batched.pop(batch, None)
-        if buf is None:
-            buf = self._alloc((batch, self.nbytes))
-        return buf
+        free = self._batched.get(batch)
+        if free:
+            return free.pop()
+        return self._alloc((batch, self.nbytes))
 
     def put_batch(self, buf: jnp.ndarray) -> None:
-        self._batched[int(buf.shape[0])] = buf
+        free = self._batched.setdefault(int(buf.shape[0]), [])
+        if len(free) < self.depth:
+            free.append(buf)
 
 
 class SharedArenaState(ArenaPool):
@@ -437,18 +556,8 @@ class InterpreterPool:
             raise ValueError("batch must be >= 1")
         self.batch = batch
         self.exact = exact
-        if host_arena is not None:
-            # tenant of a shared arena: persistents stack under the
-            # host's, the nonpersistent head section is shared (§4.5)
-            arena = host_arena.fork_tenant()
-        else:
-            if arena_size_bytes is None:
-                arena_size_bytes = required_arena_size(model, op_resolver)
-            arena = TwoStackArena(arena_size_bytes)
-        self.alloc = AllocationPlan.build(model, op_resolver, arena,
-                                          planner, prefer_offline_plan)
-        if host_arena is not None:
-            host_arena.absorb_tenant(arena)
+        self.alloc = plan_model(model, op_resolver, arena_size_bytes,
+                                planner, prefer_offline_plan, host_arena)
         self.compiled = CompiledPlan(self.alloc)
         self.pool = pool if pool is not None else ArenaPool()
         self.pool.ensure(self.alloc.nonpersistent_nbytes)
@@ -516,3 +625,236 @@ class InterpreterPool:
 
     def reset_variable_tensors(self) -> None:
         self._variables = tuple(jnp.zeros_like(v) for v in self._variables)
+
+
+# ---------------------------------------------------------------------------
+# phase 3 (ragged dispatch): lane table + RaggedInterpreterPool
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LaneState:
+    """One row of the ragged pool's lane table.
+
+    ``bucket`` names the model family the lane belongs to, ``slot`` is
+    its index on that bucket's stacked batch axis, ``uid`` identifies
+    the request currently occupying the lane (None = free), ``step``
+    counts dispatches completed for that request (the continuation
+    counter), and ``active`` is the lane's bit in the dispatch mask.
+    """
+
+    bucket: str
+    slot: int
+    uid: Optional[int] = None
+    step: int = 0
+    active: bool = False
+
+
+class _RaggedBucket:
+    """Per-model-family state of a RaggedInterpreterPool: one shared
+    AllocationPlan/CompiledPlan, the stacked per-lane variable state,
+    staged inputs for the next wave, and that family's lane-table rows."""
+
+    def __init__(self, name: str, alloc: AllocationPlan,
+                 compiled: CompiledPlan, lanes: int, exact: bool):
+        self.name = name
+        self.alloc = alloc
+        self.compiled = compiled
+        self.lanes = lanes
+        self.exact = exact
+        self.table = [LaneState(bucket=name, slot=i) for i in range(lanes)]
+        self.variables = tuple(
+            jnp.broadcast_to(v, (lanes,) + v.shape)
+            for v in alloc.init_variables)
+        self.inputs: List[Dict[int, np.ndarray]] = [{} for _ in range(lanes)]
+        self.outs: Optional[Tuple[jnp.ndarray, ...]] = None
+        self.outs_host: Optional[List[np.ndarray]] = None
+        self.dispatch_count = 0
+
+
+class RaggedInterpreterPool:
+    """Lanes at different models, steps, and lifecycles — one masked
+    vmapped dispatch per model-family bucket.
+
+    The lockstep ``InterpreterPool`` requires every lane to run the same
+    model and start/finish together.  Here a *lane table* relaxes all of
+    that:
+
+      * **different models** — each bucket compiles its own plan once;
+        buckets draw stacked arena buffers from ONE shared ``ArenaPool``
+        (sized to the max requirement, §4.5 style);
+      * **different steps** — every lane carries its own variable-tensor
+        continuation state and step counter, so a lane on step 7 of a
+        streaming request rides in the same dispatch as a lane on step 0;
+      * **different lifecycles** — ``admit``/``retire`` flip the lane's
+        bit in the active mask between dispatches.  The mask is a traced
+        argument of ``CompiledPlan.masked_batched``, so occupancy
+        changes NEVER recompile.
+
+    Double buffering: ``dispatch()`` does not block on the device.  The
+    outputs and carried variables are futures; the donated arena buffer
+    goes back to the pool as a future too, so staging the next wave's
+    host inputs overlaps the current wave's device compute.  Reading an
+    ``output()`` is what synchronizes.
+    """
+
+    def __init__(self, pool: Optional[ArenaPool] = None, depth: int = 2):
+        self.pool = pool if pool is not None else ArenaPool(depth=depth)
+        self._buckets: Dict[str, _RaggedBucket] = {}
+
+    # -- bucket construction (init-time; all compilation happens here) --
+
+    def add_bucket(self, name: str, model: MicroModel,
+                   resolver: MicroMutableOpResolver, lanes: int, *,
+                   exact: bool = False,
+                   arena_size_bytes: Optional[int] = None,
+                   planner: Optional[object] = None,
+                   prefer_offline_plan: bool = True,
+                   host_arena: Optional[TwoStackArena] = None) -> None:
+        """Admit a model family with ``lanes`` lane slots.  Plans,
+        compiles, and warms exactly once — admission/retirement later
+        touch only the lane table."""
+        if name in self._buckets:
+            raise ValueError(f"bucket {name!r} already exists")
+        if lanes < 1:
+            raise ValueError("lanes must be >= 1")
+        alloc = plan_model(model, resolver, arena_size_bytes, planner,
+                           prefer_offline_plan, host_arena)
+        self.pool.ensure(alloc.nonpersistent_nbytes)
+        self._buckets[name] = _RaggedBucket(
+            name, alloc, CompiledPlan(alloc), lanes, exact)
+
+    # -- lane-table views ------------------------------------------------
+
+    @property
+    def lane_table(self) -> List[LaneState]:
+        """Every lane of every bucket — the global lane table."""
+        return [l for b in self._buckets.values() for l in b.table]
+
+    def lanes(self, bucket: str) -> List[LaneState]:
+        return self._buckets[bucket].table
+
+    def free_lanes(self, bucket: str) -> List[int]:
+        return [l.slot for l in self._buckets[bucket].table
+                if not l.active]
+
+    def occupancy(self) -> float:
+        table = self.lane_table
+        if not table:
+            return 0.0
+        return sum(l.active for l in table) / len(table)
+
+    # -- admission / retirement (between dispatches; no recompilation) --
+
+    def admit(self, bucket: str, uid: Optional[int] = None) -> int:
+        """Claim a free lane for a new request: reset its continuation
+        state to the model's initial variable values, zero its step
+        counter, and set its mask bit.  Returns the lane slot."""
+        b = self._buckets[bucket]
+        for lane in b.table:
+            if not lane.active:
+                break
+        else:
+            raise RuntimeError(f"bucket {bucket!r}: no free lane")
+        lane.active, lane.uid, lane.step = True, uid, 0
+        if b.variables:
+            b.variables = tuple(
+                v.at[lane.slot].set(init) for v, init in
+                zip(b.variables, b.alloc.init_variables))
+        b.inputs[lane.slot] = {}
+        return lane.slot
+
+    def retire(self, bucket: str, slot: int) -> LaneState:
+        """Free a lane mid-flight: clear its mask bit and staged inputs.
+        The other lanes' continuation state is untouched and the next
+        dispatch reuses the same compiled program."""
+        b = self._buckets[bucket]
+        lane = b.table[slot]
+        lane.active = False
+        lane.uid = None
+        b.inputs[slot] = {}
+        return lane
+
+    # -- per-wave input staging -----------------------------------------
+
+    def set_input(self, bucket: str, slot: int, pos: int,
+                  value: np.ndarray) -> None:
+        b = self._buckets[bucket]
+        if not b.table[slot].active:
+            raise RuntimeError(
+                f"bucket {bucket!r} lane {slot} is not active")
+        tid = b.alloc.model.inputs[pos]
+        spec = b.alloc.specs[tid]
+        value = np.asarray(value)
+        if tuple(value.shape) != tuple(spec.shape):
+            raise ValueError(f"bucket {bucket!r} lane {slot} input {pos}: "
+                             f"shape {value.shape} != {spec.shape}")
+        b.inputs[slot][pos] = value.astype(_jnp_dtype(spec.dtype))
+
+    def _stacked_inputs(self, b: _RaggedBucket) -> Tuple[jnp.ndarray, ...]:
+        model = b.alloc.model
+        n_in = len(model.inputs)
+        for lane in b.table:
+            if lane.active and len(b.inputs[lane.slot]) != n_in:
+                raise RuntimeError(
+                    f"bucket {b.name!r} lane {lane.slot}: not all "
+                    f"inputs set for this wave")
+        stacked = []
+        for pos in range(n_in):
+            spec = b.alloc.specs[model.inputs[pos]]
+            zero = np.zeros(spec.shape, _jnp_dtype(spec.dtype))
+            lanes = [b.inputs[slot].get(pos, zero)
+                     for slot in range(b.lanes)]
+            stacked.append(jnp.asarray(np.stack(lanes)))
+        return tuple(stacked)
+
+    # -- the ragged dispatch --------------------------------------------
+
+    def dispatch(self) -> int:
+        """Advance every bucket that has at least one active lane by one
+        step — ONE masked jitted dispatch per such bucket.  Returns the
+        number of lanes advanced.  Does not block on the device (see
+        class docstring); inputs staged for this wave are consumed.
+
+        Staging is validated for EVERY bucket before ANY bucket runs, so
+        a staging error raises with no lane advanced — dispatch is
+        atomic across buckets and safe to retry after restaging."""
+        waves = []
+        for b in self._buckets.values():
+            mask = np.array([l.active for l in b.table])
+            if mask.any():
+                waves.append((b, mask, self._stacked_inputs(b)))
+        advanced = 0
+        for b, mask, ins in waves:
+            buf = self.pool.take_batch(b.lanes)
+            with Q.x64_scope():
+                buf, variables, outs = b.compiled.masked_batched(
+                    b.lanes, b.exact)(
+                    buf, b.variables, tuple(b.alloc.consts), ins,
+                    jnp.asarray(mask))
+            b.outs = outs
+            b.outs_host = None
+            b.variables = variables
+            self.pool.put_batch(buf)
+            b.dispatch_count += 1
+            b.inputs = [{} for _ in range(b.lanes)]
+            for lane in b.table:
+                if lane.active:
+                    lane.step += 1
+                    advanced += 1
+        return advanced
+
+    def output(self, bucket: str, slot: int, pos: int) -> np.ndarray:
+        """Lane ``slot``'s model output ``pos`` from the last dispatch.
+        This is the synchronization point of the double buffer.  The
+        whole output stack transfers to host ONCE per wave (cached), so
+        reading every active lane costs one device round-trip, not k."""
+        return self.outputs(bucket, pos)[slot]
+
+    def outputs(self, bucket: str, pos: int) -> np.ndarray:
+        """All lanes' output ``pos`` from the last dispatch, stacked on
+        axis 0 (inactive lanes hold garbage — consult the lane table)."""
+        b = self._buckets[bucket]
+        assert b.outs is not None, "dispatch() first"
+        if b.outs_host is None:
+            b.outs_host = [np.asarray(o) for o in b.outs]
+        return b.outs_host[pos]

@@ -20,6 +20,9 @@ from .schema import (MicroModel, OpCode, OpDef, QuantParams, TensorDef,
 
 @dataclass(frozen=True)
 class TensorRef:
+    """Lightweight handle to a tensor being built: its index in the
+    graph plus a back-reference for shape/dtype lookups."""
+
     index: int
     builder: "GraphBuilder" = field(repr=False, compare=False, hash=False)
 
@@ -33,6 +36,11 @@ class TensorRef:
 
 
 class GraphBuilder:
+    """Python-side model authoring API: declare inputs/consts/variables,
+    chain ops (conv2d, fully_connected, svdf, ...), mark outputs — then
+    ``export()`` serializes the graph into the µFB flatbuffer-analogue
+    the interpreter loads."""
+
     def __init__(self, name: str = "model"):
         self.name = name
         self.tensors: List[TensorDef] = []

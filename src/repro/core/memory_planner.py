@@ -51,6 +51,10 @@ class BufferRequest:
 
 @dataclass
 class MemoryPlan:
+    """A planner's output: one byte offset per BufferRequest inside a
+    ``total_bytes`` nonpersistent section, time-overlap safe
+    (``validate()`` proves it)."""
+
     offsets: List[int]            # parallel to the request list
     total_bytes: int
     requests: List[BufferRequest]

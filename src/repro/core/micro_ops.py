@@ -96,6 +96,10 @@ def _nbytes(spec: TensorSpec) -> int:
 
 @register_op(OpCode.CONV_2D)
 class Conv2D:
+    """Standard 2-D convolution (NHWC x OHWI), float or per-channel int8
+    with fused bias/activation — paper Table 1's flagship kernel.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -164,6 +168,10 @@ class Conv2D:
 
 @register_op(OpCode.DEPTHWISE_CONV_2D)
 class DepthwiseConv2D:
+    """Depthwise 2-D convolution (channel multiplier layout), the
+    MobileNet/VWW workhorse; float or per-channel int8.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -236,6 +244,10 @@ class DepthwiseConv2D:
 
 @register_op(OpCode.FULLY_CONNECTED)
 class FullyConnected:
+    """Dense layer y = xW^T + b with optional fused activation; int8 path
+    requantizes through the TFLite fixed-point scheme.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -391,6 +403,10 @@ def _pool_prepare(ctx, op):
 
 @register_op(OpCode.MAX_POOL_2D)
 class MaxPool2D:
+    """Max pooling over NHWC windows via reduce_window; int8-safe (init
+    is the int8 minimum, comparisons are exact).
+    """
+
     prepare = staticmethod(_pool_prepare)
 
     @staticmethod
@@ -409,6 +425,10 @@ class MaxPool2D:
 
 @register_op(OpCode.AVERAGE_POOL_2D)
 class AvgPool2D:
+    """Average pooling over NHWC windows; int8 accumulates in int32 and
+    rounds back to the shared input/output scale.
+    """
+
     prepare = staticmethod(_pool_prepare)
 
     @staticmethod
@@ -443,6 +463,10 @@ class AvgPool2D:
 
 @register_op(OpCode.RESHAPE)
 class Reshape:
+    """Shape-only view change (supports one -1 wildcard); no data
+    movement beyond the reshape itself.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -463,6 +487,8 @@ class Reshape:
 
 @register_op(OpCode.TRANSPOSE)
 class Transpose:
+    """Axis permutation by the serialized perm parameter."""
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -476,6 +502,10 @@ class Transpose:
 
 @register_op(OpCode.CONCATENATION)
 class Concatenation:
+    """Concatenate inputs along one axis; output spec sums that axis
+    across the input specs.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         axis = op.params.get("axis", -1)
@@ -492,6 +522,10 @@ class Concatenation:
 
 @register_op(OpCode.PAD)
 class Pad:
+    """Zero padding by per-axis (lo, hi) amounts from the serialized
+    paddings parameter.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -509,6 +543,10 @@ class Pad:
 
 @register_op(OpCode.STRIDED_SLICE)
 class StridedSlice:
+    """Strided slicing with serialized begin/end/strides, shape computed
+    at prepare time.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -527,6 +565,8 @@ class StridedSlice:
 
 @register_op(OpCode.SPLIT)
 class Split:
+    """Even split along one axis into len(op.outputs) equal parts."""
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -545,6 +585,10 @@ class Split:
 
 @register_op(OpCode.MEAN)
 class Mean:
+    """Mean reduction over the serialized axes (optionally keepdims);
+    int8 reduces in float and requantizes to the output scale.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -625,6 +669,10 @@ _make_unary(OpCode.LEAKY_RELU, lambda x: jnp.where(x >= 0, x, 0.01 * x))
 
 @register_op(OpCode.SOFTMAX)
 class Softmax:
+    """Softmax along the last axis; int8 follows the TFLite convention
+    (output scale 1/256, zero point -128).
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -652,6 +700,10 @@ class Softmax:
 
 @register_op(OpCode.IDENTITY)
 class Identity:
+    """Pass-through op (shape/dtype preserved) — the exporter's
+    placeholder for folded or no-op nodes.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -675,6 +727,10 @@ class Dropout(Identity):
 
 @register_op(OpCode.QUANTIZE)
 class QuantizeOp:
+    """float32 -> int8 affine quantization to the output tensor's (scale,
+    zero_point), baked at prepare time.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -692,6 +748,10 @@ class QuantizeOp:
 
 @register_op(OpCode.DEQUANTIZE)
 class DequantizeOp:
+    """int8 -> float32 affine dequantization from the input tensor's
+    (scale, zero_point), baked at prepare time.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -761,6 +821,10 @@ class SVDF:
 
 @register_op(OpCode.MATMUL)
 class MatMul:
+    """General (optionally batched) matmul with broadcastable batch dims
+    and a transpose_b flag — the pod-model building block.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         a = ctx.tensor_spec(op.inputs[0])
@@ -786,11 +850,17 @@ class MatMul:
 
 @register_op(OpCode.BATCH_MATMUL)
 class BatchMatMul(MatMul):
+    """Alias of MatMul: explicitly batched contraction, same prepare/eval."""
+
     pass
 
 
 @register_op(OpCode.RMS_NORM)
 class RMSNorm:
+    """Root-mean-square normalization with learned gain, computed in
+    float32 and cast back.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -808,6 +878,10 @@ class RMSNorm:
 
 @register_op(OpCode.LAYER_NORM)
 class LayerNorm:
+    """Layer normalization with learned gain and bias, computed in
+    float32 and cast back.
+    """
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])
@@ -826,6 +900,8 @@ class LayerNorm:
 
 @register_op(OpCode.ROPE)
 class RoPE:
+    """Rotary position embedding over (B, S, H, D) activations."""
+
     @staticmethod
     def prepare(ctx, op):
         x = ctx.tensor_spec(op.inputs[0])        # (B, S, H, D)
@@ -876,6 +952,8 @@ class Attention:
 
 @register_op(OpCode.EMBEDDING_LOOKUP)
 class EmbeddingLookup:
+    """Row gather from an embedding table: (ids) -> (ids.shape, d_model)."""
+
     @staticmethod
     def prepare(ctx, op):
         ids = ctx.tensor_spec(op.inputs[0])

@@ -35,6 +35,8 @@ REFERENCE_TAG = "reference"
 
 @dataclass
 class TensorSpec:
+    """Shape + dtype of one tensor as the prepare phase resolves it."""
+
     shape: Tuple[int, ...]
     dtype: str
 
@@ -54,6 +56,10 @@ class PrepareResult:
 
 @dataclass(frozen=True)
 class OpRegistration:
+    """One kernel implementation of one opcode under one vendor tag:
+    its prepare/eval pair plus a code-size estimate (the Table-2
+    linked-code analogue)."""
+
     opcode: int
     tag: str
     prepare: Callable[..., PrepareResult]
@@ -117,7 +123,8 @@ def register_op(opcode: int, tag: str = REFERENCE_TAG):
 
 
 class OpResolutionError(KeyError):
-    pass
+    """No registration for an opcode under the requested tag chain —
+    the op was never linked in (TFLM's unresolved-op error)."""
 
 
 def resolve_chain(opcode: int, tags: Sequence[str]) -> OpRegistration:

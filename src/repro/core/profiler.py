@@ -29,6 +29,8 @@ _OP_NAMES = {v: k for k, v in vars(OpCode).items()
 
 @dataclasses.dataclass
 class OpProfile:
+    """Wall time and output size of one op in an eager profiling run."""
+
     index: int
     op_name: str
     wall_us: float
@@ -41,6 +43,9 @@ class OpProfile:
 
 @dataclasses.dataclass
 class ProfileReport:
+    """Per-op eager timings next to the fused jitted total — the
+    paper's §4.6 profiler surface."""
+
     per_op: List[OpProfile]
     fused_total_us: float
 

@@ -83,6 +83,9 @@ def dtype_itemsize(name: str) -> int:
 # ---------------------------------------------------------------------------
 
 class OpCode:
+    """The serialized operator vocabulary (TFLite builtin-op analogue),
+    including the pod-scale SERVING_* macro-ops."""
+
     CONV_2D = 0
     DEPTHWISE_CONV_2D = 1
     FULLY_CONNECTED = 2
@@ -147,6 +150,9 @@ OP_NAMES = {v: k for k, v in vars(OpCode).items() if not k.startswith("_")}
 # ---------------------------------------------------------------------------
 
 class TensorFlags:
+    """Bit flags classifying a tensor's storage class: const (flash),
+    variable (persistent state), model input/output."""
+
     NONE = 0
     IS_CONST = 1          # weights/bias: data lives in the model blob (flash)
     IS_VARIABLE = 2       # persistent state (e.g. SVDF activation state)
@@ -174,6 +180,9 @@ class QuantParams:
 
 @dataclass
 class TensorDef:
+    """Serialized tensor record: name, shape, dtype, storage-class
+    flags, and quantization parameters."""
+
     name: str
     shape: Tuple[int, ...]
     dtype: str                       # numpy-style name, or "bfloat16"
@@ -201,6 +210,9 @@ class TensorDef:
 
 @dataclass
 class OpDef:
+    """Serialized operator record: opcode, input/output tensor indices
+    (-1 marks an optional absent input), and builtin params."""
+
     opcode: int
     inputs: Tuple[int, ...]          # tensor indices; -1 == optional-absent
     outputs: Tuple[int, ...]

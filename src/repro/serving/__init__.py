@@ -4,7 +4,7 @@ registry-resolved serving kernels (ops)."""
 
 from . import ops  # registers the reference serving macro-kernels
 from .engine import DEFAULT_TAGS, Request, RequestResult, ServingEngine
-from .host import MultiTenantHost
+from .host import MicroRequest, MicroRequestResult, MultiTenantHost
 
 __all__ = ["DEFAULT_TAGS", "Request", "RequestResult", "ServingEngine",
-           "MultiTenantHost", "ops"]
+           "MicroRequest", "MicroRequestResult", "MultiTenantHost", "ops"]

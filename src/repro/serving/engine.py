@@ -15,6 +15,22 @@ invoke loop (paper §4.1), with the same allocation discipline:
     vendor-optimized serving kernels shadow the reference ones per-op
     with no engine changes, exactly like the micro interpreter's
     ``TAGS=`` build mechanism.
+
+Compile-once invariants (what callers may rely on):
+
+  * **traced once** — the decode step is jitted at engine construction
+    with the resolved registration's eval, context, and OpDef bound; the
+    prefill step is jitted once per distinct prompt length.  Model
+    family, cache layout, slot count, and window are baked in then.
+  * **donated** — nothing in this engine: the KV cache and sampling
+    state are carried functionally (cache in, cache out) so a step can
+    be replayed; the ARENA accounts capacity (KV is an
+    interpreter-lifetime tail allocation) but does not back device
+    buffers here.
+  * **may vary per call** — token values, per-slot lengths, and which
+    slots are live.  Admitting a request writes ONLY slot bookkeeping
+    and cache rows; it never retraces, which is what keeps continuous
+    batching allocation-free inside the loop.
 """
 
 from __future__ import annotations
@@ -42,6 +58,8 @@ DEFAULT_TAGS = ("pallas", "reference")
 
 @dataclasses.dataclass
 class Request:
+    """One pod-scale generation request: a prompt plus decode budget."""
+
     uid: int
     tokens: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 32
@@ -51,6 +69,8 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
+    """Accumulated outcome of a Request: emitted tokens and timings."""
+
     uid: int
     prompt_len: int
     output: List[int] = dataclasses.field(default_factory=list)

@@ -11,27 +11,70 @@ way TF Micro lets multiple interpreters share one arena:
   * admission fails loudly (ArenaOverflowError) when the stacks would
     cross — the paper's capacity-error semantics.
 
-Micro-models are first-class tenants too: ``add_micro_model`` admits a
-µFB model served by an ``InterpreterPool`` — its persistents stack in
-the same shared arena as the engines' KV caches, and every micro tenant
-draws pooled nonpersistent buffers from one ``ArenaPool``, so B
-requests advance per jitted dispatch (batch-granularity serving).
+Micro-models are first-class tenants too, in two flavours:
+
+  * ``add_micro_model`` — lockstep batch granularity: an
+    ``InterpreterPool`` advances B identical lanes per jitted dispatch
+    (``run_micro`` chunks a request list);
+  * ``add_ragged_micro`` + ``submit_micro`` — request granularity: the
+    tenant becomes a bucket of ONE shared ``RaggedInterpreterPool``.
+    Requests are streams of frames; lanes are admitted as they free up,
+    carry per-request continuation state across waves, and retire
+    mid-flight without recompiling — so the micro path (e.g. the int8
+    FC/SVDF families) and the pod engines drain through ONE scheduler,
+    ``run_all``.
+
+Compile-once invariants this module maintains:
+
+  * **traced once** — each engine's prefill/decode step and each micro
+    bucket's masked batched body are compiled at ``add_*`` time (tenant
+    admission), never inside the serving loop.
+  * **donated** — micro arena buffers and variable stacks cycle through
+    the shared ``ArenaPool``; engine caches are carried functionally
+    through the jitted decode step.
+  * **may vary per call** — request content (tokens, frames), slot/lane
+    occupancy masks, and step counters.  Admitting a TENANT (a new
+    model) is the only act that allocates or compiles; admitting a
+    REQUEST only flips lane-table state.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
-from repro.core.executor import ArenaPool, InterpreterPool
+from repro.core.executor import (ArenaPool, InterpreterPool,
+                                 RaggedInterpreterPool)
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import MicroModel
 from repro.models.registry import ModelBundle
 
 from .engine import Request, RequestResult, ServingEngine
+
+
+@dataclasses.dataclass
+class MicroRequest:
+    """A request-granularity micro-model job: ``frames[t]`` holds the
+    per-input-position arrays the model consumes on its t-th invocation
+    (one entry → single-shot; several → a streaming continuation)."""
+
+    uid: int
+    frames: List[List[np.ndarray]]
+
+
+@dataclasses.dataclass
+class MicroRequestResult:
+    """Per-request outcome of the ragged micro path: output 0 after
+    every completed step, plus the step count at completion."""
+
+    uid: int
+    outputs: List[np.ndarray] = dataclasses.field(default_factory=list)
+    steps: int = 0
+    done: bool = False
 
 
 def _scratch_bytes(bundle: ModelBundle, max_prompt: int) -> int:
@@ -50,6 +93,10 @@ class MultiTenantHost:
         self.engines: Dict[str, ServingEngine] = {}
         self.micro: Dict[str, InterpreterPool] = {}
         self._micro_pool = ArenaPool()
+        self.ragged = RaggedInterpreterPool(pool=self._micro_pool)
+        self._micro_queue: Dict[str, List[MicroRequest]] = {}
+        self._micro_inflight: Dict[str, Dict[int, MicroRequest]] = {}
+        self.micro_results: Dict[str, Dict[int, MicroRequestResult]] = {}
         self._scratch_high = 0
 
     def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
@@ -81,6 +128,68 @@ class MultiTenantHost:
         self.micro[name] = pool
         return pool
 
+    def add_ragged_micro(self, name: str, model: MicroModel,
+                         resolver: MicroMutableOpResolver, *,
+                         lanes: int = 4, exact: bool = False) -> None:
+        """Admit a request-granularity micro tenant: a bucket of the
+        host's shared RaggedInterpreterPool.  Persistents stack in the
+        shared arena like every other tenant; all planning and
+        compilation happens HERE — ``submit_micro`` and the scheduler
+        only touch the lane table."""
+        self.ragged.add_bucket(name, model, resolver, lanes,
+                               host_arena=self.arena, exact=exact)
+        self._micro_queue[name] = []
+        self._micro_inflight[name] = {}
+        self.micro_results[name] = {}
+
+    def submit_micro(self, name: str, uid: int,
+                     frames: Sequence[Sequence[np.ndarray]]) -> None:
+        """Queue a micro request: ``frames[t]`` are the input arrays for
+        the request's t-th invocation (len 1 = single shot, more = a
+        streaming continuation across waves)."""
+        frames = [list(f) for f in frames]
+        if not frames:
+            raise ValueError("a micro request needs at least one frame")
+        self._micro_queue[name].append(MicroRequest(uid, frames))
+        self.micro_results[name][uid] = MicroRequestResult(uid=uid)
+
+    def _micro_pending(self) -> bool:
+        return any(self._micro_queue.values()) \
+            or any(self._micro_inflight.values())
+
+    def micro_step(self) -> bool:
+        """One scheduler tick of the ragged micro path: admit queued
+        requests into free lanes, stage every active lane's next frame,
+        advance all buckets with ONE masked dispatch each, then retire
+        lanes whose requests finished.  Returns True if work remains."""
+        for name, queue in self._micro_queue.items():
+            inflight = self._micro_inflight[name]
+            while queue and self.ragged.free_lanes(name):
+                req = queue.pop(0)
+                slot = self.ragged.admit(name, uid=req.uid)
+                inflight[slot] = req
+            for slot, req in inflight.items():
+                step = self.ragged.lanes(name)[slot].step
+                for pos, arr in enumerate(req.frames[step]):
+                    self.ragged.set_input(name, slot, pos, arr)
+        if not self.ragged.dispatch():
+            return self._micro_pending()
+        for name, inflight in self._micro_inflight.items():
+            for slot in list(inflight):
+                req = inflight[slot]
+                lane = self.ragged.lanes(name)[slot]
+                res = self.micro_results[name][req.uid]
+                # copy: output() returns a view into the whole wave's
+                # stacked host array — holding it would pin lanes x the
+                # needed memory for the life of the result
+                res.outputs.append(self.ragged.output(name, slot, 0).copy())
+                res.steps = lane.step
+                if lane.step >= len(req.frames):
+                    res.done = True
+                    self.ragged.retire(name, slot)
+                    del inflight[slot]
+        return self._micro_pending()
+
     def run_micro(self, name: str,
                   requests: Sequence[Sequence[np.ndarray]]
                   ) -> List[np.ndarray]:
@@ -110,8 +219,14 @@ class MultiTenantHost:
         self.engines[name].submit(req)
 
     def run_all(self) -> Dict[str, Dict[int, RequestResult]]:
-        """Round-robin the tenants until all queues drain (tenants are
-        time-multiplexed — TF Micro's 'not concurrently' contract)."""
+        """THE scheduler: round-robin every tenant — pod engines AND
+        ragged micro buckets — until all queues drain (tenants are
+        time-multiplexed — TF Micro's 'not concurrently' contract).
+        One tick = one decode step per engine with work plus one masked
+        dispatch per micro bucket with active lanes, so mixed micro+pod
+        tenancy advances through a single loop.  Every tick with work
+        pending makes progress (admission happens whenever a slot or
+        lane is free), so the loop terminates when the work does."""
         out = {}
         pending = True
         while pending:
@@ -119,6 +234,8 @@ class MultiTenantHost:
             for name, eng in self.engines.items():
                 if eng.step():
                     pending = True
+            if self._micro_queue and self.micro_step():
+                pending = True
         for name, eng in self.engines.items():
             out[name] = eng.results
         return out

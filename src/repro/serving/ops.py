@@ -46,6 +46,9 @@ class ServingContext:
 
 @register_op(OpCode.SERVING_PREFILL, tag="reference")
 class RefServingPrefill:
+    """Reference prefill macro-kernel: one prompt through the family
+    bundle's pure-jnp ``prefill``, emitting last-token logits + cache."""
+
     @staticmethod
     def prepare(ctx: ServingContext, op) -> PrepareResult:
         return PrepareResult(output_specs=[])
@@ -60,6 +63,9 @@ class RefServingPrefill:
 
 @register_op(OpCode.SERVING_DECODE, tag="reference")
 class RefServingDecode:
+    """Reference decode macro-kernel: one fused step advancing every
+    active slot via the family bundle's pure-jnp ``decode``."""
+
     @staticmethod
     def prepare(ctx: ServingContext, op) -> PrepareResult:
         return PrepareResult(output_specs=[])

@@ -1,0 +1,47 @@
+"""The documentation contract, enforced: every public class and module
+in repro.core / repro.serving carries a docstring (tools/check_docs.py),
+and the documents the architecture guide promises actually exist."""
+
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_public_classes_have_docstrings():
+    violations = check_docs.collect_violations()
+    assert not violations, "\n".join(
+        f"{rel}:{lineno}: {msg}" for rel, lineno, msg in violations)
+
+
+def test_lint_covers_both_packages():
+    files = {str(p) for p in check_docs.linted_files()}
+    assert any("core/executor.py" in f for f in files)
+    assert any("serving/host.py" in f for f in files)
+
+
+def test_lint_catches_a_missing_docstring(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "serving").mkdir()
+    (pkg / "bad.py").write_text(
+        '"""Module docstring."""\nclass Naked:\n    pass\n')
+    violations = check_docs.collect_violations(root=tmp_path)
+    assert violations == [
+        ("src/repro/core/bad.py", 2,
+         "public class Naked lacks a docstring")]
+
+
+def test_promised_documents_exist():
+    assert (REPO_ROOT / "README.md").is_file()
+    assert (REPO_ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    guide = (REPO_ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    # the guide must keep pointing at the defining modules
+    for anchor in ("core/executor.py", "core/arena.py",
+                   "core/memory_planner.py", "serving/engine.py",
+                   "serving/host.py", "serving/ops.py", "LaneState",
+                   "RaggedInterpreterPool"):
+        assert anchor in guide, f"ARCHITECTURE.md lost its {anchor} anchor"

@@ -133,11 +133,11 @@ def test_arena_pool_no_alloc_after_warmup(conv_model, resolver):
         pool.set_input(lane, 0, x)
     pool.invoke()                                   # warm-up
     allocs = pool.pool.alloc_count
-    stored = pool.pool._batched[4]
+    [stored] = pool.pool._batched[4]          # free list: one buffer
     ptr = stored.unsafe_buffer_pointer()
     for _ in range(3):
         pool.invoke()
-        again = pool.pool._batched[4]
+        [again] = pool.pool._batched[4]
         # donated dispatch hands the SAME device memory back every step
         assert again.unsafe_buffer_pointer() == ptr
     assert pool.pool.alloc_count == allocs

@@ -1,0 +1,397 @@
+"""Ragged continuation-aware batched invoke: lane admission/retirement
+bit-identity, no-recompile occupancy changes, ArenaPool double
+buffering, and the host's unified micro+pod scheduler."""
+
+import numpy as np
+import pytest
+
+from repro.apps import build_conv_reference, build_fc_stack, build_hotword
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, ArenaPool, MicroInterpreter,
+                        MicroModel, RaggedInterpreterPool, export)
+
+
+@pytest.fixture(scope="module")
+def resolver():
+    return AllOpsResolver()
+
+
+@pytest.fixture(scope="module")
+def fc_int8():
+    gb = build_fc_stack()
+    return MicroModel(export(
+        gb, representative_dataset=representative_dataset(gb),
+        quantize_int8=True))
+
+
+@pytest.fixture(scope="module")
+def conv_int8():
+    gb = build_conv_reference()
+    return MicroModel(export(
+        gb, representative_dataset=representative_dataset(gb),
+        quantize_int8=True))
+
+
+@pytest.fixture(scope="module")
+def hotword():
+    return MicroModel(export(build_hotword(n_layers=1)))
+
+
+def _alone(model, resolver, frames):
+    """Each request alone through MicroInterpreter.invoke — the
+    bit-identity reference (fresh interpreter, fresh variable state)."""
+    it = MicroInterpreter(
+        model, resolver, MicroInterpreter.required_arena_size(model,
+                                                              resolver))
+    outs = []
+    for f in frames:
+        it.set_input(0, f)
+        it.invoke()
+        outs.append(it.output(0).copy())
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# the satellite requirement: retire mid-flight, stay bit-identical
+# ---------------------------------------------------------------------------
+
+def test_retire_midflight_bit_identity_int8(conv_int8, resolver):
+    """Lanes retired mid-flight: remaining lanes' outputs stay
+    bit-identical to running each request alone (int8 is integer-exact
+    even under the vmapped throughput lowering)."""
+    rng = np.random.default_rng(0)
+    xs = [rng.normal(0, 1, (1, 16, 16, 1)).astype(np.float32)
+          for _ in range(6)]
+    want = [_alone(conv_int8, resolver, [x])[0] for x in xs]
+
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("conv", conv_int8, resolver, lanes=4)
+    slots = {i: pool.admit("conv", uid=i) for i in range(4)}
+    for i, slot in slots.items():
+        pool.set_input("conv", slot, 0, xs[i])
+    pool.dispatch()
+    for i, slot in slots.items():
+        np.testing.assert_array_equal(pool.output("conv", slot, 0),
+                                      want[i])
+    # retire two lanes mid-flight, admit the remaining requests there
+    for i in (0, 2):
+        pool.retire("conv", slots.pop(i))
+    slots[4] = pool.admit("conv", uid=4)
+    slots[5] = pool.admit("conv", uid=5)
+    for i, slot in slots.items():
+        pool.set_input("conv", slot, 0, xs[i])
+    pool.dispatch()
+    for i, slot in slots.items():
+        np.testing.assert_array_equal(pool.output("conv", slot, 0),
+                                      want[i])
+
+
+def test_ragged_streaming_continuation_bit_identity(hotword, resolver):
+    """Ragged request lengths (1/2/3 frames) with per-lane continuation
+    state: every lane must match its own dedicated interpreter at every
+    step, including after neighbours retired mid-flight (exact lowering
+    => bit-identical for float too)."""
+    rng = np.random.default_rng(1)
+    reqs = {uid: [rng.normal(0, 1, (1, 40)).astype(np.float32)
+                  for _ in range(n)]
+            for uid, n in enumerate((1, 2, 3))}
+    want = {uid: _alone(hotword, resolver, frames)
+            for uid, frames in reqs.items()}
+
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("hw", hotword, resolver, lanes=3, exact=True)
+    slots = {uid: pool.admit("hw", uid=uid) for uid in reqs}
+    live = dict(slots)
+    step = 0
+    while live:
+        for uid, slot in live.items():
+            pool.set_input("hw", slot, 0, reqs[uid][step])
+        pool.dispatch()
+        for uid, slot in list(live.items()):
+            got = pool.output("hw", slot, 0)
+            np.testing.assert_array_equal(got, want[uid][step])
+            if step + 1 == len(reqs[uid]):
+                pool.retire("hw", slot)     # mid-flight retirement
+                del live[uid]
+        step += 1
+    assert pool.occupancy() == 0.0
+
+
+def test_lane_state_isolated_from_retired_neighbour(hotword, resolver):
+    """A lane admitted into a retired slot starts from FRESH variable
+    state; a surviving lane's continuation is unaffected by the churn."""
+    rng = np.random.default_rng(2)
+    a = [rng.normal(0, 1, (1, 40)).astype(np.float32) for _ in range(3)]
+    b = rng.normal(0, 1, (1, 40)).astype(np.float32)
+    c = rng.normal(0, 1, (1, 40)).astype(np.float32)
+
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("hw", hotword, resolver, lanes=2, exact=True)
+    sa = pool.admit("hw", uid=0)
+    sb = pool.admit("hw", uid=1)
+    pool.set_input("hw", sa, 0, a[0])
+    pool.set_input("hw", sb, 0, b)
+    pool.dispatch()
+    pool.retire("hw", sb)
+    sc = pool.admit("hw", uid=2)            # reuses slot sb
+    assert sc == sb
+    pool.set_input("hw", sa, 0, a[1])
+    pool.set_input("hw", sc, 0, c)
+    pool.dispatch()
+    pool.set_input("hw", sa, 0, a[2])
+    pool.set_input("hw", sc, 0, c)
+    pool.dispatch()
+    np.testing.assert_array_equal(
+        pool.output("hw", sa, 0), _alone(hotword, resolver, a)[2])
+    np.testing.assert_array_equal(
+        pool.output("hw", sc, 0), _alone(hotword, resolver, [c, c])[1])
+
+
+# ---------------------------------------------------------------------------
+# occupancy changes never recompile; the lane table tracks lifecycle
+# ---------------------------------------------------------------------------
+
+def test_admission_retirement_never_recompiles(fc_int8, resolver):
+    rng = np.random.default_rng(3)
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("fc", fc_int8, resolver, lanes=4)
+    bucket = pool._buckets["fc"]
+    for occupancy in (1, 3, 2, 4):
+        slots = [pool.admit("fc") for _ in range(occupancy)]
+        for slot in slots:
+            pool.set_input("fc", slot, 0,
+                           rng.normal(0, 1, (1, 64)).astype(np.float32))
+        pool.dispatch()
+        for slot in slots:
+            pool.retire("fc", slot)
+    # one masked program covered every occupancy from 1..lanes
+    assert len(bucket.compiled._batched) == 1
+    assert bucket.dispatch_count == 4
+
+
+def test_lane_table_tracks_buckets_steps_lifecycle(fc_int8, hotword,
+                                                   resolver):
+    rng = np.random.default_rng(4)
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("fc", fc_int8, resolver, lanes=2)
+    pool.add_bucket("hw", hotword, resolver, lanes=2, exact=True)
+    assert len(pool.lane_table) == 4
+    s = pool.admit("fc", uid=7)
+    h = pool.admit("hw", uid=8)
+    pool.set_input("fc", s, 0, rng.normal(0, 1, (1, 64)).astype(np.float32))
+    pool.set_input("hw", h, 0, rng.normal(0, 1, (1, 40)).astype(np.float32))
+    assert pool.dispatch() == 2             # one lane per bucket advanced
+    lane = pool.lanes("fc")[s]
+    assert (lane.bucket, lane.uid, lane.step, lane.active) == \
+        ("fc", 7, 1, True)
+    assert pool.occupancy() == 0.5
+    pool.retire("fc", s)
+    assert not pool.lanes("fc")[s].active
+    assert pool.free_lanes("fc") == [0, 1]
+
+
+def test_dispatch_atomic_across_buckets(fc_int8, hotword, resolver):
+    """A staging error in ANY bucket must abort the whole dispatch with
+    no lane advanced and no inputs consumed — restage and retry."""
+    rng = np.random.default_rng(9)
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("fc", fc_int8, resolver, lanes=2)
+    pool.add_bucket("hw", hotword, resolver, lanes=2, exact=True)
+    sf = pool.admit("fc", uid=0)
+    sh = pool.admit("hw", uid=1)
+    x = rng.normal(0, 1, (1, 64)).astype(np.float32)
+    f = rng.normal(0, 1, (1, 40)).astype(np.float32)
+    pool.set_input("fc", sf, 0, x)          # "hw" lane left unstaged
+    with pytest.raises(RuntimeError):
+        pool.dispatch()
+    assert pool.lanes("fc")[sf].step == 0   # nothing advanced
+    assert pool.lanes("hw")[sh].step == 0
+    pool.set_input("hw", sh, 0, f)          # fc's staged input survived
+    assert pool.dispatch() == 2
+    np.testing.assert_array_equal(pool.output("fc", sf, 0),
+                                  _alone(fc_int8, resolver, [x])[0])
+    np.testing.assert_array_equal(pool.output("hw", sh, 0),
+                                  _alone(hotword, resolver, [f])[0])
+
+
+def test_ragged_pool_input_contract(fc_int8, resolver):
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("fc", fc_int8, resolver, lanes=2)
+    with pytest.raises(RuntimeError):       # inactive lane
+        pool.set_input("fc", 0, 0, np.zeros((1, 64), np.float32))
+    slot = pool.admit("fc")
+    with pytest.raises(ValueError):         # wrong shape
+        pool.set_input("fc", slot, 0, np.zeros((1, 3), np.float32))
+    with pytest.raises(RuntimeError):       # active lane missing inputs
+        pool.dispatch()
+    pool.admit("fc")
+    with pytest.raises(RuntimeError):       # bucket full
+        pool.admit("fc")
+    with pytest.raises(ValueError):         # duplicate bucket
+        pool.add_bucket("fc", fc_int8, resolver, lanes=2)
+
+
+# ---------------------------------------------------------------------------
+# ArenaPool double buffering
+# ---------------------------------------------------------------------------
+
+def test_arena_pool_double_buffer_free_list():
+    pool = ArenaPool(depth=2)
+    pool.ensure(256)
+    a = pool.take_batch(4)
+    b = pool.take_batch(4)              # second in-flight buffer
+    assert pool.alloc_count == 2
+    pool.put_batch(a)
+    pool.put_batch(b)
+    # steady state: the same two physical buffers cycle, no new allocs
+    for _ in range(3):
+        x = pool.take_batch(4)
+        y = pool.take_batch(4)
+        pool.put_batch(x)
+        pool.put_batch(y)
+    assert pool.alloc_count == 2
+    # the free list never holds more than `depth` buffers
+    c = pool._alloc((4, pool.nbytes))
+    pool.put_batch(c)
+    assert len(pool._batched[4]) == 2
+
+
+def test_ragged_dispatch_steady_state_allocs(fc_int8, resolver):
+    """After warm-up, repeated ragged waves draw from the pooled
+    (donated) buffers only."""
+    rng = np.random.default_rng(5)
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("fc", fc_int8, resolver, lanes=4)
+    slots = [pool.admit("fc") for _ in range(2)]
+
+    def wave():
+        for slot in slots:
+            pool.set_input("fc", slot, 0,
+                           rng.normal(0, 1, (1, 64)).astype(np.float32))
+        pool.dispatch()
+        pool.outputs("fc", 0)
+
+    wave()                                  # warm-up
+    allocs = pool.pool.alloc_count
+    for _ in range(4):
+        wave()
+    assert pool.pool.alloc_count == allocs
+
+
+# ---------------------------------------------------------------------------
+# the host's unified scheduler
+# ---------------------------------------------------------------------------
+
+def test_host_ragged_micro_bit_identity(fc_int8, hotword, resolver):
+    """Mixed int8-FC + streaming-SVDF micro tenants drain through
+    run_all with more requests than lanes; every result is bit-identical
+    to running that request alone through MicroInterpreter.invoke."""
+    from repro.serving import MultiTenantHost
+
+    rng = np.random.default_rng(6)
+    host = MultiTenantHost(arena_bytes=64 << 20)
+    host.add_ragged_micro("fc", fc_int8, resolver, lanes=2)
+    host.add_ragged_micro("hw", hotword, resolver, lanes=2, exact=True)
+
+    fc_reqs = {i: [rng.normal(0, 1, (1, 64)).astype(np.float32)]
+               for i in range(5)}
+    hw_reqs = {i: [rng.normal(0, 1, (1, 40)).astype(np.float32)
+                   for _ in range(n)]
+               for i, n in enumerate((2, 1, 3))}
+    for uid, frames in fc_reqs.items():
+        host.submit_micro("fc", uid, [[f] for f in frames])
+    for uid, frames in hw_reqs.items():
+        host.submit_micro("hw", uid, [[f] for f in frames])
+    host.run_all()
+
+    for uid, frames in fc_reqs.items():
+        res = host.micro_results["fc"][uid]
+        assert res.done and res.steps == len(frames)
+        np.testing.assert_array_equal(
+            res.outputs[-1], _alone(fc_int8, resolver, frames)[-1])
+    for uid, frames in hw_reqs.items():
+        res = host.micro_results["hw"][uid]
+        assert res.done and res.steps == len(frames)
+        for got, want in zip(res.outputs,
+                             _alone(hotword, resolver, frames)):
+            np.testing.assert_array_equal(got, want)
+
+
+def test_host_mixed_micro_pod_one_scheduler(fc_int8, resolver):
+    """An int8 FC micro tenant and a pod-scale ServingEngine tenant in
+    ONE host, drained by ONE run_all: the engine's tokens match a
+    solo-engine run and the micro results stay bit-identical."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import MultiTenantHost, Request, ServingEngine
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = np.arange(1, 6, dtype=np.int32)
+
+    solo = ServingEngine(m, params, max_slots=1, cache_len=32)
+    solo.submit(Request(uid=1, tokens=prompt, max_new_tokens=3))
+    want_tokens = solo.run()[1].output
+
+    rng = np.random.default_rng(7)
+    host = MultiTenantHost(arena_bytes=256 << 20)
+    host.add_model("lm", m, params, max_slots=1, cache_len=32)
+    host.add_ragged_micro("fc", fc_int8, resolver, lanes=2)
+    xs = [rng.normal(0, 1, (1, 64)).astype(np.float32) for _ in range(3)]
+    for uid, x in enumerate(xs):
+        host.submit_micro("fc", uid, [[x]])
+    host.submit("lm", Request(uid=1, tokens=prompt, max_new_tokens=3))
+    results = host.run_all()
+
+    assert results["lm"][1].output == want_tokens
+    for uid, x in enumerate(xs):
+        res = host.micro_results["fc"][uid]
+        assert res.done
+        np.testing.assert_array_equal(
+            res.outputs[0], _alone(fc_int8, resolver, [x])[0])
+
+
+@pytest.mark.slow
+def test_ragged_half_occupancy_beats_sequential(fc_int8, resolver):
+    """The acceptance throughput bar, conservatively: at 50% occupancy
+    of a 16-lane bucket the per-request dispatch cost must undercut a
+    sequential single invoke by >= 2x (benchmark measures ~6x)."""
+    import time
+
+    rng = np.random.default_rng(8)
+    xs = [rng.normal(0, 1, (1, 64)).astype(np.float32) for _ in range(8)]
+
+    it = MicroInterpreter(
+        fc_int8, resolver,
+        MicroInterpreter.required_arena_size(fc_int8, resolver))
+
+    def sequential():
+        it.set_input(0, xs[0])
+        it.invoke()
+        it.output(0)
+
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("fc", fc_int8, resolver, lanes=16)
+    slots = [pool.admit("fc") for _ in range(8)]
+
+    def wave():
+        for i, slot in enumerate(slots):
+            pool.set_input("fc", slot, 0, xs[i])
+        pool.dispatch()
+        pool.outputs("fc", 0)
+
+    def median(fn, iters=30):
+        fn(), fn()                          # warm-up / compile
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[iters // 2]
+
+    t_seq = median(sequential)
+    per_req = median(wave) / len(slots)
+    assert t_seq / per_req >= 2.0, \
+        f"ragged 50% occupancy only {t_seq / per_req:.2f}x vs sequential"

@@ -1,0 +1,88 @@
+"""Docs lint: every public class (and module) in ``repro.core`` and
+``repro.serving`` must carry a docstring.
+
+The architecture guide (docs/ARCHITECTURE.md) points readers at the
+defining classes; this check keeps those pointers from rotting into
+undocumented code.  It is pure-AST — nothing is imported — so it is
+safe to run anywhere, and it is wired into the test suite
+(tests/test_docs_lint.py) so a missing docstring fails CI.
+
+Usage::
+
+    python tools/check_docs.py            # lint, exit 1 on violations
+    python tools/check_docs.py --list     # print the files scanned
+
+A class is *public* when its name does not start with an underscore.
+Nested classes inside functions (test fixtures, closures) are exempt:
+only module-level classes are part of the documented surface.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+LINTED_PACKAGES = ("src/repro/core", "src/repro/serving")
+
+
+def linted_files(root: Path = REPO_ROOT) -> List[Path]:
+    """The Python files the docs contract covers, sorted for stable
+    output."""
+    files: List[Path] = []
+    for pkg in LINTED_PACKAGES:
+        files.extend(sorted((root / pkg).glob("*.py")))
+    return files
+
+
+def _module_level_classes(tree: ast.Module) -> Iterator[ast.ClassDef]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+def check_file(path: Path, root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]:
+    """Violations in one file as (relative_path, lineno, message)."""
+    rel = str(path.relative_to(root))
+    tree = ast.parse(path.read_text(), filename=rel)
+    out: List[Tuple[str, int, str]] = []
+    if ast.get_docstring(tree) is None:
+        out.append((rel, 1, "module lacks a docstring"))
+    for node in _module_level_classes(tree):
+        if node.name.startswith("_"):
+            continue
+        if ast.get_docstring(node) is None:
+            out.append((rel, node.lineno,
+                        f"public class {node.name} lacks a docstring"))
+    return out
+
+
+def collect_violations(root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]:
+    """All docstring violations under the linted packages."""
+    out: List[Tuple[str, int, str]] = []
+    for path in linted_files(root):
+        out.extend(check_file(path, root))
+    return out
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--list" in argv:
+        for path in linted_files():
+            print(path.relative_to(REPO_ROOT))
+        return 0
+    violations = collect_violations()
+    for rel, lineno, msg in violations:
+        print(f"{rel}:{lineno}: {msg}")
+    if violations:
+        print(f"\n{len(violations)} docstring violation(s); see "
+              f"docs/ARCHITECTURE.md for the documentation contract")
+        return 1
+    print(f"docs lint OK ({len(linted_files())} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
