@@ -1,0 +1,293 @@
+"""Arrival-process serving benchmark: Poisson arrivals, ragged
+continuation lengths, lockstep-FIFO vs ragged-FIFO vs ragged-EDF.
+
+Throughput benchmarks (``batched_invoke``, ``ragged_invoke``) measure
+the cost of one dispatch; this one measures what a *user* feels —
+completion latency under a live arrival process — and what an operator
+sells — SLO attainment.  Requests arrive by a deterministic-seed
+Poisson process with ragged continuation lengths (1..6 frames) and a
+per-request deadline; three disciplines serve the identical workload:
+
+  * ``lockstep_fifo`` — an ``InterpreterPool`` wave admits up to B
+    queued requests FIFO and must run ALL of them to the LONGEST
+    request's length before admitting again (a lockstep pool cannot
+    retire a lane mid-wave): the head-of-line blocking baseline;
+  * ``ragged_fifo``  — the real ``MultiTenantHost`` micro scheduler
+    (``micro_step``): lanes admit/retire between waves, FIFO order;
+  * ``ragged_edf``   — same host, ``EDFPolicy``: the free lane goes to
+    the queued request whose deadline expires soonest.
+
+Dispatches are REAL (the actual compiled programs run every tick);
+latency is accounted on a **virtual clock** that advances by the warm
+measured cost of one dispatch per tick, and the host's scheduling
+policies read that same clock — so the reported p50/p95/p99 completion
+latencies and SLO attainment are deterministic given the seed, up to
+the single measured dispatch constant.  A second section reports the
+bucketed-prefill compile counts (``ServingEngine.prefill_compiles``)
+for mixed prompt lengths, bucketed vs exact-length.
+
+Emits ``BENCH_arrival_process.json`` via ``python -m benchmarks.run
+arrival_process``; ``python -m benchmarks.arrival_process --tiny``
+runs a seconds-scale end-to-end smoke (no JSON written) used by the
+slow test tier.  How to read the rows: docs/SCHEDULING.md.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.apps import build_fc_stack
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, InterpreterPool, MicroModel,
+                        RaggedInterpreterPool, export)
+from repro.serving import MultiTenantHost, get_policy
+
+from .common import print_table, save_result, time_call
+
+SEED = 0
+LANES = 16
+N_REQUESTS = 160
+OCCUPANCIES = (0.25, 0.5, 0.75, 0.9)
+FRAME_LO, FRAME_HI = 1, 6          # frames per request, inclusive
+SLO_FACTOR = 4.0                   # deadline = arrival + frames*D*factor
+IN_SHAPE = (1, 64)                 # fc_stack input
+
+
+class VirtualClock:
+    """The benchmark's µs clock: a mutable ``now_us`` the simulation
+    advances by one measured dispatch cost per tick.  Passed as the
+    host's ``clock`` so admission policies (EDF deadlines, aging) run
+    on simulated time — deterministic latency accounting over real
+    dispatches."""
+
+    def __init__(self) -> None:
+        self.now_us = 0.0
+
+    def __call__(self) -> int:
+        return int(self.now_us)
+
+
+def _build_model() -> MicroModel:
+    gb = build_fc_stack()
+    return MicroModel(export(
+        gb, representative_dataset=representative_dataset(gb),
+        quantize_int8=True))
+
+
+def _workload(rng: np.random.Generator, n: int, lanes: int,
+              occupancy: float, dispatch_us: float) -> Dict[str, np.ndarray]:
+    """Poisson arrivals sized so offered load = ``occupancy`` of the
+    pool's service capacity, ragged frame counts, per-request inputs
+    and deadlines.  Deterministic for a given seed."""
+    frames = rng.integers(FRAME_LO, FRAME_HI + 1, n)
+    mean_frames = (FRAME_LO + FRAME_HI) / 2
+    rate = occupancy * lanes / (mean_frames * dispatch_us)  # req per µs
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    deadlines = arrivals + frames * dispatch_us * SLO_FACTOR
+    inputs = [[rng.normal(0, 1, IN_SHAPE).astype(np.float32)
+               for _ in range(k)] for k in frames]
+    return {"frames": frames, "arrivals": arrivals,
+            "deadlines": deadlines, "inputs": inputs}
+
+
+# ---------------------------------------------------------------------------
+# the three disciplines (identical workload in, completion times out)
+# ---------------------------------------------------------------------------
+
+def _sim_ragged(model, resolver, wl, lanes: int, dispatch_us: float,
+                policy_name: str) -> np.ndarray:
+    """Drive the REAL MultiTenantHost micro scheduler tick by tick on
+    the virtual clock; returns per-request completion times (µs)."""
+    clock = VirtualClock()
+    host = MultiTenantHost(arena_bytes=64 << 20,
+                           policy=get_policy(policy_name), clock=clock)
+    host.add_ragged_micro("m", model, resolver, lanes=lanes)
+    n = len(wl["arrivals"])
+    done_at = np.full(n, np.nan)
+    nxt = 0
+    while True:
+        while nxt < n and wl["arrivals"][nxt] <= clock.now_us:
+            host.submit_micro(
+                "m", nxt, [[x] for x in wl["inputs"][nxt]],
+                deadline_us=int(wl["deadlines"][nxt]),
+                arrival_us=int(wl["arrivals"][nxt]))
+            nxt += 1
+        if not host._micro_pending():
+            if nxt >= n:
+                break
+            clock.now_us = wl["arrivals"][nxt]   # idle: jump to arrival
+            continue
+        host.micro_step()
+        clock.now_us += dispatch_us
+        for uid, res in host.micro_results["m"].items():
+            if res.done and np.isnan(done_at[uid]):
+                done_at[uid] = clock.now_us
+    return done_at
+
+
+def _sim_lockstep(model, resolver, wl, lanes: int,
+                  dispatch_us: float) -> np.ndarray:
+    """FIFO lockstep baseline: admit up to ``lanes`` queued requests,
+    run the whole wave to the longest request's frame count (idle lanes
+    re-dispatch — a lockstep pool cannot retire them), then admit the
+    next wave.  A request completes when its own last frame runs; the
+    *wave* still blocks admission until the longest one finishes."""
+    pool = InterpreterPool(model, resolver, batch=lanes)
+    n = len(wl["arrivals"])
+    done_at = np.full(n, np.nan)
+    queue: List[int] = []
+    t, nxt = 0.0, 0
+    while nxt < n or queue:
+        while nxt < n and wl["arrivals"][nxt] <= t:
+            queue.append(nxt)
+            nxt += 1
+        if not queue:
+            t = wl["arrivals"][nxt]
+            continue
+        chunk = queue[:lanes]
+        del queue[:lanes]
+        wave = int(max(wl["frames"][u] for u in chunk))
+        pool.reset_variable_tensors()
+        for step in range(wave):
+            pool.clear_inputs()
+            for lane, uid in enumerate(chunk):
+                k = min(step, wl["frames"][uid] - 1)
+                pool.set_input(lane, 0, wl["inputs"][uid][k])
+            pool.invoke()                       # real dispatch
+            for uid in chunk:
+                if wl["frames"][uid] == step + 1:
+                    done_at[uid] = t + (step + 1) * dispatch_us
+        t += wave * dispatch_us
+    return done_at
+
+
+def _measure_dispatch_us(model, resolver, lanes: int,
+                         rng: np.random.Generator) -> Dict[str, float]:
+    """Warm median cost of one dispatch for each discipline — the
+    virtual clock's tick lengths."""
+    xs = [rng.normal(0, 1, IN_SHAPE).astype(np.float32)
+          for _ in range(lanes)]
+    lock = InterpreterPool(model, resolver, batch=lanes)
+
+    def lock_wave():
+        lock.clear_inputs()
+        for lane in range(lanes):
+            lock.set_input(lane, 0, xs[lane])
+        lock.invoke()
+        lock.outputs(0)
+
+    ragged = RaggedInterpreterPool()
+    ragged.add_bucket("m", model, resolver, lanes=lanes)
+    slots = [ragged.admit("m") for _ in range(max(1, lanes // 2))]
+
+    def ragged_wave():
+        for i, slot in enumerate(slots):
+            ragged.set_input("m", slot, 0, xs[i])
+        ragged.dispatch()
+        ragged.outputs("m", 0)
+
+    return {"lockstep": time_call(lock_wave, iters=20) * 1e6,
+            "ragged": time_call(ragged_wave, iters=20) * 1e6}
+
+
+def _latency_row(mode: str, lanes: int, occ: float, wl,
+                 done_at: np.ndarray, dispatch_us: float) -> Dict:
+    lat = done_at - wl["arrivals"]
+    assert not np.isnan(lat).any(), f"{mode}: unfinished requests"
+    slo = float((done_at <= wl["deadlines"]).mean())
+    p50, p95, p99 = np.percentile(lat, (50, 95, 99))
+    return {
+        "mode": mode,
+        "lanes": lanes,
+        "occupancy_pct": int(round(100 * occ)),
+        "n_requests": len(lat),
+        "dispatch_us": round(dispatch_us, 1),
+        "p50_us": round(float(p50), 1),
+        "p95_us": round(float(p95), 1),
+        "p99_us": round(float(p99), 1),
+        "slo_attainment_pct": round(100 * slo, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# section 2: bucketed-prefill compile counts (the other half of PR 3)
+# ---------------------------------------------------------------------------
+
+def bench_prefill_buckets(lengths: Sequence[int] = (5, 7, 9, 12, 16, 17)
+                          ) -> List[Dict]:
+    """Mixed prompt lengths through a reduced dense ServingEngine:
+    prefill compile count and total prefill seconds, exact-length vs
+    bucketed (outputs are bit-identical — tests/test_scheduling.py)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    prompts = [rng.integers(0, cfg.vocab - 2, L).astype(np.int32)
+               for L in lengths]
+    rows = []
+    for mode, buckets in (("exact", False), ("bucketed", None)):
+        eng = ServingEngine(m, params, max_slots=2, cache_len=64,
+                            prefill_buckets=buckets)
+        for uid, toks in enumerate(prompts):
+            eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=2))
+        eng.run()
+        prefill_s = sum(r.prefill_s for r in eng.results.values())
+        rows.append({
+            "mode": f"prefill_{mode}",
+            "prompt_lengths": len(prompts),
+            "prefill_compiles": eng.prefill_compiles(),
+            "buckets_hit": (len(eng.bucket_table.buckets())
+                            if eng.bucket_table else 0),
+            "total_prefill_s": round(prefill_s, 3),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+
+def run(tiny: bool = False) -> List[Dict]:
+    lanes = 4 if tiny else LANES
+    n = 24 if tiny else N_REQUESTS
+    occupancies = (0.5,) if tiny else OCCUPANCIES
+    resolver = AllOpsResolver()
+    model = _build_model()
+    rng = np.random.default_rng(SEED)
+    cost = _measure_dispatch_us(model, resolver, lanes, rng)
+
+    rows: List[Dict] = []
+    for occ in occupancies:
+        wl = _workload(np.random.default_rng(SEED + 1), n, lanes, occ,
+                       cost["ragged"])
+        done = _sim_lockstep(model, resolver, wl, lanes,
+                             cost["lockstep"])
+        rows.append(_latency_row("lockstep_fifo", lanes, occ, wl, done,
+                                 cost["lockstep"]))
+        for policy in ("fifo", "edf"):
+            done = _sim_ragged(model, resolver, wl, lanes,
+                               cost["ragged"], policy)
+            rows.append(_latency_row(f"ragged_{policy}", lanes, occ, wl,
+                                     done, cost["ragged"]))
+    print_table("Arrival-process completion latency "
+                "(Poisson arrivals, ragged 1..6-frame requests)", rows)
+
+    prefill_rows = bench_prefill_buckets(
+        lengths=(5, 7, 9) if tiny else (5, 7, 9, 12, 16, 17))
+    print_table("Bucketed prefill (mixed prompt lengths, one engine)",
+                prefill_rows)
+    all_rows = rows + prefill_rows
+    if not tiny:
+        save_result("BENCH_arrival_process", all_rows)
+    return all_rows
+
+
+if __name__ == "__main__":
+    run(tiny="--tiny" in sys.argv[1:])

@@ -4,30 +4,38 @@
   batched_invoke         batched-invoke throughput sweep (B ∈ {1,4,16})
   ragged_invoke          masked ragged dispatch vs lockstep/sequential
                          at occupancy 25/50/75/100%
+  arrival_process        Poisson arrivals: completion latency + SLO,
+                         lockstep FIFO vs ragged FIFO vs ragged EDF,
+                         plus bucketed-prefill compile counts
   memory_overhead        Tab. 2  persistent/nonpersistent arena split
   planner_bench          Fig. 4  naive vs FFD memory compaction
   kernel_speedup         Fig. 6  reference vs optimized kernels
   multitenancy_bench     Fig. 5  shared-arena savings
   roofline               §Roofline table from the dry-run artifacts
 
-``python -m benchmarks.run [names...]`` — default: all."""
+``python -m benchmarks.run [names...]`` — default: all.  A benchmark
+that raises does NOT silently truncate the run: the remaining
+benchmarks still execute, every failure is reported with its
+traceback, and the process exits non-zero."""
 
 from __future__ import annotations
 
 import sys
 import time
+import traceback
 
 
 def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
-    from . import (interpreter_overhead, kernel_speedup, memory_overhead,
-                   multitenancy_bench, planner_bench, ragged_invoke,
-                   roofline)
+    from . import (arrival_process, interpreter_overhead, kernel_speedup,
+                   memory_overhead, multitenancy_bench, planner_bench,
+                   ragged_invoke, roofline)
 
     benches = {
         "interpreter_overhead": interpreter_overhead.run,
         "batched_invoke": interpreter_overhead.run_batched,
         "ragged_invoke": ragged_invoke.run,
+        "arrival_process": arrival_process.run,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,
         "kernel_speedup": kernel_speedup.run,
@@ -35,13 +43,25 @@ def main(argv=None) -> None:
         "roofline": roofline.run,
     }
     names = argv or list(benches)
+    unknown = [n for n in names if n not in benches]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                         f"have {list(benches)}")
     t0 = time.time()
+    failures = []
     for name in names:
-        if name not in benches:
-            raise SystemExit(f"unknown benchmark {name!r}; "
-                             f"have {list(benches)}")
-        benches[name]()
-    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+        try:
+            benches[name]()
+        except Exception:
+            failures.append(name)
+            print(f"\nFAILED {name}:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    dt = time.time() - t0
+    if failures:
+        raise SystemExit(
+            f"{len(failures)}/{len(names)} benchmark(s) FAILED "
+            f"({', '.join(failures)}) in {dt:.1f}s")
+    print(f"\nall {len(names)} benchmarks done in {dt:.1f}s")
 
 
 if __name__ == "__main__":

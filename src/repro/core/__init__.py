@@ -6,9 +6,10 @@ from . import quantize  # keep the module visible as repro.core.quantize
 from .arena import ArenaOverflowError, TwoStackArena
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
-from .executor import (AllocationPlan, ArenaPool, CompiledPlan,
-                       InterpreterPool, LaneState, RaggedInterpreterPool,
-                       SharedArenaState)
+from .executor import (AllocationPlan, ArenaPool, BucketTable,
+                       CompiledPlan, InterpreterPool, LaneState,
+                       RaggedInterpreterPool, SharedArenaState,
+                       jit_cache_size)
 from .graph_builder import GraphBuilder
 from .interpreter import MicroInterpreter
 from .memory_planner import (BufferRequest, GreedyMemoryPlanner,
@@ -23,8 +24,9 @@ from .schema import (MicroModel, OpCode, QuantParams, TensorDef,
 __all__ = [
     "ArenaOverflowError", "TwoStackArena", "export", "fold_constants",
     "quantize", "quantize_graph", "strip_training_ops", "GraphBuilder",
-    "MicroInterpreter", "AllocationPlan", "ArenaPool", "CompiledPlan",
-    "InterpreterPool", "LaneState", "RaggedInterpreterPool",
+    "MicroInterpreter", "AllocationPlan", "ArenaPool", "BucketTable",
+    "CompiledPlan", "InterpreterPool", "LaneState",
+    "RaggedInterpreterPool", "jit_cache_size",
     "SharedArenaState", "BufferRequest", "GreedyMemoryPlanner",
     "LinearMemoryPlanner", "MemoryPlan", "OfflineMemoryPlanner",
     "AllOpsResolver", "MicroMutableOpResolver", "OpResolutionError",

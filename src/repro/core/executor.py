@@ -99,6 +99,77 @@ def _jnp_dtype(name: str):
 
 
 # ---------------------------------------------------------------------------
+# length bucketing (compile-once across ragged sizes)
+# ---------------------------------------------------------------------------
+
+class BucketTable:
+    """Power-of-two size quantization shared by every surface that must
+    not retrace on ragged sizes.
+
+    ``bucket(n)`` maps a size to the smallest power of two that holds it
+    (floored at ``min_bucket``, capped at ``max_bucket``), so the set of
+    distinct traced shapes is O(log(max/min)) instead of O(#sizes).  Two
+    consumers share one table:
+
+      * **bucketed prefill** — ``ServingEngine`` pads each prompt to its
+        bucket and compiles the prefill step once per *bucket* instead
+        of once per *length* (see docs/SCHEDULING.md for why padded
+        rows cannot leak into decoded tokens);
+      * **ragged lanes** — ``RaggedInterpreterPool.add_bucket`` can
+        quantize lane counts through the same table so model buckets
+        with nearby lane counts draw the same stacked ``(B, nbytes)``
+        buffers from the shared ``ArenaPool`` free lists.
+
+    ``hits`` counts how many times each bucket was actually chosen by
+    ``bucket()`` — the observability hook the arrival-process benchmark
+    and the no-retrace tests read.  Callers that may still reject the
+    bucket (e.g. it does not fit their cache) probe with ``fit()``
+    first, so a fallback never records a phantom bucket.  A size above
+    ``max_bucket`` raises ``ValueError`` from ``bucket()``: capacity
+    errors stay loud and immediate, like arena overflow.
+    """
+
+    def __init__(self, min_bucket: int = 16, max_bucket: int = 4096):
+        if min_bucket < 1 or max_bucket < min_bucket:
+            raise ValueError((min_bucket, max_bucket))
+        self.min_bucket = int(min_bucket)
+        self.max_bucket = int(max_bucket)
+        self.hits: Dict[int, int] = {}
+
+    def fit(self, n: int) -> Optional[int]:
+        """Smallest table bucket holding ``n``, or None when ``n``
+        exceeds ``max_bucket`` — records nothing."""
+        if n < 1:
+            raise ValueError(f"size must be >= 1, got {n}")
+        b = self.min_bucket
+        while b < n:
+            b <<= 1
+        return b if b <= self.max_bucket else None
+
+    def bucket(self, n: int) -> int:
+        """Smallest table bucket holding ``n`` (and count the hit)."""
+        b = self.fit(n)
+        if b is None:
+            raise ValueError(
+                f"size {n} exceeds max_bucket {self.max_bucket}")
+        self.hits[b] = self.hits.get(b, 0) + 1
+        return b
+
+    def buckets(self) -> List[int]:
+        """Buckets hit so far, ascending — the table's live layout."""
+        return sorted(self.hits)
+
+
+def jit_cache_size(fn) -> int:
+    """How many distinct programs a ``jax.jit``-wrapped callable has
+    traced — THE trace-count hook behind every no-retrace assertion
+    (tests) and compile-count benchmark row.  One entry per distinct
+    (shape, dtype) signature seen, so a compile-once contract reads as
+    ``jit_cache_size(fn) == 1`` no matter how many calls were made."""
+    return fn._cache_size()
+
+
+# ---------------------------------------------------------------------------
 # contexts handed to kernel prepare()/eval() (the TFLM C-API analogue)
 # ---------------------------------------------------------------------------
 
@@ -709,14 +780,22 @@ class RaggedInterpreterPool:
                    arena_size_bytes: Optional[int] = None,
                    planner: Optional[object] = None,
                    prefer_offline_plan: bool = True,
-                   host_arena: Optional[TwoStackArena] = None) -> None:
+                   host_arena: Optional[TwoStackArena] = None,
+                   lane_buckets: Optional[BucketTable] = None) -> None:
         """Admit a model family with ``lanes`` lane slots.  Plans,
         compiles, and warms exactly once — admission/retirement later
-        touch only the lane table."""
+        touch only the lane table.
+
+        ``lane_buckets`` (optional) rounds ``lanes`` up through a shared
+        ``BucketTable`` so model buckets with nearby lane counts compile
+        for — and draw from the ``ArenaPool`` free lists of — the SAME
+        stacked batch size; the extra lanes are ordinary free lanes."""
         if name in self._buckets:
             raise ValueError(f"bucket {name!r} already exists")
         if lanes < 1:
             raise ValueError("lanes must be >= 1")
+        if lane_buckets is not None:
+            lanes = lane_buckets.bucket(lanes)
         alloc = plan_model(model, resolver, arena_size_bytes, planner,
                            prefer_offline_plan, host_arena)
         self.pool.ensure(alloc.nonpersistent_nbytes)

@@ -1,10 +1,17 @@
 """Serving substrate: batched prefill/decode engine with KV arenas
-planned by the TFLM memory planner, multitenant hosting, and
-registry-resolved serving kernels (ops)."""
+planned by the TFLM memory planner, multitenant hosting,
+registry-resolved serving kernels (ops), and pluggable latency-aware
+admission policies (scheduling)."""
 
 from . import ops  # registers the reference serving macro-kernels
-from .engine import DEFAULT_TAGS, Request, RequestResult, ServingEngine
+from .engine import (BUCKETED_FAMILIES, DEFAULT_TAGS, Request,
+                     RequestResult, ServingEngine, default_clock)
 from .host import MicroRequest, MicroRequestResult, MultiTenantHost
+from .scheduling import (EDFPolicy, FIFOPolicy, PriorityPolicy,
+                         SchedulingPolicy, get_policy)
 
-__all__ = ["DEFAULT_TAGS", "Request", "RequestResult", "ServingEngine",
-           "MicroRequest", "MicroRequestResult", "MultiTenantHost", "ops"]
+__all__ = ["BUCKETED_FAMILIES", "DEFAULT_TAGS", "Request",
+           "RequestResult", "ServingEngine", "default_clock",
+           "MicroRequest", "MicroRequestResult", "MultiTenantHost",
+           "EDFPolicy", "FIFOPolicy", "PriorityPolicy",
+           "SchedulingPolicy", "get_policy", "ops"]

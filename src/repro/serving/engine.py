@@ -19,9 +19,11 @@ invoke loop (paper §4.1), with the same allocation discipline:
 Compile-once invariants (what callers may rely on):
 
   * **traced once** — the decode step is jitted at engine construction
-    with the resolved registration's eval, context, and OpDef bound; the
-    prefill step is jitted once per distinct prompt length.  Model
-    family, cache layout, slot count, and window are baked in then.
+    with the resolved registration's eval, context, and OpDef bound;
+    the prefill step is jitted once per prompt-length *bucket* when
+    bucketing is active (the default for dense/vlm) and once per
+    distinct prompt length otherwise.  Model family, cache layout,
+    slot count, and window are baked in then.
   * **donated** — nothing in this engine: the KV cache and sampling
     state are carried functionally (cache in, cache out) so a step can
     be replayed; the ARENA accounts capacity (KV is an
@@ -31,6 +33,26 @@ Compile-once invariants (what callers may rely on):
     slots are live.  Admitting a request writes ONLY slot bookkeeping
     and cache rows; it never retraces, which is what keeps continuous
     batching allocation-free inside the loop.
+
+Two host-side degrees of freedom ride on top (docs/SCHEDULING.md):
+
+  * **admission order is policy-driven** — a ``SchedulingPolicy``
+    (FIFO / priority-with-aging / EDF over ``Request.deadline_us``)
+    picks which queued request takes a free slot.  Policies reorder the
+    Python queue only; masks, shapes, and programs are untouched, so
+    changing policy never recompiles.
+  * **bucketed prefill** — prompt lengths are quantized to power-of-two
+    buckets (``BucketTable``): the prompt is right-padded to its bucket
+    and the prefill step compiles once per *bucket*, not per *length*.
+    Safe for families whose decode masks the KV cache by per-slot
+    length AND whose prefill math is per-position (dense/vlm): padded
+    rows are positionally masked to -1e30 before softmax, so decoded
+    tokens are bit-identical to the exact-length path (asserted in
+    tests/test_scheduling.py).  SSM and hybrid families keep
+    exact-length prefill — their recurrent state integrates every
+    input position, masked or not — and so does MoE, whose expert
+    capacity is a function of the token count (padding could retain a
+    token the exact-length run's capacity would drop).
 """
 
 from __future__ import annotations
@@ -45,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
+from repro.core.executor import BucketTable
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import OpCode, OpDef
 from repro.kernels import ops as _vendor_kernels  # registers tag="pallas"
@@ -52,19 +75,40 @@ from repro.models.common import ModelConfig
 from repro.models.registry import ModelBundle
 
 from . import ops as serving_ops  # registers tag="reference" serving ops
+from .scheduling import SchedulingPolicy, get_policy
 
 DEFAULT_TAGS = ("pallas", "reference")
+
+# families whose decode masks the KV cache by per-slot length, making
+# right-padded (bucketed) prefill bit-identical to exact-length
+# prefill.  NOT "moe": expert capacity is computed from the token
+# count, so padding could keep a token the exact-length run drops.
+# NOT "ssm"/"hybrid": recurrent state integrates every position.
+BUCKETED_FAMILIES = ("dense", "vlm")
+
+
+def default_clock() -> int:
+    """Host time in µs — the clock policies age/deadline against.
+    Engines and hosts accept a ``clock`` override so the arrival
+    benchmark can drive the same scheduling code on virtual time."""
+    return time.monotonic_ns() // 1000
 
 
 @dataclasses.dataclass
 class Request:
-    """One pod-scale generation request: a prompt plus decode budget."""
+    """One pod-scale generation request: a prompt plus decode budget,
+    and the scheduling fields admission policies key on (``priority``:
+    lower admits first; ``deadline_us``: absolute host µs for EDF;
+    ``arrival_us``: stamped at submit() when not provided)."""
 
     uid: int
     tokens: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0            # 0 = greedy
     extras: Optional[Dict[str, np.ndarray]] = None   # vision / frames
+    priority: int = 0                   # lower = more urgent
+    deadline_us: Optional[int] = None   # absolute host time, EDF key
+    arrival_us: Optional[int] = None    # stamped at submit()
 
 
 @dataclasses.dataclass
@@ -90,12 +134,35 @@ class ServingEngine:
                  max_slots: int = 4, cache_len: int = 256,
                  arena: Optional[TwoStackArena] = None,
                  arena_bytes: Optional[int] = None, seed: int = 0,
-                 tags: Sequence[str] = DEFAULT_TAGS):
+                 tags: Sequence[str] = DEFAULT_TAGS,
+                 policy: Any = None, clock=None,
+                 prefill_buckets: Any = None):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
         self.max_slots = max_slots
         self.cache_len = cache_len
+        self.policy: SchedulingPolicy = get_policy(policy)
+        self.clock = clock if clock is not None else default_clock
+        # prefill_buckets: None/True = auto (on for length-masked-
+        # decode families, when the cache can hold at least the
+        # smallest bucket), False = off, or a (shared) BucketTable
+        self.bucket_table: Optional[BucketTable] = None
+        if prefill_buckets is None or prefill_buckets is True:
+            if self.cfg.family in BUCKETED_FAMILIES and cache_len >= 8:
+                self.bucket_table = BucketTable(min_bucket=8,
+                                                max_bucket=cache_len)
+        elif prefill_buckets is not False:
+            if not isinstance(prefill_buckets, BucketTable):
+                raise TypeError(
+                    f"prefill_buckets must be a BucketTable, True, "
+                    f"False, or None, got {prefill_buckets!r}")
+            if self.cfg.family not in BUCKETED_FAMILIES:
+                raise ValueError(
+                    f"bucketed prefill is only bit-safe for "
+                    f"{BUCKETED_FAMILIES} families, not "
+                    f"{self.cfg.family!r}")
+            self.bucket_table = prefill_buckets
         dtype = self.cfg.jnp_dtype()
 
         # --- arena accounting (C3/C4): KV is interpreter-lifetime ----
@@ -141,13 +208,24 @@ class ServingEngine:
             bundle, decode_reg.prepare(pctx, self._decode_op).op_data)
         self._decode = jax.jit(functools.partial(
             decode_reg.eval, decode_ctx, self._decode_op))
-        # prefill jits once per distinct prompt length (a production
-        # engine would bucket; exact-length keeps SSM state unpolluted)
+        # prefill jits once per prompt-length BUCKET when bucket_table
+        # is set (BUCKETED_FAMILIES only: decode masks KV by length,
+        # so padding is invisible); exact-length otherwise — see the
+        # BUCKETED_FAMILIES comment for why moe/ssm/hybrid are out
         self._prefill = jax.jit(functools.partial(
             prefill_reg.eval, prefill_ctx, self._prefill_op))
 
+    def prefill_compiles(self) -> int:
+        """How many distinct prefill programs were traced — the
+        trace-count hook.  With bucketing on, this is the number of
+        buckets HIT, independent of how many prompt lengths arrived."""
+        from repro.core.executor import jit_cache_size
+        return jit_cache_size(self._prefill)
+
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.arrival_us is None:
+            req.arrival_us = self.clock()
         self.queue.append(req)
         self.results[req.uid] = RequestResult(uid=req.uid,
                                               prompt_len=len(req.tokens))
@@ -168,6 +246,26 @@ class ServingEngine:
             raise ValueError((full.shape, one.shape))
         self.cache = jax.tree.map(ins, self.cache, new_cache)
 
+    def _padded_prompt(self, tokens: np.ndarray) -> np.ndarray:
+        """Right-pad the prefill prompt to its power-of-two bucket so
+        the prefill step compiles once per bucket.  Padded positions
+        produce KV rows the length-masked decode can never attend to
+        (and the first decode steps overwrite them ring-slot by ring
+        slot), so the decoded tokens are bit-identical to exact-length
+        prefill.  Prompts longer than the largest bucket that fits the
+        cache fall back to exact length (the ring-wrap case)."""
+        s = len(tokens)
+        room = self.cache_len - (self.cfg.n_vision_tokens
+                                 if self.cfg.family == "vlm" else 0)
+        padded = self.bucket_table.fit(s)
+        if padded is None or padded > room:
+            return tokens                   # over-cap: exact length
+        self.bucket_table.bucket(s)         # committed: count the hit
+        if padded == s:
+            return tokens                   # already bucket-shaped
+        return np.concatenate(
+            [tokens, np.zeros(padded - s, tokens.dtype)])
+
     def _prefill_one(self, req: Request, slot: int) -> None:
         """Prefill tokens[:-1], then hand the LAST prompt token to the
         decode loop: the first decode step integrates it (KV write /
@@ -176,7 +274,10 @@ class ServingEngine:
         t0 = time.perf_counter()
         n = len(req.tokens)
         if n >= 2:
-            batch = {"tokens": jnp.asarray(req.tokens[None, :-1])}
+            prompt = np.asarray(req.tokens[:-1])
+            if self.bucket_table is not None:
+                prompt = self._padded_prompt(prompt)
+            batch = {"tokens": jnp.asarray(prompt[None])}
             if req.extras:
                 for k, v in req.extras.items():
                     batch[k] = jnp.asarray(v[None])
@@ -208,10 +309,16 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """Admit + one decode step.  Returns True if work remains."""
-        for slot in range(self.max_slots):
-            if not self.active[slot] and self.queue:
-                self._prefill_one(self.queue.pop(0), slot)
+        """Admit + one decode step.  Returns True if work remains.
+        Admission order is the engine's scheduling policy — the queue
+        is re-keyed at every free slot, so a deadline that became
+        urgent while other requests decoded is picked up here."""
+        if self.queue and not self.active.all():
+            now = self.clock()
+            for slot in range(self.max_slots):
+                if not self.active[slot] and self.queue:
+                    self._prefill_one(self.policy.pop(self.queue, now),
+                                      slot)
         if not self.active.any():
             return bool(self.queue)
         t0 = time.perf_counter()

@@ -24,11 +24,23 @@ Micro-models are first-class tenants too, in two flavours:
     FC/SVDF families) and the pod engines drain through ONE scheduler,
     ``run_all``.
 
+Scheduling (docs/SCHEDULING.md): the host owns ONE ``SchedulingPolicy``
+(FIFO / priority-with-aging / EDF) and ONE ``clock``; every engine it
+creates and every ragged micro queue admits through them, so a deadline
+set on a pod ``Request`` and one set on a ``MicroRequest`` compete
+under the same rules.  It also owns the shared ``BucketTable`` pair:
+prompt-length buckets (engines compile prefill once per bucket, and
+the bucket boundaries agree across tenants) and lane-count buckets
+(ragged micro buckets round their lane counts so nearby tenants share
+``ArenaPool`` free lists).
+
 Compile-once invariants this module maintains:
 
   * **traced once** — each engine's prefill/decode step and each micro
     bucket's masked batched body are compiled at ``add_*`` time (tenant
-    admission), never inside the serving loop.
+    admission), never inside the serving loop.  Scheduling decisions
+    (admission order) are host-side Python over the queues; they can
+    never invalidate a trace.
   * **donated** — micro arena buffers and variable stacks cycle through
     the shared ``ArenaPool``; engine caches are carried functionally
     through the jitted decode step.
@@ -47,23 +59,30 @@ import jax
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
-from repro.core.executor import (ArenaPool, InterpreterPool,
+from repro.core.executor import (ArenaPool, BucketTable, InterpreterPool,
                                  RaggedInterpreterPool)
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import MicroModel
 from repro.models.registry import ModelBundle
 
-from .engine import Request, RequestResult, ServingEngine
+from .engine import (BUCKETED_FAMILIES, Request, RequestResult,
+                     ServingEngine, default_clock)
+from .scheduling import SchedulingPolicy, get_policy
 
 
 @dataclasses.dataclass
 class MicroRequest:
     """A request-granularity micro-model job: ``frames[t]`` holds the
     per-input-position arrays the model consumes on its t-th invocation
-    (one entry → single-shot; several → a streaming continuation)."""
+    (one entry → single-shot; several → a streaming continuation).
+    Carries the same scheduling fields as the pod ``Request`` so one
+    policy orders both tenancies."""
 
     uid: int
     frames: List[List[np.ndarray]]
+    priority: int = 0                   # lower = more urgent
+    deadline_us: Optional[int] = None   # absolute host time, EDF key
+    arrival_us: Optional[int] = None    # stamped at submit_micro()
 
 
 @dataclasses.dataclass
@@ -88,7 +107,8 @@ def _scratch_bytes(bundle: ModelBundle, max_prompt: int) -> int:
 class MultiTenantHost:
     """One arena, many models — never running concurrently."""
 
-    def __init__(self, arena_bytes: int):
+    def __init__(self, arena_bytes: int, *, policy: Any = None,
+                 clock=None):
         self.arena = TwoStackArena(arena_bytes)
         self.engines: Dict[str, ServingEngine] = {}
         self.micro: Dict[str, InterpreterPool] = {}
@@ -98,14 +118,28 @@ class MultiTenantHost:
         self._micro_inflight: Dict[str, Dict[int, MicroRequest]] = {}
         self.micro_results: Dict[str, Dict[int, MicroRequestResult]] = {}
         self._scratch_high = 0
+        self.policy: SchedulingPolicy = get_policy(policy)
+        self.clock = clock if clock is not None else default_clock
+        # the shared bucket tables: one for prompt lengths (engines
+        # agree on prefill bucket boundaries), one for ragged lane
+        # counts (nearby tenants share ArenaPool free lists)
+        self.prompt_buckets = BucketTable(min_bucket=8, max_bucket=4096)
+        self.lane_buckets = BucketTable(min_bucket=2, max_bucket=1024)
 
     def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
                   max_slots: int = 2, cache_len: int = 128,
                   max_prompt: int = 64) -> ServingEngine:
         """Admit a tenant: its KV cache stacks persistently; the shared
-        nonpersistent (head) section grows to the max requirement."""
+        nonpersistent (head) section grows to the max requirement.  The
+        engine admits through the host's policy/clock and buckets its
+        prefill lengths through the host's shared prompt table (when
+        its family supports bucketing)."""
+        buckets = (self.prompt_buckets
+                   if bundle.cfg.family in BUCKETED_FAMILIES else False)
         eng = ServingEngine(bundle, params, max_slots=max_slots,
-                            cache_len=cache_len, arena=self.arena)
+                            cache_len=cache_len, arena=self.arena,
+                            policy=self.policy, clock=self.clock,
+                            prefill_buckets=buckets)
         scratch = _scratch_bytes(bundle, max_prompt)
         if scratch > self._scratch_high:
             # grow the shared head-section reservation to the new max
@@ -130,27 +164,44 @@ class MultiTenantHost:
 
     def add_ragged_micro(self, name: str, model: MicroModel,
                          resolver: MicroMutableOpResolver, *,
-                         lanes: int = 4, exact: bool = False) -> None:
+                         lanes: int = 4, exact: bool = False,
+                         bucket_lanes: bool = True) -> None:
         """Admit a request-granularity micro tenant: a bucket of the
         host's shared RaggedInterpreterPool.  Persistents stack in the
         shared arena like every other tenant; all planning and
         compilation happens HERE — ``submit_micro`` and the scheduler
-        only touch the lane table."""
+        only touch the lane table.
+
+        ``bucket_lanes`` (default True) rounds ``lanes`` up through the
+        host's shared lane BucketTable so nearby tenants reuse the same
+        stacked ``ArenaPool`` buffers — the extra lanes are real (wider
+        dispatch, more per-lane arena state, more admissible requests);
+        pass False to get exactly ``lanes``."""
         self.ragged.add_bucket(name, model, resolver, lanes,
-                               host_arena=self.arena, exact=exact)
+                               host_arena=self.arena, exact=exact,
+                               lane_buckets=(self.lane_buckets
+                                             if bucket_lanes else None))
         self._micro_queue[name] = []
         self._micro_inflight[name] = {}
         self.micro_results[name] = {}
 
     def submit_micro(self, name: str, uid: int,
-                     frames: Sequence[Sequence[np.ndarray]]) -> None:
+                     frames: Sequence[Sequence[np.ndarray]], *,
+                     priority: int = 0,
+                     deadline_us: Optional[int] = None,
+                     arrival_us: Optional[int] = None) -> None:
         """Queue a micro request: ``frames[t]`` are the input arrays for
         the request's t-th invocation (len 1 = single shot, more = a
-        streaming continuation across waves)."""
+        streaming continuation across waves).  ``priority`` /
+        ``deadline_us`` feed the host's scheduling policy."""
         frames = [list(f) for f in frames]
         if not frames:
             raise ValueError("a micro request needs at least one frame")
-        self._micro_queue[name].append(MicroRequest(uid, frames))
+        if arrival_us is None:
+            arrival_us = self.clock()
+        self._micro_queue[name].append(
+            MicroRequest(uid, frames, priority=priority,
+                         deadline_us=deadline_us, arrival_us=arrival_us))
         self.micro_results[name][uid] = MicroRequestResult(uid=uid)
 
     def _micro_pending(self) -> bool:
@@ -159,13 +210,15 @@ class MultiTenantHost:
 
     def micro_step(self) -> bool:
         """One scheduler tick of the ragged micro path: admit queued
-        requests into free lanes, stage every active lane's next frame,
-        advance all buckets with ONE masked dispatch each, then retire
-        lanes whose requests finished.  Returns True if work remains."""
+        requests into free lanes IN POLICY ORDER, stage every active
+        lane's next frame, advance all buckets with ONE masked dispatch
+        each, then retire lanes whose requests finished.  Returns True
+        if work remains."""
+        now = self.clock() if any(self._micro_queue.values()) else 0
         for name, queue in self._micro_queue.items():
             inflight = self._micro_inflight[name]
             while queue and self.ragged.free_lanes(name):
-                req = queue.pop(0)
+                req = self.policy.pop(queue, now)
                 slot = self.ragged.admit(name, uid=req.uid)
                 inflight[slot] = req
             for slot, req in inflight.items():
@@ -222,6 +275,9 @@ class MultiTenantHost:
         """THE scheduler: round-robin every tenant — pod engines AND
         ragged micro buckets — until all queues drain (tenants are
         time-multiplexed — TF Micro's 'not concurrently' contract).
+        WITHIN a tenant, the free slot/lane goes to whichever queued
+        request the host's scheduling policy keys first (FIFO by
+        default; priority/EDF reorder admission without recompiling).
         One tick = one decode step per engine with work plus one masked
         dispatch per micro bucket with active lanes, so mixed micro+pod
         tenancy advances through a single loop.  Every tick with work

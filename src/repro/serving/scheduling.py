@@ -1,0 +1,152 @@
+"""Latency-aware scheduling policies for the serving host.
+
+The paper's invoke loop is a fixed program; WHICH request enters a free
+slot or lane next is the one degree of freedom left to the host.  This
+module makes that degree of freedom pluggable without ever touching the
+traced programs — the third leg (after batching and raggedness) of the
+compile-once serving story:
+
+  * **policy decisions are host-side** — a policy reorders the Python
+    queue between dispatches.  It never sees (and cannot change) traced
+    state: lane masks, slot counts, and step shapes stay exactly what
+    ``CompiledPlan``/``ServingEngine`` compiled at init.  Swapping FIFO
+    for EDF at runtime therefore never recompiles anything.
+  * **masks stay traced arguments** — admission under ANY policy still
+    just flips a lane-table bit / writes slot bookkeeping; the active
+    mask reaches the program as a traced argument, same as PR 2.
+
+Three policies (semantics spelled out in docs/SCHEDULING.md):
+
+  * ``FIFOPolicy`` — arrival order; the round-robin-across-tenants
+    baseline the host always had.
+  * ``PriorityPolicy`` — lower ``priority`` admits first, with an
+    *aging* bound: a request's effective priority improves by one class
+    per ``age_us`` waited, so starvation under a saturating stream of
+    higher classes is bounded by ``(class gap) x age_us``.
+  * ``EDFPolicy`` — earliest ``deadline_us`` first; deadline-less
+    requests order after all deadlined ones, FIFO among themselves.
+
+All policies break ties by arrival order (the submission sequence
+number), so equal-key requests never reorder — FIFO is the fixed point.
+
+``now_us`` flows in from the caller (engine/host ``clock``), which is
+what lets the arrival-process benchmark drive the same policies on a
+virtual clock for deterministic latency accounting.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+_INF = float("inf")
+
+
+# Policies only read three optional request attributes — ``priority``,
+# ``deadline_us``, ``arrival_us`` — so pod ``Request`` and micro
+# ``MicroRequest`` schedule through the identical code path.
+def _arrival(req, default: float = 0.0) -> float:
+    a = getattr(req, "arrival_us", None)
+    return default if a is None else a
+
+
+class SchedulingPolicy:
+    """Base policy: an admission-order key over queued requests.
+
+    Subclasses implement ``key(req, now_us)`` — smaller admits first.
+    ``select``/``pop`` are shared: a stable argmin over the queue, so
+    every policy inherits FIFO tie-breaking for equal keys.  Policies
+    hold no per-request state and never touch traced values, so one
+    instance may be shared by every tenant of a host.
+    """
+
+    name = "fifo"
+
+    def key(self, req, now_us: int) -> Tuple:
+        """Admission key for ``req`` at host time ``now_us`` (µs);
+        smaller admits earlier.  Must be cheap — it runs per queued
+        request per admission decision."""
+        return ()
+
+    def select(self, queue: Sequence, now_us: int = 0) -> Optional[int]:
+        """Index of the request to admit next, or None when empty.
+        Stable: among equal keys the earliest-queued index wins."""
+        best, best_key = None, None
+        for i, req in enumerate(queue):
+            k = self.key(req, now_us)
+            if best is None or k < best_key:
+                best, best_key = i, k
+        return best
+
+    def pop(self, queue: List, now_us: int = 0):
+        """Remove and return the next request to admit (policy order)."""
+        i = self.select(queue, now_us)
+        if i is None:
+            raise IndexError("pop from an empty queue")
+        return queue.pop(i)
+
+
+class FIFOPolicy(SchedulingPolicy):
+    """Arrival order — the baseline.  ``select`` short-circuits to the
+    queue head (no O(queue) key scan per admission)."""
+
+    name = "fifo"
+
+    def select(self, queue: Sequence, now_us: int = 0) -> Optional[int]:
+        return 0 if queue else None
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Strict priority classes with an aging starvation bound.
+
+    ``req.priority`` (default 0) orders admission: lower is more
+    urgent.  A waiting request's *effective* priority improves by one
+    class per ``age_us`` of queue wait, so a class-p request is
+    admitted after at most ``p x age_us`` of continuous higher-class
+    pressure — starvation is bounded, not merely unlikely (asserted in
+    tests/test_scheduling.py)."""
+
+    name = "priority"
+
+    def __init__(self, age_us: int = 1_000_000):
+        if age_us < 1:
+            raise ValueError("age_us must be >= 1")
+        self.age_us = int(age_us)
+
+    def key(self, req, now_us: int) -> Tuple:
+        prio = getattr(req, "priority", 0) or 0
+        waited = max(0.0, now_us - _arrival(req, default=now_us))
+        return (prio - waited / self.age_us, _arrival(req))
+
+
+class EDFPolicy(SchedulingPolicy):
+    """Earliest-deadline-first on ``req.deadline_us`` (absolute µs).
+
+    The classic latency-SLO policy: under contention the request whose
+    deadline expires soonest takes the free lane.  Requests without a
+    deadline sort after every deadlined request and FIFO among
+    themselves, so best-effort traffic fills leftover capacity."""
+
+    name = "edf"
+
+    def key(self, req, now_us: int) -> Tuple:
+        d = getattr(req, "deadline_us", None)
+        return (d if d is not None else _INF, _arrival(req))
+
+
+_POLICIES = {p.name: p for p in (FIFOPolicy, PriorityPolicy, EDFPolicy)}
+
+
+def get_policy(policy: Union[str, SchedulingPolicy, None]
+               ) -> SchedulingPolicy:
+    """Resolve a policy argument: an instance passes through, a name
+    (``"fifo"``/``"priority"``/``"edf"``) constructs the default
+    instance, None means FIFO."""
+    if policy is None:
+        return FIFOPolicy()
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {policy!r}; "
+                         f"have {sorted(_POLICIES)}") from None

@@ -1,6 +1,8 @@
 """The documentation contract, enforced: every public class and module
-in repro.core / repro.serving carries a docstring (tools/check_docs.py),
-and the documents the architecture guide promises actually exist."""
+in repro.core / repro.serving / benchmarks carries a docstring
+(tools/check_docs.py), every BENCH_*.json a guide cites is committed
+under benchmarks/results/, and the documents the architecture guide
+promises actually exist."""
 
 import pathlib
 import sys
@@ -17,10 +19,12 @@ def test_public_classes_have_docstrings():
         f"{rel}:{lineno}: {msg}" for rel, lineno, msg in violations)
 
 
-def test_lint_covers_both_packages():
+def test_lint_covers_all_packages():
     files = {str(p) for p in check_docs.linted_files()}
     assert any("core/executor.py" in f for f in files)
     assert any("serving/host.py" in f for f in files)
+    assert any("serving/scheduling.py" in f for f in files)
+    assert any("benchmarks/arrival_process.py" in f for f in files)
 
 
 def test_lint_catches_a_missing_docstring(tmp_path):
@@ -33,6 +37,25 @@ def test_lint_catches_a_missing_docstring(tmp_path):
     assert violations == [
         ("src/repro/core/bad.py", 2,
          "public class Naked lacks a docstring")]
+
+
+def test_bench_reference_check_catches_missing_json(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "benchmarks" / "results").mkdir(parents=True)
+    (tmp_path / "benchmarks" / "results" / "BENCH_real.json").write_text(
+        "[]")
+    (docs / "GUIDE.md").write_text(
+        "see BENCH_real.json and\nBENCH_phantom.json for numbers\n")
+    violations = check_docs.check_bench_references(root=tmp_path)
+    assert violations == [
+        ("docs/GUIDE.md", 2,
+         "mentions BENCH_phantom.json but "
+         "benchmarks/results/BENCH_phantom.json does not exist")]
+
+
+def test_every_cited_bench_json_is_committed():
+    assert check_docs.check_bench_references() == []
 
 
 def test_promised_documents_exist():

@@ -1,0 +1,282 @@
+"""Latency-aware scheduling + bucketed prefill (PR 3 acceptance).
+
+Covers: EDF admission ordering under contention (micro lanes AND pod
+slots), the priority-aging starvation bound, bucketed-prefill
+bit-identity against exact-length compiles, the no-retrace assertion
+across mixed prompt lengths in one bucket (via the jit_cache_size
+trace-count hook), BucketTable semantics, shared lane buckets, and a
+slow end-to-end smoke of the arrival-process benchmark."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.apps import build_fc_stack
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, BucketTable, MicroModel,
+                        RaggedInterpreterPool, export, jit_cache_size)
+from repro.serving import (EDFPolicy, FIFOPolicy, MicroRequest,
+                           MultiTenantHost, PriorityPolicy, Request,
+                           get_policy)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def resolver():
+    return AllOpsResolver()
+
+
+@pytest.fixture(scope="module")
+def fc_int8():
+    gb = build_fc_stack()
+    return MicroModel(export(
+        gb, representative_dataset=representative_dataset(gb),
+        quantize_int8=True))
+
+
+def _micro(uid, deadline_us=None, priority=0, arrival_us=0):
+    return MicroRequest(uid=uid, frames=[[np.zeros((1, 64), np.float32)]],
+                        priority=priority, deadline_us=deadline_us,
+                        arrival_us=arrival_us)
+
+
+# ---------------------------------------------------------------------------
+# policy semantics (unit)
+# ---------------------------------------------------------------------------
+
+def test_fifo_is_arrival_order():
+    q = [_micro(0), _micro(1), _micro(2)]
+    pol = FIFOPolicy()
+    assert [pol.pop(q).uid for _ in range(3)] == [0, 1, 2]
+
+
+def test_edf_orders_by_deadline_fifo_among_deadline_less():
+    q = [_micro(0, deadline_us=None), _micro(1, deadline_us=300),
+         _micro(2, deadline_us=100), _micro(3, deadline_us=None),
+         _micro(4, deadline_us=200)]
+    pol = EDFPolicy()
+    # deadlined requests first (earliest first); best-effort after, FIFO
+    assert [pol.pop(q).uid for _ in range(5)] == [2, 4, 1, 0, 3]
+
+
+def test_priority_starvation_bound():
+    """A class-p request is admitted after at most p*age_us of
+    continuous fresher higher-class pressure — the aging bound."""
+    pol = PriorityPolicy(age_us=100)
+    low = _micro(0, priority=3, arrival_us=0)
+    for now in (0, 100, 299):               # below the 300 µs bound
+        fresh = _micro(1, priority=0, arrival_us=now)
+        assert pol.select([low, fresh], now) == 1, now
+    # at exactly p*age_us the aged request ties and wins on arrival
+    fresh = _micro(1, priority=0, arrival_us=300)
+    assert pol.select([low, fresh], 300) == 0
+    fresh = _micro(1, priority=0, arrival_us=400)
+    assert pol.select([low, fresh], 400) == 0
+
+
+def test_get_policy_resolution():
+    assert isinstance(get_policy(None), FIFOPolicy)
+    assert isinstance(get_policy("edf"), EDFPolicy)
+    pol = PriorityPolicy(age_us=7)
+    assert get_policy(pol) is pol
+    with pytest.raises(ValueError):
+        get_policy("shortest-job-first")
+
+
+def test_bucket_table_semantics():
+    t = BucketTable(min_bucket=8, max_bucket=64)
+    assert [t.bucket(n) for n in (1, 8, 9, 16, 17, 64)] == \
+        [8, 8, 16, 16, 32, 64]
+    assert t.buckets() == [8, 16, 32, 64]
+    assert t.hits[8] == 2 and t.hits[16] == 2
+    # fit() probes without recording; bucket() over max is loud
+    assert t.fit(65) is None
+    assert t.fit(9) == 16 and t.hits[16] == 2
+    with pytest.raises(ValueError):
+        t.bucket(65)                        # over max: loud, like arena
+    with pytest.raises(ValueError):
+        t.bucket(0)
+    with pytest.raises(ValueError):
+        BucketTable(min_bucket=16, max_bucket=8)
+
+
+# ---------------------------------------------------------------------------
+# EDF under contention through the REAL schedulers
+# ---------------------------------------------------------------------------
+
+def test_micro_edf_admission_order_under_contention(fc_int8, resolver):
+    """Four same-instant requests, two lanes, EDF: the two earliest
+    deadlines are served in wave 1, the others in wave 2."""
+    rng = np.random.default_rng(0)
+    host = MultiTenantHost(arena_bytes=64 << 20, policy="edf",
+                           clock=lambda: 0)
+    host.add_ragged_micro("fc", fc_int8, resolver, lanes=2)
+    deadlines = {0: 400, 1: 100, 2: 300, 3: 200}
+    for uid, d in deadlines.items():
+        host.submit_micro("fc", uid,
+                          [[rng.normal(0, 1, (1, 64)).astype(np.float32)]],
+                          deadline_us=d, arrival_us=0)
+    waves, seen = [], set()
+    while True:
+        pending = host.micro_step()
+        done = {uid for uid, r in host.micro_results["fc"].items()
+                if r.done}
+        if done - seen:
+            waves.append(done - seen)
+            seen |= done
+        if not pending:
+            break
+    assert waves[0] == {1, 3}               # deadlines 100 and 200 first
+    assert seen == {0, 1, 2, 3}
+
+
+def test_engine_edf_admission_order_under_contention():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import ServingEngine
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_slots=1, cache_len=32,
+                        policy="edf", clock=lambda: 0)
+    rng = np.random.default_rng(1)
+    for uid, d in ((1, 900), (2, 100), (3, 500)):
+        eng.submit(Request(uid=uid,
+                           tokens=rng.integers(0, cfg.vocab - 2,
+                                               5).astype(np.int32),
+                           max_new_tokens=2, deadline_us=d,
+                           arrival_us=0))
+    eng.step()
+    # the single slot went to the tightest deadline, not FIFO order
+    assert eng.slot_req[0].uid == 2
+    results = eng.run()
+    assert all(r.done for r in results.values())
+
+
+# ---------------------------------------------------------------------------
+# bucketed prefill: bit-identity + the no-retrace assertion
+# ---------------------------------------------------------------------------
+
+def test_bucketed_prefill_bit_identity_and_single_compile():
+    """Mixed prompt lengths 5/7/9 share ONE power-of-two bucket: the
+    bucketed engine must trace exactly one prefill program (trace-count
+    hook) and emit tokens bit-identical to the exact-length engine,
+    which traces one program per distinct length."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import ServingEngine
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    lengths = (5, 7, 9)                     # tokens[:-1] = 4/6/8 -> all 8
+    prompts = {uid: rng.integers(0, cfg.vocab - 2, L).astype(np.int32)
+               for uid, L in enumerate(lengths)}
+    outs = {}
+    for mode in ("exact", "bucketed"):
+        eng = ServingEngine(m, params, max_slots=2, cache_len=64,
+                            prefill_buckets=False if mode == "exact"
+                            else None)
+        for uid, toks in prompts.items():
+            eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=3))
+        res = eng.run()
+        outs[mode] = {uid: r.output for uid, r in res.items()}
+        if mode == "exact":
+            assert eng.bucket_table is None
+            assert eng.prefill_compiles() == len(set(lengths))
+        else:
+            assert eng.bucket_table.buckets() == [8]
+            # THE no-retrace assertion: one bucket, one traced program
+            assert eng.prefill_compiles() == 1
+            assert jit_cache_size(eng._prefill) == 1
+    assert outs["exact"] == outs["bucketed"]
+
+
+def test_bucketing_guarded_for_state_polluting_families():
+    """SSM prefill integrates every input position into recurrent
+    state, so the engine must refuse bucketed prefill there and
+    auto-disable it by default."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import ServingEngine
+
+    cfg = get_config("mamba2-780m", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_slots=1, cache_len=32)
+    assert eng.bucket_table is None         # auto: off for ssm
+    with pytest.raises(ValueError):
+        ServingEngine(m, params, max_slots=1, cache_len=32,
+                      prefill_buckets=BucketTable())
+
+
+def test_prefill_buckets_argument_validation():
+    """True means auto, a tiny cache auto-disables instead of crashing
+    at construction, and a non-BucketTable value fails loudly."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import ServingEngine
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_slots=1, cache_len=32,
+                        prefill_buckets=True)
+    assert eng.bucket_table is not None
+    tiny = ServingEngine(m, params, max_slots=1, cache_len=4)
+    assert tiny.bucket_table is None        # no room for min bucket
+    with pytest.raises(TypeError):
+        ServingEngine(m, params, max_slots=1, cache_len=32,
+                      prefill_buckets="8,16,32")
+
+
+def test_shared_lane_buckets_share_arena_pool_free_lists(fc_int8,
+                                                         resolver):
+    """Two model buckets with lane counts 3 and 4 quantized through one
+    BucketTable both compile for B=4 and draw the SAME stacked-buffer
+    free list from the shared ArenaPool."""
+    rng = np.random.default_rng(3)
+    table = BucketTable(min_bucket=2, max_bucket=64)
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("a", fc_int8, resolver, lanes=3, lane_buckets=table)
+    pool.add_bucket("b", fc_int8, resolver, lanes=4, lane_buckets=table)
+    assert len(pool.lanes("a")) == 4 and len(pool.lanes("b")) == 4
+    for name in ("a", "b"):
+        slot = pool.admit(name)
+        pool.set_input(name, slot, 0,
+                       rng.normal(0, 1, (1, 64)).astype(np.float32))
+    pool.dispatch()
+    # one (4, nbytes) free list serves both buckets
+    assert list(pool.pool._batched) == [4]
+
+
+# ---------------------------------------------------------------------------
+# the benchmark cannot rot: end-to-end smoke (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_arrival_process_benchmark_tiny_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.arrival_process", "--tiny"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+        timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "Arrival-process completion latency" in proc.stdout
+    assert "prefill_bucketed" in proc.stdout

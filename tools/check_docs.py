@@ -1,31 +1,46 @@
-"""Docs lint: every public class (and module) in ``repro.core`` and
-``repro.serving`` must carry a docstring.
+"""Docs lint: every public class (and module) in ``repro.core``,
+``repro.serving`` (including the scheduling policies), and
+``benchmarks/`` must carry a docstring, and every benchmark artifact
+the docs mention must exist.
 
-The architecture guide (docs/ARCHITECTURE.md) points readers at the
-defining classes; this check keeps those pointers from rotting into
-undocumented code.  It is pure-AST — nothing is imported — so it is
-safe to run anywhere, and it is wired into the test suite
-(tests/test_docs_lint.py) so a missing docstring fails CI.
+The architecture and scheduling guides (docs/ARCHITECTURE.md,
+docs/SCHEDULING.md) point readers at defining classes and at committed
+``BENCH_*.json`` result files; this check keeps both kinds of pointer
+from rotting.  It is pure-AST / pure-filesystem — nothing is imported —
+so it is safe to run anywhere, and it is wired into the test suite
+(tests/test_docs_lint.py) so a violation fails CI.
+
+Checks:
+
+  1. **docstrings** — each module and each public module-level class in
+     the linted packages carries a docstring.  A class is *public* when
+     its name does not start with an underscore; classes nested inside
+     functions (test fixtures, closures) are exempt.
+  2. **benchmark references** — every ``BENCH_<name>.json`` mentioned
+     in the *living* documents — ``README.md``, ``ROADMAP.md``, and
+     ``docs/*.md`` — exists under ``benchmarks/results/`` (so the
+     numbers a guide cites are actually committed next to it).
+     ``CHANGES.md`` is exempt: it is an append-only history whose old
+     entries may legitimately name retired artifacts.
 
 Usage::
 
     python tools/check_docs.py            # lint, exit 1 on violations
     python tools/check_docs.py --list     # print the files scanned
-
-A class is *public* when its name does not start with an underscore.
-Nested classes inside functions (test fixtures, closures) are exempt:
-only module-level classes are part of the documented surface.
 """
 
 from __future__ import annotations
 
 import ast
+import re
 import sys
 from pathlib import Path
 from typing import Iterator, List, Tuple
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-LINTED_PACKAGES = ("src/repro/core", "src/repro/serving")
+LINTED_PACKAGES = ("src/repro/core", "src/repro/serving", "benchmarks")
+RESULTS_DIR = "benchmarks/results"
+BENCH_REF = re.compile(r"\bBENCH_[A-Za-z0-9_]+\.json\b")
 
 
 def linted_files(root: Path = REPO_ROOT) -> List[Path]:
@@ -37,6 +52,16 @@ def linted_files(root: Path = REPO_ROOT) -> List[Path]:
     return files
 
 
+def doc_files(root: Path = REPO_ROOT) -> List[Path]:
+    """The markdown files whose BENCH_*.json references are checked."""
+    files = [p for p in (root / "docs").glob("*.md")]
+    for name in ("README.md", "ROADMAP.md"):
+        p = root / name
+        if p.is_file():
+            files.append(p)
+    return sorted(files)
+
+
 def _module_level_classes(tree: ast.Module) -> Iterator[ast.ClassDef]:
     for node in tree.body:
         if isinstance(node, ast.ClassDef):
@@ -44,7 +69,8 @@ def _module_level_classes(tree: ast.Module) -> Iterator[ast.ClassDef]:
 
 
 def check_file(path: Path, root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]:
-    """Violations in one file as (relative_path, lineno, message)."""
+    """Docstring violations in one file as (relative_path, lineno,
+    message)."""
     rel = str(path.relative_to(root))
     tree = ast.parse(path.read_text(), filename=rel)
     out: List[Tuple[str, int, str]] = []
@@ -59,28 +85,47 @@ def check_file(path: Path, root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]
     return out
 
 
+def check_bench_references(root: Path = REPO_ROOT
+                           ) -> List[Tuple[str, int, str]]:
+    """Violations for BENCH_*.json files mentioned in docs but missing
+    from benchmarks/results/."""
+    out: List[Tuple[str, int, str]] = []
+    results = root / RESULTS_DIR
+    for doc in doc_files(root):
+        rel = str(doc.relative_to(root))
+        for lineno, line in enumerate(doc.read_text().splitlines(), 1):
+            for name in BENCH_REF.findall(line):
+                if not (results / name).is_file():
+                    out.append((rel, lineno,
+                                f"mentions {name} but "
+                                f"{RESULTS_DIR}/{name} does not exist"))
+    return out
+
+
 def collect_violations(root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]:
-    """All docstring violations under the linted packages."""
+    """All docstring + benchmark-reference violations."""
     out: List[Tuple[str, int, str]] = []
     for path in linted_files(root):
         out.extend(check_file(path, root))
+    out.extend(check_bench_references(root))
     return out
 
 
 def main(argv: List[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if "--list" in argv:
-        for path in linted_files():
+        for path in linted_files() + doc_files():
             print(path.relative_to(REPO_ROOT))
         return 0
     violations = collect_violations()
     for rel, lineno, msg in violations:
         print(f"{rel}:{lineno}: {msg}")
     if violations:
-        print(f"\n{len(violations)} docstring violation(s); see "
+        print(f"\n{len(violations)} docs violation(s); see "
               f"docs/ARCHITECTURE.md for the documentation contract")
         return 1
-    print(f"docs lint OK ({len(linted_files())} files)")
+    print(f"docs lint OK ({len(linted_files())} source files, "
+          f"{len(doc_files())} documents)")
     return 0
 
 
