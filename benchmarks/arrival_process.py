@@ -30,12 +30,21 @@ Emits ``BENCH_arrival_process.json`` via ``python -m benchmarks.run
 arrival_process``; ``python -m benchmarks.arrival_process --tiny``
 runs a seconds-scale end-to-end smoke (no JSON written) used by the
 slow test tier.  How to read the rows: docs/SCHEDULING.md.
+
+``--preempt`` runs the PREEMPTION benchmark instead (also registered
+as ``preemption`` in ``benchmarks.run`` → ``BENCH_preemption.json``):
+a heavy-tail mix — a few 6-frame best-effort monopolizers among
+1-frame deadline-class requests — served with PR-3 EDF admission alone
+vs EDF + EDF-displace preemption over checkpointable lanes, plus the
+pod-engine analogue where a long-prompt monopolizer is tamed by
+preemption + chunked prefill.  How to read those rows:
+docs/PREEMPTION.md.
 """
 
 from __future__ import annotations
 
 import sys
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -54,6 +63,13 @@ OCCUPANCIES = (0.25, 0.5, 0.75, 0.9)
 FRAME_LO, FRAME_HI = 1, 6          # frames per request, inclusive
 SLO_FACTOR = 4.0                   # deadline = arrival + frames*D*factor
 IN_SHAPE = (1, 64)                 # fc_stack input
+
+# --preempt section: heavy-tail mix over few lanes (monopolization)
+PREEMPT_LANES = 4
+PREEMPT_N = 120
+MONO_FRAC = 0.25                   # 6-frame best-effort monopolizers
+PREEMPT_OCC = 0.75
+TIGHT_SLO_TICKS = 3.0              # deadline-class: arrival + 3 ticks
 
 
 class VirtualClock:
@@ -253,6 +269,259 @@ def bench_prefill_buckets(lengths: Sequence[int] = (5, 7, 9, 12, 16, 17)
 
 
 # ---------------------------------------------------------------------------
+# section 3 (--preempt): preemptible lanes under a heavy-tail mix
+# ---------------------------------------------------------------------------
+
+def _heavy_tail_workload(rng: np.random.Generator, n: int, lanes: int,
+                         occupancy: float, dispatch_us: float) -> Dict:
+    """The monopolizer mix: mostly 1-frame requests with a TIGHT
+    deadline (arrival + TIGHT_SLO_TICKS dispatches), a MONO_FRAC tail
+    of 6-frame best-effort streams (no deadline) that hold a lane for
+    6 ticks unless preempted."""
+    mono = rng.random(n) < MONO_FRAC
+    frames = np.where(mono, FRAME_HI, 1)
+    rate = occupancy * lanes / (float(frames.mean()) * dispatch_us)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    deadlines = np.where(
+        mono, np.inf, arrivals + TIGHT_SLO_TICKS * dispatch_us)
+    inputs = [[rng.normal(0, 1, IN_SHAPE).astype(np.float32)
+               for _ in range(k)] for k in frames]
+    return {"mono": mono, "frames": frames, "arrivals": arrivals,
+            "deadlines": deadlines, "inputs": inputs}
+
+
+def _sim_preempt(model, resolver, wl, lanes: int, dispatch_us: float,
+                 preempt: Optional[str]) -> Dict[str, np.ndarray]:
+    """Same tick loop as ``_sim_ragged`` with an optional preemption
+    policy on the host; also returns per-request preemption counts."""
+    clock = VirtualClock()
+    host = MultiTenantHost(arena_bytes=64 << 20,
+                           policy=get_policy("edf"), preempt=preempt,
+                           clock=clock)
+    host.add_ragged_micro("m", model, resolver, lanes=lanes,
+                          bucket_lanes=False)
+    n = len(wl["arrivals"])
+    done_at = np.full(n, np.nan)
+    nxt = 0
+    while True:
+        while nxt < n and wl["arrivals"][nxt] <= clock.now_us:
+            d = wl["deadlines"][nxt]
+            host.submit_micro(
+                "m", nxt, [[x] for x in wl["inputs"][nxt]],
+                deadline_us=None if np.isinf(d) else int(d),
+                arrival_us=int(wl["arrivals"][nxt]))
+            nxt += 1
+        if not host._micro_pending():
+            if nxt >= n:
+                break
+            clock.now_us = wl["arrivals"][nxt]
+            continue
+        host.micro_step()
+        clock.now_us += dispatch_us
+        for uid, res in host.micro_results["m"].items():
+            if res.done and np.isnan(done_at[uid]):
+                done_at[uid] = clock.now_us
+    preemptions = np.array(
+        [host.micro_results["m"][u].preemptions for u in range(n)])
+    return {"done_at": done_at, "preemptions": preemptions}
+
+
+def _preempt_row(mode: str, wl, sim: Dict, dispatch_us: float) -> Dict:
+    lat = sim["done_at"] - wl["arrivals"]
+    assert not np.isnan(lat).any(), f"{mode}: unfinished requests"
+    dl = ~wl["mono"]                       # the deadline class
+    p50, p99 = np.percentile(lat[dl], (50, 99))
+    slo = float((sim["done_at"][dl] <= wl["deadlines"][dl]).mean())
+    return {
+        "mode": mode,
+        "lanes": PREEMPT_LANES,
+        "n_deadline": int(dl.sum()),
+        "n_monopolizers": int(wl["mono"].sum()),
+        "dispatch_us": round(dispatch_us, 1),
+        "deadline_p50_us": round(float(p50), 1),
+        "deadline_p99_us": round(float(p99), 1),
+        "deadline_slo_pct": round(100 * slo, 1),
+        "mono_p99_us": round(float(np.percentile(lat[wl["mono"]], 99)),
+                             1),
+        "preemptions": int(sim["preemptions"].sum()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# section 4 (--preempt): pod engine, long-prompt monopolizer vs
+# preemption + chunked prefill
+# ---------------------------------------------------------------------------
+
+def _engine_workload(rng: np.random.Generator, n: int, vocab: int,
+                     decode_us: float, prefill_short_us: float) -> Dict:
+    """80% short deadline-class requests (5-token prompt, 4 new
+    tokens), 20% long best-effort monopolizers (41-token prompt, 16 new
+    tokens) whose one-shot prefill stalls every other slot."""
+    mono = rng.random(n) < 0.2
+    plens = np.where(mono, 41, 5)
+    budgets = np.where(mono, 16, 4)
+    service = prefill_short_us + 4 * decode_us   # deadline-class cost
+    arrivals = np.cumsum(rng.exponential(3.0 * decode_us, n))
+    deadlines = np.where(mono, np.inf, arrivals + 4.0 * service)
+    prompts = [rng.integers(0, vocab - 2, L).astype(np.int32)
+               for L in plens]
+    return {"mono": mono, "prompts": prompts, "budgets": budgets,
+            "arrivals": arrivals, "deadlines": deadlines}
+
+
+def _measure_engine_costs(bundle, params, chunk: int) -> Dict:
+    """Warm per-dispatch costs of the engine's three step kinds —
+    decode, one-shot prefill per padded length, one chunk — the
+    virtual clock's tick vocabulary."""
+    import jax.numpy as jnp
+
+    from repro.serving import ServingEngine
+
+    eng = ServingEngine(bundle, params, max_slots=2, cache_len=64,
+                        prefill_chunk=chunk)
+    rng = np.random.default_rng(SEED)
+    costs: Dict = {}
+    for L in (chunk, 8, 64):
+        toks = jnp.asarray(rng.integers(
+            0, bundle.cfg.vocab - 2, L).astype(np.int32)[None])
+        costs[("prefill", L)] = time_call(
+            lambda t=toks: eng._prefill((params, {"tokens": t}))[1]["k"]
+            .block_until_ready(), warmup=1, iters=5) * 1e6
+    cache1 = bundle.empty_cache(1, 64, bundle.cfg.jnp_dtype())
+    toks = jnp.asarray(rng.integers(
+        0, bundle.cfg.vocab - 2, chunk).astype(np.int32)[None])
+    costs["chunk"] = time_call(
+        lambda: eng._prefill_chunk(
+            (params, cache1, toks, jnp.int32(8)))["k"]
+        .block_until_ready(), warmup=1, iters=5) * 1e6
+    cur = jnp.zeros((2, 1), jnp.int32)
+    lens = jnp.asarray([8, 8], jnp.int32)
+    cache2 = bundle.empty_cache(2, 64, bundle.cfg.jnp_dtype())
+    costs["decode"] = time_call(
+        lambda: eng._decode((params, cache2, cur, lens))[0]
+        .block_until_ready(), warmup=1, iters=5) * 1e6
+    return costs
+
+
+def _sim_engine(bundle, params, wl, mode: str, costs: Dict,
+                chunk: int) -> np.ndarray:
+    """Drive a REAL ServingEngine tick by tick on the virtual clock,
+    advancing it by the measured cost of what each step actually did
+    (``ServingEngine.last_step``).  Returns completion times (µs)."""
+    from repro.serving import Request, ServingEngine
+
+    kw: Dict = {}
+    if "preempt" in mode:
+        kw["preempt"] = "edf-displace"
+    if "chunk" in mode:
+        kw["prefill_chunk"] = chunk
+    clock = VirtualClock()
+    eng = ServingEngine(bundle, params, max_slots=2, cache_len=64,
+                        policy="edf", clock=clock, **kw)
+    n = len(wl["arrivals"])
+    done_at = np.full(n, np.nan)
+    nxt = 0
+    while True:
+        while nxt < n and wl["arrivals"][nxt] <= clock.now_us:
+            d = wl["deadlines"][nxt]
+            eng.submit(Request(
+                uid=nxt, tokens=wl["prompts"][nxt],
+                max_new_tokens=int(wl["budgets"][nxt]),
+                deadline_us=None if np.isinf(d) else int(d),
+                arrival_us=int(wl["arrivals"][nxt])))
+            nxt += 1
+        more = eng.step()
+        ev = eng.last_step
+        dt = ev["chunks"] * costs["chunk"]
+        if ev["decoded"]:
+            dt += costs["decode"]
+        for L in ev["prefill_tokens"]:
+            cost = costs.get(("prefill", L))
+            if cost is None:               # interpolate on tokens
+                cost = costs[("prefill", 64)] * (L / 64.0)
+            dt += cost
+        clock.now_us += max(dt, 1.0)
+        for uid, res in eng.results.items():
+            if res.done and np.isnan(done_at[uid]):
+                done_at[uid] = clock.now_us
+        if not more:
+            if nxt >= n:
+                break
+            clock.now_us = max(clock.now_us, wl["arrivals"][nxt])
+    return done_at
+
+
+def _engine_row(mode: str, wl, done_at: np.ndarray) -> Dict:
+    lat = done_at - wl["arrivals"]
+    assert not np.isnan(lat).any(), f"{mode}: unfinished requests"
+    dl = ~wl["mono"]
+    p50, p99 = np.percentile(lat[dl], (50, 99))
+    slo = float((done_at[dl] <= wl["deadlines"][dl]).mean())
+    return {
+        "mode": mode,
+        "slots": 2,
+        "n_deadline": int(dl.sum()),
+        "n_monopolizers": int(wl["mono"].sum()),
+        "deadline_p50_us": round(float(p50), 1),
+        "deadline_p99_us": round(float(p99), 1),
+        "deadline_slo_pct": round(100 * slo, 1),
+        "mono_p99_us": round(float(np.percentile(lat[wl["mono"]], 99)),
+                             1),
+    }
+
+
+def run_preempt(tiny: bool = False) -> List[Dict]:
+    """The --preempt benchmark: heavy-tail micro mix (EDF vs
+    EDF+preemption over checkpointable lanes) plus the pod-engine
+    monopolizer (EDF vs +preemption vs +preemption+chunked prefill).
+    Emits ``BENCH_preemption.json`` unless ``tiny``."""
+    lanes = PREEMPT_LANES
+    n = 32 if tiny else PREEMPT_N
+    resolver = AllOpsResolver()
+    model = _build_model()
+    rng = np.random.default_rng(SEED)
+    cost = _measure_dispatch_us(model, resolver, lanes, rng)
+
+    wl = _heavy_tail_workload(np.random.default_rng(SEED + 2), n, lanes,
+                              PREEMPT_OCC, cost["ragged"])
+    rows: List[Dict] = []
+    for mode, preempt in (("edf", None),
+                          ("edf_preempt", "edf-displace")):
+        sim = _sim_preempt(model, resolver, wl, lanes, cost["ragged"],
+                           preempt)
+        rows.append(_preempt_row(mode, wl, sim, cost["ragged"]))
+    print_table("Preemptible lanes (heavy-tail mix: 1-frame deadline "
+                "class + 6-frame best-effort monopolizers)", rows)
+
+    # pod engine: long-prompt monopolizer
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    chunk = 8
+    costs = _measure_engine_costs(bundle, params, chunk)
+    ewl = _engine_workload(np.random.default_rng(SEED + 3),
+                           12 if tiny else 40, cfg.vocab,
+                           costs["decode"], costs[("prefill", 8)])
+    erows: List[Dict] = []
+    for mode in ("engine_edf", "engine_edf_preempt",
+                 "engine_edf_preempt_chunk"):
+        done = _sim_engine(bundle, params, ewl, mode, costs, chunk)
+        erows.append(_engine_row(mode, ewl, done))
+    print_table("Pod engine (short deadline class + long-prompt "
+                "best-effort monopolizers)", erows)
+
+    all_rows = rows + erows
+    if not tiny:
+        save_result("BENCH_preemption", all_rows)
+    return all_rows
+
+
+# ---------------------------------------------------------------------------
 
 def run(tiny: bool = False) -> List[Dict]:
     lanes = 4 if tiny else LANES
@@ -290,4 +559,7 @@ def run(tiny: bool = False) -> List[Dict]:
 
 
 if __name__ == "__main__":
-    run(tiny="--tiny" in sys.argv[1:])
+    if "--preempt" in sys.argv[1:]:
+        run_preempt(tiny="--tiny" in sys.argv[1:])
+    else:
+        run(tiny="--tiny" in sys.argv[1:])

@@ -32,6 +32,12 @@ def block(x):
 
 
 def save_result(name: str, rows: List[Dict]) -> str:
+    """Persist benchmark rows under ``benchmarks/results/`` with the
+    uniform ``BENCH_<name>.json`` naming — the prefix is added here so
+    every benchmark lands consistently (and the docs lint, which
+    verifies each cited BENCH_*.json exists, covers them all)."""
+    if not name.startswith("BENCH_"):
+        name = "BENCH_" + name
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name + ".json")
     with open(path, "w") as f:

@@ -7,6 +7,9 @@
   arrival_process        Poisson arrivals: completion latency + SLO,
                          lockstep FIFO vs ragged FIFO vs ragged EDF,
                          plus bucketed-prefill compile counts
+  preemption             heavy-tail mix: EDF alone vs EDF + preemptible
+                         lanes, and the pod engine with preemption +
+                         chunked prefill (docs/PREEMPTION.md)
   memory_overhead        Tab. 2  persistent/nonpersistent arena split
   planner_bench          Fig. 4  naive vs FFD memory compaction
   kernel_speedup         Fig. 6  reference vs optimized kernels
@@ -36,6 +39,7 @@ def main(argv=None) -> None:
         "batched_invoke": interpreter_overhead.run_batched,
         "ragged_invoke": ragged_invoke.run,
         "arrival_process": arrival_process.run,
+        "preemption": arrival_process.run_preempt,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,
         "kernel_speedup": kernel_speedup.run,

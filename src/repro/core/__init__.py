@@ -7,7 +7,8 @@ from .arena import ArenaOverflowError, TwoStackArena
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
 from .executor import (AllocationPlan, ArenaPool, BucketTable,
-                       CompiledPlan, InterpreterPool, LaneState,
+                       CompiledPlan, InterpreterPool, LaneCheckpoint,
+                       LaneState,
                        RaggedInterpreterPool, SharedArenaState,
                        jit_cache_size)
 from .graph_builder import GraphBuilder
@@ -25,7 +26,8 @@ __all__ = [
     "ArenaOverflowError", "TwoStackArena", "export", "fold_constants",
     "quantize", "quantize_graph", "strip_training_ops", "GraphBuilder",
     "MicroInterpreter", "AllocationPlan", "ArenaPool", "BucketTable",
-    "CompiledPlan", "InterpreterPool", "LaneState",
+    "CompiledPlan", "InterpreterPool", "LaneCheckpoint",
+    "LaneState",
     "RaggedInterpreterPool", "jit_cache_size",
     "SharedArenaState", "BufferRequest", "GreedyMemoryPlanner",
     "LinearMemoryPlanner", "MemoryPlan", "OfflineMemoryPlanner",

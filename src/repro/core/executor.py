@@ -720,6 +720,26 @@ class LaneState:
     active: bool = False
 
 
+@dataclass
+class LaneCheckpoint:
+    """A lane's continuation state, captured HOST-SIDE so the lane can
+    be freed and the request re-admitted later — the preemption
+    primitive (docs/PREEMPTION.md).
+
+    ``variables`` holds one np copy of each variable tensor's per-lane
+    row (the KV/recurrent continuation state), ``step`` the dispatch
+    counter, ``bucket``/``uid`` identify where it came from.  Nothing
+    here is traced: snapshotting and restoring move VALUES between
+    host and the stacked device arrays; the masked program, its active
+    mask, and every shape stay exactly what init compiled, so a
+    preempt/resume cycle can never retrace."""
+
+    bucket: str
+    uid: Optional[int]
+    step: int
+    variables: Tuple[np.ndarray, ...]
+
+
 class _RaggedBucket:
     """Per-model-family state of a RaggedInterpreterPool: one shared
     AllocationPlan/CompiledPlan, the stacked per-lane variable state,
@@ -852,6 +872,53 @@ class RaggedInterpreterPool:
         lane.uid = None
         b.inputs[slot] = {}
         return lane
+
+    # -- preemption: checkpoint / restore (host-side, never retraces) --
+
+    def snapshot_lane(self, bucket: str, slot: int) -> LaneCheckpoint:
+        """Capture an active lane's continuation state (variable-tensor
+        rows + step counter) into a host-side ``LaneCheckpoint``.  The
+        lane itself is untouched — pair with ``retire`` to preempt.
+        Synchronizes on the lane's variable state (device → host copy),
+        which is the checkpoint's entire cost; the masked program and
+        its trace cache are not involved."""
+        b = self._buckets[bucket]
+        lane = b.table[slot]
+        if not lane.active:
+            raise RuntimeError(
+                f"bucket {bucket!r} lane {slot} is not active")
+        rows = tuple(np.asarray(v[slot]).copy() for v in b.variables)
+        return LaneCheckpoint(bucket=bucket, uid=lane.uid,
+                              step=lane.step, variables=rows)
+
+    def restore_lane(self, ckpt: LaneCheckpoint,
+                     slot: Optional[int] = None) -> int:
+        """Re-admit a checkpointed continuation into a free lane of its
+        bucket (any free lane by default, or ``slot``).  The lane's
+        variable rows are set to the checkpoint's values and its step
+        counter resumes where the snapshot left off, so the next
+        dispatches are bit-identical to an uninterrupted run — lanes
+        are independent under the vmapped/unrolled body, so the slot
+        index and the other lanes' contents cannot perturb the math.
+        Only the lane table and stacked values change: no recompile."""
+        b = self._buckets[ckpt.bucket]
+        if slot is None:
+            free = self.free_lanes(ckpt.bucket)
+            if not free:
+                raise RuntimeError(
+                    f"bucket {ckpt.bucket!r}: no free lane to restore")
+            slot = free[0]
+        lane = b.table[slot]
+        if lane.active:
+            raise RuntimeError(
+                f"bucket {ckpt.bucket!r} lane {slot} is occupied")
+        lane.active, lane.uid, lane.step = True, ckpt.uid, ckpt.step
+        if b.variables:
+            b.variables = tuple(
+                v.at[slot].set(jnp.asarray(row))
+                for v, row in zip(b.variables, ckpt.variables))
+        b.inputs[slot] = {}
+        return slot
 
     # -- per-wave input staging -----------------------------------------
 

@@ -133,13 +133,15 @@ class OpCode:
     # optimized serving kernels in with no engine changes
     SERVING_PREFILL = 41
     SERVING_DECODE = 42
+    SERVING_PREFILL_CHUNK = 43
 
 
 # Pod-scale macro-ops: resolvable through the tag chain but never part
 # of a µFB graph, so AllOpsResolver must not link them (they would
 # distort the Table-2 code-size accounting depending on import order).
 SERVING_OPCODES = frozenset({OpCode.SERVING_PREFILL,
-                             OpCode.SERVING_DECODE})
+                             OpCode.SERVING_DECODE,
+                             OpCode.SERVING_PREFILL_CHUNK})
 
 
 OP_NAMES = {v: k for k, v in vars(OpCode).items() if not k.startswith("_")}

@@ -164,12 +164,17 @@ def rope_cos_sin(positions: jnp.ndarray, dim: int, base: float,
 
 def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
                sin: jnp.ndarray) -> jnp.ndarray:
-    """x: (..., S, H, D); cos/sin: (S, D//2) or broadcastable."""
+    """x: (..., S, H, D); cos/sin: (S, D//2), (..., S, D//2), or
+    broadcastable with a head axis already in place.  A missing head
+    axis is inserted — without it, per-slot decode positions of shape
+    (B, 1, D//2) would right-align against (B, S, H, D//2) and rotate
+    EVERY slot by slot 0's position (the preempt-to-a-different-slot
+    tests in tests/test_preemption.py pin this down)."""
     half = x.shape[-1] // 2
     x1, x2 = x[..., :half], x[..., half:]
-    if cos.ndim == 2:                      # (S, half) -> (S, 1, half)
-        cos = cos[:, None, :]
-        sin = sin[:, None, :]
+    if cos.ndim < x.ndim:                  # (..., S, half): add head axis
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
     c = cos.astype(x.dtype)
     s = sin.astype(x.dtype)
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -534,6 +534,95 @@ def lm_prefill(params: Params, cfg: ModelConfig, tokens,
     return logits, {"k": ks_, "v": vs_}
 
 
+def lm_prefill_chunk(params: Params, cfg: ModelConfig, cache: Dict,
+                     tokens, start, *, window: Optional[int] = None,
+                     embed_scale: Optional[float] = None,
+                     data_shards: int = 16) -> Dict:
+    """One prompt CHUNK through the backbone: tokens (B,S) occupy
+    absolute positions ``start .. start+S`` of a cache that already
+    holds every earlier position.  Returns the updated cache only —
+    the engine hands the last prompt token to the decode loop, so
+    chunk steps never pay for logits.
+
+    ``start`` is a TRACED scalar: one compiled program serves every
+    chunk of every prompt (the chunked-prefill analogue of the masked
+    pool's traced active mask).  The attention body mirrors
+    ``chunked_attention``'s einsum/mask/softmax structure exactly —
+    cache positions beyond the causal horizon are masked to -1e30,
+    i.e. exactly-zero softmax weight — which is what keeps chunked
+    prefill token-identical to one-shot prefill for families whose
+    decode is length-masked (dense/vlm; see docs/PREEMPTION.md §4).
+    Requires ``start + S <= cache_len`` (no ring wrap): the serving
+    engine falls back to one-shot exact prefill past that."""
+    x = embed_tokens(params, cfg, tokens)
+    if embed_scale is not None:
+        x = x * jnp.asarray(embed_scale, x.dtype)
+    s = x.shape[1]
+    g = cfg.n_heads // cfg.n_kv_heads
+    positions = start + jnp.arange(s)
+    scale = 1.0 / math.sqrt(cfg.dh)
+
+    def attend(p_attn, xin, ck, cv):
+        # ck/cv (B,KH,C,dh): write the chunk's K/V at its absolute
+        # positions, then attend the chunk's queries over the cache
+        c = ck.shape[2]
+        q, k, v = _proj_qkv(p_attn, cfg, xin, positions)
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.transpose(0, 2, 1, 3).astype(ck.dtype),
+            (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.transpose(0, 2, 1, 3).astype(cv.dtype),
+            (0, 0, start, 0))
+        ks = ck.transpose(0, 2, 1, 3)          # (B,C,KH,dh)
+        vs = cv.transpose(0, 2, 1, 3)
+        kx = shard_kv(jnp.repeat(ks, g, axis=2)) if g > 1 else shard_kv(ks)
+        vx = shard_kv(jnp.repeat(vs, g, axis=2)) if g > 1 else shard_kv(vs)
+        qx = shard_heads(q)
+        kpos = jnp.arange(c)
+        logits = jnp.einsum("bqhd,bshd->bhqs", qx, kx,
+                            preferred_element_type=jnp.float32)
+        logits = logits * scale
+        mask = kpos[None, :] <= positions[:, None]
+        if window is not None:
+            mask = mask & (kpos[None, :] > positions[:, None] - window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(vx.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", w, vx)
+        y = jnp.einsum("bqhk,hkd->bqd", out, p_attn["wo"])
+        return y, ck, cv
+
+    def layer(h, p_l, ck, cv):
+        xin = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+        att, ck, cv = attend(p_l["attn"], xin, ck, cv)
+        hh = h + att
+        hin = rms_norm(hh, p_l["ln2"], cfg.norm_eps)
+        if "moe" in p_l:
+            y, _ = moe_block(p_l["moe"], cfg, hin, data_shards)
+        else:
+            y = mlp_block(p_l["mlp"], cfg, hin)
+        return hh + y, ck, cv
+
+    i0 = 0
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        x, k0, v0 = layer(x, fb, cache["k"][0], cache["v"][0])
+        first_kv = (k0, v0)
+        i0 = 1
+
+    def body(h, layer_in):
+        p_l, ck, cv = layer_in
+        h, kc, vc = layer(h, p_l, ck, cv)
+        return h, (kc, vc)
+
+    x, (ks_, vs_) = jax.lax.scan(body, x,
+                                 (params["blocks"], cache["k"][i0:],
+                                  cache["v"][i0:]))
+    if i0:
+        ks_ = jnp.concatenate([first_kv[0][None], ks_])
+        vs_ = jnp.concatenate([first_kv[1][None], vs_])
+    return {"k": ks_, "v": vs_}
+
+
 def lm_decode(params: Params, cfg: ModelConfig, cache: Dict, tokens,
               lengths, *, data_shards: int = 16,
               embed_scale: Optional[float] = None, attn_impl=None):

@@ -1,17 +1,24 @@
 """Serving substrate: batched prefill/decode engine with KV arenas
 planned by the TFLM memory planner, multitenant hosting,
-registry-resolved serving kernels (ops), and pluggable latency-aware
-admission policies (scheduling)."""
+registry-resolved serving kernels (ops), pluggable latency-aware
+admission policies, and preemptive scheduling over checkpointable
+slots/lanes (scheduling, docs/PREEMPTION.md)."""
 
 from . import ops  # registers the reference serving macro-kernels
 from .engine import (BUCKETED_FAMILIES, DEFAULT_TAGS, Request,
-                     RequestResult, ServingEngine, default_clock)
+                     RequestResult, ServingEngine, SlotCheckpoint,
+                     default_clock)
 from .host import MicroRequest, MicroRequestResult, MultiTenantHost
-from .scheduling import (EDFPolicy, FIFOPolicy, PriorityPolicy,
-                         SchedulingPolicy, get_policy)
+from .scheduling import (EDFDisplacePolicy, EDFPolicy, FIFOPolicy,
+                         PreemptionPolicy, PriorityPolicy,
+                         SchedulingPolicy, WFQDisplacePolicy, WFQPolicy,
+                         get_policy, get_preemption)
 
 __all__ = ["BUCKETED_FAMILIES", "DEFAULT_TAGS", "Request",
-           "RequestResult", "ServingEngine", "default_clock",
+           "RequestResult", "ServingEngine", "SlotCheckpoint",
+           "default_clock",
            "MicroRequest", "MicroRequestResult", "MultiTenantHost",
-           "EDFPolicy", "FIFOPolicy", "PriorityPolicy",
-           "SchedulingPolicy", "get_policy", "ops"]
+           "EDFDisplacePolicy", "EDFPolicy", "FIFOPolicy",
+           "PreemptionPolicy", "PriorityPolicy", "SchedulingPolicy",
+           "WFQDisplacePolicy", "WFQPolicy", "get_policy",
+           "get_preemption", "ops"]

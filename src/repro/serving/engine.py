@@ -34,13 +34,14 @@ Compile-once invariants (what callers may rely on):
     and cache rows; it never retraces, which is what keeps continuous
     batching allocation-free inside the loop.
 
-Two host-side degrees of freedom ride on top (docs/SCHEDULING.md):
+Four host-side degrees of freedom ride on top (docs/SCHEDULING.md,
+docs/PREEMPTION.md):
 
   * **admission order is policy-driven** — a ``SchedulingPolicy``
-    (FIFO / priority-with-aging / EDF over ``Request.deadline_us``)
-    picks which queued request takes a free slot.  Policies reorder the
-    Python queue only; masks, shapes, and programs are untouched, so
-    changing policy never recompiles.
+    (FIFO / priority-with-aging / EDF over ``Request.deadline_us`` /
+    per-tenant WFQ) picks which queued request takes a free slot.
+    Policies reorder the Python queue only; masks, shapes, and
+    programs are untouched, so changing policy never recompiles.
   * **bucketed prefill** — prompt lengths are quantized to power-of-two
     buckets (``BucketTable``): the prompt is right-padded to its bucket
     and the prefill step compiles once per *bucket*, not per *length*.
@@ -53,6 +54,21 @@ Two host-side degrees of freedom ride on top (docs/SCHEDULING.md):
     input position, masked or not — and so does MoE, whose expert
     capacity is a function of the token count (padding could retain a
     token the exact-length run's capacity would drop).
+  * **chunked prefill** (``prefill_chunk=``) — a long prompt advances
+    ONE fixed-size chunk per engine step (``SERVING_PREFILL_CHUNK``,
+    start offset a traced scalar → one compiled chunk program total)
+    instead of running its whole prefill inside the admission path, so
+    prefill no longer monopolizes the engine between decode steps.
+    Gated to dense/vlm by the same bit-safety argument as bucketing.
+  * **preemption** (``preempt=``) — when every slot is busy and the
+    queue holds a tighter request, a ``PreemptionPolicy`` picks a
+    running victim; its continuation state (KV rows + slot
+    bookkeeping, or its half-filled chunked-prefill cache) is
+    checkpointed HOST-SIDE into a ``SlotCheckpoint``, the request is
+    re-queued, and the urgent one takes the slot.  Restoring later is
+    bit-identical (decode is a pure function of the restored state)
+    and, like every scheduling decision, touches no traced value — so
+    preempt/resume cycles never recompile.
 """
 
 from __future__ import annotations
@@ -75,7 +91,8 @@ from repro.models.common import ModelConfig
 from repro.models.registry import ModelBundle
 
 from . import ops as serving_ops  # registers tag="reference" serving ops
-from .scheduling import SchedulingPolicy, get_policy
+from .scheduling import (PreemptionPolicy, SchedulingPolicy,
+                         get_policy, get_preemption)
 
 DEFAULT_TAGS = ("pallas", "reference")
 
@@ -109,11 +126,14 @@ class Request:
     priority: int = 0                   # lower = more urgent
     deadline_us: Optional[int] = None   # absolute host time, EDF key
     arrival_us: Optional[int] = None    # stamped at submit()
+    tenant: str = ""                    # WFQ quota label
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """Accumulated outcome of a Request: emitted tokens and timings."""
+    """Accumulated outcome of a Request: emitted tokens and timings.
+    ``preemptions`` counts how many times the request was evicted from
+    a slot and later resumed (0 = ran uninterrupted)."""
 
     uid: int
     prompt_len: int
@@ -121,6 +141,40 @@ class RequestResult:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     done: bool = False
+    preemptions: int = 0
+
+
+@dataclasses.dataclass
+class SlotCheckpoint:
+    """A preempted pod request's continuation state, host-side
+    (docs/PREEMPTION.md) — the engine analogue of the ragged pool's
+    ``LaneCheckpoint``.
+
+    ``phase`` records where the request was interrupted: ``"decode"``
+    checkpoints the slot's KV rows plus the (length, next token,
+    remaining budget) triple the jitted decode step is a pure function
+    of — restoring them replays the run bit-identically; ``"prefill"``
+    checkpoints a chunked prefill in flight (its batch=1 cache and how
+    many prompt tokens it has integrated).  Values are np copies: a
+    checkpoint pins host memory only, never a device buffer, and
+    nothing traced is captured — restore can never recompile."""
+
+    phase: str                          # "decode" | "prefill"
+    cache: Any                          # batch=1 cache pytree (np leaves)
+    length: int = 0                     # absolute position (decode)
+    cur_token: int = 0                  # next token to feed (decode)
+    budget: int = 0                     # remaining new tokens (decode)
+    done_tokens: int = 0                # prompt tokens integrated (prefill)
+
+
+@dataclasses.dataclass
+class _ChunkState:
+    """A slot mid-chunked-prefill: the request, its private batch=1
+    cache, and how many prompt tokens have been integrated so far."""
+
+    req: Request
+    cache1: Any
+    done: int
 
 
 def _cache_bytes(tree: Any) -> int:
@@ -136,13 +190,15 @@ class ServingEngine:
                  arena_bytes: Optional[int] = None, seed: int = 0,
                  tags: Sequence[str] = DEFAULT_TAGS,
                  policy: Any = None, clock=None,
-                 prefill_buckets: Any = None):
+                 prefill_buckets: Any = None,
+                 prefill_chunk: Any = None, preempt: Any = None):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
         self.max_slots = max_slots
         self.cache_len = cache_len
         self.policy: SchedulingPolicy = get_policy(policy)
+        self.preempt: Optional[PreemptionPolicy] = get_preemption(preempt)
         self.clock = clock if clock is not None else default_clock
         # prefill_buckets: None/True = auto (on for length-masked-
         # decode families, when the cache can hold at least the
@@ -163,6 +219,26 @@ class ServingEngine:
                     f"{BUCKETED_FAMILIES} families, not "
                     f"{self.cfg.family!r}")
             self.bucket_table = prefill_buckets
+        # prefill_chunk: None/False/0 = off, True = auto size (the
+        # bucket table's min bucket, 8 when bucketing is off), int =
+        # that many tokens per chunk.  Same family gate as bucketing:
+        # chunking relies on the length-masked decode to hide the
+        # padded tail of the last chunk.
+        self.chunk_tokens = 0
+        if prefill_chunk:
+            if self.cfg.family not in BUCKETED_FAMILIES:
+                raise ValueError(
+                    f"chunked prefill is only bit-safe for "
+                    f"{BUCKETED_FAMILIES} families, not "
+                    f"{self.cfg.family!r}")
+            if prefill_chunk is True:
+                self.chunk_tokens = (self.bucket_table.min_bucket
+                                     if self.bucket_table else 8)
+            else:
+                if int(prefill_chunk) < 1:
+                    raise ValueError(
+                        f"prefill_chunk must be >= 1, got {prefill_chunk}")
+                self.chunk_tokens = int(prefill_chunk)
         dtype = self.cfg.jnp_dtype()
 
         # --- arena accounting (C3/C4): KV is interpreter-lifetime ----
@@ -177,6 +253,7 @@ class ServingEngine:
 
         # --- slot bookkeeping (host side, fixed size) -----------------
         self.slot_req: List[Optional[RequestResult]] = [None] * max_slots
+        self.slot_meta: List[Optional[Request]] = [None] * max_slots
         self.slot_budget = np.zeros(max_slots, np.int64)
         self.lengths = jnp.zeros((max_slots,), jnp.int32)
         self.cur_tokens = jnp.zeros((max_slots, 1), jnp.int32)
@@ -184,6 +261,13 @@ class ServingEngine:
         self.rng = np.random.default_rng(seed)
         self.queue: List[Request] = []
         self.results: Dict[int, RequestResult] = {}
+        # preemption / chunked-prefill state (host side)
+        self._chunking: Dict[int, _ChunkState] = {}
+        self._ckpt: Dict[int, SlotCheckpoint] = {}
+        # what the last step() did — the benchmark's virtual-clock cost
+        # hook: prefill token counts, chunk dispatches, decode dispatch
+        self.last_step: Dict[str, Any] = {"prefill_tokens": [],
+                                          "chunks": 0, "decoded": False}
 
         # --- compiled steps (init-time, like interpreter prepare) -----
         # Resolve prefill/decode through the op registry tag chain: the
@@ -191,8 +275,10 @@ class ServingEngine:
         # prepare() runs once here (it may bake family decisions into
         # op_data); eval is jitted with context and op bound, so the
         # traced step is a pure function of (params, cache, tokens, ...).
-        self.resolver = MicroMutableOpResolver(tags).add_many(
-            [OpCode.SERVING_PREFILL, OpCode.SERVING_DECODE])
+        opcodes = [OpCode.SERVING_PREFILL, OpCode.SERVING_DECODE]
+        if self.chunk_tokens:
+            opcodes.append(OpCode.SERVING_PREFILL_CHUNK)
+        self.resolver = MicroMutableOpResolver(tags).add_many(opcodes)
         window = self.cfg.sliding_window
         self._prefill_op = OpDef(OpCode.SERVING_PREFILL, (), (),
                                  params={"cache_len": cache_len,
@@ -214,6 +300,18 @@ class ServingEngine:
         # BUCKETED_FAMILIES comment for why moe/ssm/hybrid are out
         self._prefill = jax.jit(functools.partial(
             prefill_reg.eval, prefill_ctx, self._prefill_op))
+        # the chunk step: fixed (1, chunk_tokens) token shape, start
+        # offset a TRACED scalar — one compiled program serves every
+        # chunk of every prompt (prepare() re-checks the family gate)
+        self._prefill_chunk = None
+        if self.chunk_tokens:
+            chunk_op = OpDef(OpCode.SERVING_PREFILL_CHUNK, (), (),
+                             params={"window": window})
+            chunk_reg = self.resolver.resolve(OpCode.SERVING_PREFILL_CHUNK)
+            chunk_ctx = serving_ops.ServingContext(
+                bundle, chunk_reg.prepare(pctx, chunk_op).op_data)
+            self._prefill_chunk = jax.jit(functools.partial(
+                chunk_reg.eval, chunk_ctx, chunk_op))
 
     def prefill_compiles(self) -> int:
         """How many distinct prefill programs were traced — the
@@ -221,6 +319,14 @@ class ServingEngine:
         buckets HIT, independent of how many prompt lengths arrived."""
         from repro.core.executor import jit_cache_size
         return jit_cache_size(self._prefill)
+
+    def chunk_compiles(self) -> int:
+        """How many distinct chunk-prefill programs were traced — must
+        stay 1 however many prompts/chunks ran (the start offset is a
+        traced argument, never a shape)."""
+        from repro.core.executor import jit_cache_size
+        return (jit_cache_size(self._prefill_chunk)
+                if self._prefill_chunk is not None else 0)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -266,6 +372,34 @@ class ServingEngine:
         return np.concatenate(
             [tokens, np.zeros(padded - s, tokens.dtype)])
 
+    def _vis(self) -> int:
+        """Cache positions the vision prefix occupies (vlm only)."""
+        return (self.cfg.n_vision_tokens
+                if self.cfg.family == "vlm" else 0)
+
+    def _activate_slot(self, req: Request, slot: int,
+                       cache1: Any = None, *,
+                       length: Optional[int] = None,
+                       cur_token: Optional[int] = None,
+                       budget: Optional[int] = None) -> None:
+        """Hand a prefilled (or restored) request to the decode loop:
+        write its cache rows and the slot bookkeeping the jitted decode
+        step keys on.  The keyword overrides are the restore path — a
+        resumed request continues from its checkpointed (length, next
+        token, remaining budget) instead of a fresh prompt."""
+        if cache1 is not None:
+            self._insert_cache(slot, cache1)
+        self.slot_req[slot] = self.results[req.uid]
+        self.slot_meta[slot] = req
+        self.slot_budget[slot] = (req.max_new_tokens if budget is None
+                                  else budget)
+        self.active[slot] = True
+        last_pos = (len(req.tokens) - 1 + self._vis()
+                    if length is None else length)
+        self.lengths = self.lengths.at[slot].set(last_pos)
+        self.cur_tokens = self.cur_tokens.at[slot, 0].set(
+            int(req.tokens[-1]) if cur_token is None else cur_token)
+
     def _prefill_one(self, req: Request, slot: int) -> None:
         """Prefill tokens[:-1], then hand the LAST prompt token to the
         decode loop: the first decode step integrates it (KV write /
@@ -282,20 +416,158 @@ class ServingEngine:
                 for k, v in req.extras.items():
                     batch[k] = jnp.asarray(v[None])
             _, cache1 = self._prefill((self.params, batch))
+            self.last_step["prefill_tokens"].append(len(prompt))
+            self.policy.charge(req.tenant, 1.0)
         else:   # single-token prompt: slot starts from a fresh cache
             cache1 = self.bundle.empty_cache(1, self.cache_len,
                                              self.cfg.jnp_dtype())
-        self._insert_cache(slot, cache1)
-        res = self.results[req.uid]
-        res.prefill_s = time.perf_counter() - t0
-        last_pos = n - 1 + (self.cfg.n_vision_tokens
-                            if self.cfg.family == "vlm" else 0)
-        self.slot_req[slot] = res
-        self.slot_budget[slot] = req.max_new_tokens
-        self.active[slot] = True
-        self.lengths = self.lengths.at[slot].set(last_pos)
-        self.cur_tokens = self.cur_tokens.at[slot, 0].set(
-            int(req.tokens[-1]))
+        self.results[req.uid].prefill_s += time.perf_counter() - t0
+        self._activate_slot(req, slot, cache1)
+
+    # -- chunked prefill (one chunk per engine step) --------------------
+
+    def _chunk_eligible(self, req: Request) -> bool:
+        """Chunk when chunking is on, the prompt spans more than one
+        chunk, and the padded last chunk still fits the cache without
+        ring wrap (past that, fall back to one-shot exact prefill —
+        the same over-cap fallback as ``_padded_prompt``)."""
+        if not self.chunk_tokens:
+            return False
+        m = len(req.tokens) - 1
+        if m <= self.chunk_tokens:
+            return False
+        n_chunks = -(-m // self.chunk_tokens)
+        return self._vis() + n_chunks * self.chunk_tokens <= self.cache_len
+
+    def _start_chunked(self, req: Request, slot: int) -> None:
+        """Admit a long prompt into a slot in PREFILLING state: run the
+        FIRST chunk through the ordinary prefill step (fixed
+        (1, chunk_tokens) shape — for vlm this is also what integrates
+        the vision prefix), park the batch=1 cache in a ``_ChunkState``,
+        and let subsequent ``step()`` calls advance one chunk each."""
+        t0 = time.perf_counter()
+        first = np.asarray(req.tokens[:self.chunk_tokens])
+        batch = {"tokens": jnp.asarray(first[None])}
+        if req.extras:
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v[None])
+        _, cache1 = self._prefill((self.params, batch))
+        self.last_step["prefill_tokens"].append(len(first))
+        self.policy.charge(req.tenant, 1.0)
+        self._chunking[slot] = _ChunkState(req, cache1, len(first))
+        self.results[req.uid].prefill_s += time.perf_counter() - t0
+
+    def _advance_chunk(self, slot: int) -> None:
+        """Advance a PREFILLING slot by ONE chunk — one jitted chunk
+        dispatch with a traced start offset; the final partial chunk is
+        right-padded (its garbage rows sit beyond the prompt length, so
+        the length-masked decode can never attend to them and the first
+        decode steps overwrite them slot by slot).  When the last
+        prompt token's predecessor lands, the slot flips to decoding."""
+        cs = self._chunking[slot]
+        res = self.results[cs.req.uid]
+        t0 = time.perf_counter()
+        prompt = np.asarray(cs.req.tokens[:-1])
+        tok = prompt[cs.done:cs.done + self.chunk_tokens]
+        real = len(tok)
+        if real < self.chunk_tokens:
+            tok = np.concatenate(
+                [tok, np.zeros(self.chunk_tokens - real, tok.dtype)])
+        start = cs.done + self._vis()
+        cs.cache1 = self._prefill_chunk(
+            (self.params, cs.cache1, jnp.asarray(tok[None]),
+             jnp.int32(start)))
+        cs.done += real
+        self.last_step["chunks"] += 1
+        self.policy.charge(cs.req.tenant, 1.0)
+        res.prefill_s += time.perf_counter() - t0
+        if cs.done >= len(prompt):
+            del self._chunking[slot]
+            self._activate_slot(cs.req, slot, cs.cache1)
+
+    # -- preemption: slot checkpoint / evict / restore ------------------
+
+    def _extract_cache(self, slot: int) -> Any:
+        """Slot ``slot``'s cache rows as a batch=1 pytree of np copies
+        — the inverse of ``_insert_cache``, host-side."""
+        def ext(full):
+            axes = [ax for ax in range(full.ndim)
+                    if full.shape[ax] == self.max_slots]
+            if not axes:
+                raise ValueError((full.shape, self.max_slots))
+            ax = 1 if 1 in axes else axes[0]   # batch is axis 1 for
+            idx = [slice(None)] * full.ndim    # every current family
+            idx[ax] = slice(slot, slot + 1)
+            return np.asarray(full[tuple(idx)])
+        return jax.tree.map(ext, self.cache)
+
+    def snapshot_slot(self, slot: int) -> SlotCheckpoint:
+        """Capture a running slot's continuation state host-side: the
+        chunked-prefill cache + progress for a PREFILLING slot, the KV
+        rows + (length, next token, budget) triple for a DECODING one.
+        The slot itself is untouched — pair with ``_evict``."""
+        if slot in self._chunking:
+            cs = self._chunking[slot]
+            return SlotCheckpoint(
+                phase="prefill",
+                cache=jax.tree.map(np.asarray, cs.cache1),
+                done_tokens=cs.done)
+        if not self.active[slot]:
+            raise RuntimeError(f"slot {slot} is not running")
+        return SlotCheckpoint(
+            phase="decode", cache=self._extract_cache(slot),
+            length=int(self.lengths[slot]),
+            cur_token=int(self.cur_tokens[slot, 0]),
+            budget=int(self.slot_budget[slot]))
+
+    def _evict(self, slot: int) -> Request:
+        """Preempt the request running in ``slot``: checkpoint it,
+        free the slot, and put the request back on the queue (its
+        checkpoint is picked up at re-admission)."""
+        if slot in self._chunking:
+            req = self._chunking[slot].req
+            ckpt = self.snapshot_slot(slot)
+            del self._chunking[slot]
+        else:
+            req = self.slot_meta[slot]
+            assert req is not None, f"slot {slot} has no request"
+            ckpt = self.snapshot_slot(slot)
+            self.active[slot] = False
+            self.slot_req[slot] = None
+            self.slot_meta[slot] = None
+        self._ckpt[req.uid] = ckpt
+        self.results[req.uid].preemptions += 1
+        self.queue.append(req)
+        return req
+
+    def _restore_slot(self, req: Request, slot: int,
+                      ckpt: SlotCheckpoint) -> None:
+        """Re-admit a checkpointed request: a PREFILLING checkpoint
+        resumes its chunk loop, a DECODING one re-enters the decode
+        loop at exactly the captured state — the jitted decode step is
+        a pure function of (cache, token, length), so the continuation
+        is bit-identical to the uninterrupted run."""
+        if ckpt.phase == "prefill":
+            cache1 = jax.tree.map(jnp.asarray, ckpt.cache)
+            self._chunking[slot] = _ChunkState(req, cache1,
+                                               ckpt.done_tokens)
+        else:
+            self._insert_cache(slot, jax.tree.map(jnp.asarray,
+                                                  ckpt.cache))
+            self._activate_slot(req, slot, None, length=ckpt.length,
+                                cur_token=ckpt.cur_token,
+                                budget=ckpt.budget)
+
+    def _admit(self, req: Request, slot: int) -> None:
+        """Route an admission: restore a checkpointed request, start a
+        chunked prefill for a long prompt, or prefill one-shot."""
+        ckpt = self._ckpt.pop(req.uid, None)
+        if ckpt is not None:
+            self._restore_slot(req, slot, ckpt)
+        elif self._chunk_eligible(req):
+            self._start_chunked(req, slot)
+        else:
+            self._prefill_one(req, slot)
 
     def _sample(self, logits, temperature: float) -> np.ndarray:
         logits = np.asarray(logits[:, :self.cfg.vocab], np.float32)
@@ -309,22 +581,57 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """Admit + one decode step.  Returns True if work remains.
-        Admission order is the engine's scheduling policy — the queue
-        is re-keyed at every free slot, so a deadline that became
-        urgent while other requests decoded is picked up here."""
-        if self.queue and not self.active.all():
+        """One engine tick: advance chunked prefills by ONE chunk each,
+        admit (policy order, displacing a running victim when the
+        preemption policy says so), then one fused decode step over the
+        active slots.  Returns True if work remains.
+
+        The queue is re-keyed at every free slot, so a deadline that
+        became urgent while other requests decoded is picked up here;
+        with chunking on, a long prompt's prefill is interleaved
+        through these ticks instead of monopolizing the engine."""
+        self.last_step = {"prefill_tokens": [], "chunks": 0,
+                          "decoded": False}
+        for slot in list(self._chunking):
+            self._advance_chunk(slot)
+        if self.queue:
             now = self.clock()
             for slot in range(self.max_slots):
-                if not self.active[slot] and self.queue:
-                    self._prefill_one(self.policy.pop(self.queue, now),
-                                      slot)
+                if self.queue and not self.active[slot] \
+                        and slot not in self._chunking:
+                    self._admit(self.policy.pop(self.queue, now), slot)
+            # displacement: every slot busy, queue still holding work —
+            # let the preemption policy evict a running victim for the
+            # queue's policy-first candidate (strict-improvement
+            # contract bounds this loop by the slot count)
+            if self.preempt is not None:
+                for _ in range(self.max_slots):
+                    if not self.queue:
+                        break
+                    running = ([(s, self._chunking[s].req)
+                                for s in sorted(self._chunking)]
+                               + [(s, self.slot_meta[s])
+                                  for s in range(self.max_slots)
+                                  if self.active[s]])
+                    if not running:
+                        break
+                    ci = self.policy.select(self.queue, now)
+                    cand = self.queue[ci]
+                    vi = self.preempt.victim([r for _, r in running],
+                                             cand, now)
+                    if vi is None:
+                        break
+                    self.queue.pop(ci)
+                    slot = running[vi][0]
+                    self._evict(slot)
+                    self._admit(cand, slot)
         if not self.active.any():
-            return bool(self.queue)
+            return bool(self.queue or self._chunking)
         t0 = time.perf_counter()
         logits, self.cache = self._decode(
             (self.params, self.cache, self.cur_tokens, self.lengths))
         dt = time.perf_counter() - t0
+        self.last_step["decoded"] = True
         toks = self._sample(logits, 0.0)
         self.lengths = self.lengths + 1
         new_cur = np.array(self.cur_tokens)    # writable host copy
@@ -334,6 +641,7 @@ class ServingEngine:
                 continue
             res = self.slot_req[slot]
             res.decode_s += dt
+            self.policy.charge(self.slot_meta[slot].tenant, 1.0)
             tok = int(toks[slot])
             res.output.append(tok)
             self.slot_budget[slot] -= 1
@@ -342,8 +650,9 @@ class ServingEngine:
                 res.done = True
                 self.active[slot] = False
                 self.slot_req[slot] = None
+                self.slot_meta[slot] = None
         self.cur_tokens = jnp.asarray(new_cur)
-        return bool(self.active.any() or self.queue)
+        return bool(self.active.any() or self.queue or self._chunking)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, RequestResult]:
         steps = 0

@@ -25,14 +25,25 @@ Micro-models are first-class tenants too, in two flavours:
     ``run_all``.
 
 Scheduling (docs/SCHEDULING.md): the host owns ONE ``SchedulingPolicy``
-(FIFO / priority-with-aging / EDF) and ONE ``clock``; every engine it
-creates and every ragged micro queue admits through them, so a deadline
-set on a pod ``Request`` and one set on a ``MicroRequest`` compete
-under the same rules.  It also owns the shared ``BucketTable`` pair:
-prompt-length buckets (engines compile prefill once per bucket, and
-the bucket boundaries agree across tenants) and lane-count buckets
-(ragged micro buckets round their lane counts so nearby tenants share
-``ArenaPool`` free lists).
+(FIFO / priority-with-aging / EDF / per-tenant WFQ) and ONE ``clock``;
+every engine it creates and every ragged micro queue admits through
+them, so a deadline set on a pod ``Request`` and one set on a
+``MicroRequest`` compete under the same rules.  It also owns the shared
+``BucketTable`` pair: prompt-length buckets (engines compile prefill
+once per bucket, and the bucket boundaries agree across tenants) and
+lane-count buckets (ragged micro buckets round their lane counts so
+nearby tenants share ``ArenaPool`` free lists).
+
+Preemption (docs/PREEMPTION.md): give the host a ``PreemptionPolicy``
+(``preempt="edf-displace"`` or a ``WFQDisplacePolicy``) and
+``micro_step`` may EVICT a running lane when admission alone cannot
+serve an urgent queued request: the victim's continuation state is
+snapshotted host-side (``RaggedInterpreterPool.snapshot_lane``), the
+lane retired, the victim re-queued; when the policy re-keys it to the
+front of a free lane again, ``restore_lane`` resumes it bit-identically
+from its checkpoint.  Preemption is lane-table surgery between
+dispatches — the masked programs and their traced masks are untouched,
+so preempt/resume cycles never recompile.
 
 Compile-once invariants this module maintains:
 
@@ -60,14 +71,15 @@ import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
 from repro.core.executor import (ArenaPool, BucketTable, InterpreterPool,
-                                 RaggedInterpreterPool)
+                                 LaneCheckpoint, RaggedInterpreterPool)
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import MicroModel
 from repro.models.registry import ModelBundle
 
 from .engine import (BUCKETED_FAMILIES, Request, RequestResult,
                      ServingEngine, default_clock)
-from .scheduling import SchedulingPolicy, get_policy
+from .scheduling import (PreemptionPolicy, SchedulingPolicy, get_policy,
+                         get_preemption)
 
 
 @dataclasses.dataclass
@@ -76,24 +88,28 @@ class MicroRequest:
     per-input-position arrays the model consumes on its t-th invocation
     (one entry → single-shot; several → a streaming continuation).
     Carries the same scheduling fields as the pod ``Request`` so one
-    policy orders both tenancies."""
+    policy orders both tenancies; ``tenant`` (defaulted to the micro
+    tenant's name at submit) is the WFQ quota label."""
 
     uid: int
     frames: List[List[np.ndarray]]
     priority: int = 0                   # lower = more urgent
     deadline_us: Optional[int] = None   # absolute host time, EDF key
     arrival_us: Optional[int] = None    # stamped at submit_micro()
+    tenant: str = ""                    # WFQ quota label
 
 
 @dataclasses.dataclass
 class MicroRequestResult:
     """Per-request outcome of the ragged micro path: output 0 after
-    every completed step, plus the step count at completion."""
+    every completed step, plus the step count at completion and how
+    many times the request was preempted (0 = ran uninterrupted)."""
 
     uid: int
     outputs: List[np.ndarray] = dataclasses.field(default_factory=list)
     steps: int = 0
     done: bool = False
+    preemptions: int = 0
 
 
 def _scratch_bytes(bundle: ModelBundle, max_prompt: int) -> int:
@@ -108,7 +124,7 @@ class MultiTenantHost:
     """One arena, many models — never running concurrently."""
 
     def __init__(self, arena_bytes: int, *, policy: Any = None,
-                 clock=None):
+                 clock=None, preempt: Any = None):
         self.arena = TwoStackArena(arena_bytes)
         self.engines: Dict[str, ServingEngine] = {}
         self.micro: Dict[str, InterpreterPool] = {}
@@ -117,8 +133,10 @@ class MultiTenantHost:
         self._micro_queue: Dict[str, List[MicroRequest]] = {}
         self._micro_inflight: Dict[str, Dict[int, MicroRequest]] = {}
         self.micro_results: Dict[str, Dict[int, MicroRequestResult]] = {}
+        self._micro_ckpt: Dict[str, Dict[int, LaneCheckpoint]] = {}
         self._scratch_high = 0
         self.policy: SchedulingPolicy = get_policy(policy)
+        self.preempt: Optional[PreemptionPolicy] = get_preemption(preempt)
         self.clock = clock if clock is not None else default_clock
         # the shared bucket tables: one for prompt lengths (engines
         # agree on prefill bucket boundaries), one for ragged lane
@@ -139,7 +157,8 @@ class MultiTenantHost:
         eng = ServingEngine(bundle, params, max_slots=max_slots,
                             cache_len=cache_len, arena=self.arena,
                             policy=self.policy, clock=self.clock,
-                            prefill_buckets=buckets)
+                            prefill_buckets=buckets,
+                            preempt=self.preempt)
         scratch = _scratch_bytes(bundle, max_prompt)
         if scratch > self._scratch_high:
             # grow the shared head-section reservation to the new max
@@ -183,17 +202,20 @@ class MultiTenantHost:
                                              if bucket_lanes else None))
         self._micro_queue[name] = []
         self._micro_inflight[name] = {}
+        self._micro_ckpt[name] = {}
         self.micro_results[name] = {}
 
     def submit_micro(self, name: str, uid: int,
                      frames: Sequence[Sequence[np.ndarray]], *,
                      priority: int = 0,
                      deadline_us: Optional[int] = None,
-                     arrival_us: Optional[int] = None) -> None:
+                     arrival_us: Optional[int] = None,
+                     tenant: Optional[str] = None) -> None:
         """Queue a micro request: ``frames[t]`` are the input arrays for
         the request's t-th invocation (len 1 = single shot, more = a
         streaming continuation across waves).  ``priority`` /
-        ``deadline_us`` feed the host's scheduling policy."""
+        ``deadline_us`` feed the host's scheduling policy; ``tenant``
+        (default: the micro tenant's name) is the WFQ quota label."""
         frames = [list(f) for f in frames]
         if not frames:
             raise ValueError("a micro request needs at least one frame")
@@ -201,26 +223,69 @@ class MultiTenantHost:
             arrival_us = self.clock()
         self._micro_queue[name].append(
             MicroRequest(uid, frames, priority=priority,
-                         deadline_us=deadline_us, arrival_us=arrival_us))
+                         deadline_us=deadline_us, arrival_us=arrival_us,
+                         tenant=tenant if tenant is not None else name))
         self.micro_results[name][uid] = MicroRequestResult(uid=uid)
 
     def _micro_pending(self) -> bool:
         return any(self._micro_queue.values()) \
             or any(self._micro_inflight.values())
 
+    def _admit_micro(self, name: str, req: MicroRequest) -> int:
+        """Claim a lane for ``req``: a fresh ``admit`` for a new
+        request, ``restore_lane`` for one that carries a preemption
+        checkpoint — the continuation resumes at its snapshotted step
+        with its snapshotted variable state, bit-identically."""
+        ckpt = self._micro_ckpt[name].pop(req.uid, None)
+        if ckpt is not None:
+            return self.ragged.restore_lane(ckpt)
+        return self.ragged.admit(name, uid=req.uid)
+
+    def _preempt_micro(self, name: str, now: int) -> bool:
+        """Try ONE displacement for tenant ``name``: ask the preemption
+        policy whether the queue's policy-first candidate may evict a
+        running lane; if so, snapshot + retire the victim, re-queue it,
+        and admit the candidate into the freed lane.  Returns True when
+        a displacement happened (the caller loops — each one strictly
+        improves the running set, so the loop is bounded)."""
+        queue = self._micro_queue[name]
+        inflight = self._micro_inflight[name]
+        if not queue or not inflight or self.preempt is None:
+            return False
+        slots = sorted(inflight)
+        ci = self.policy.select(queue, now)
+        cand = queue[ci]
+        vi = self.preempt.victim([inflight[s] for s in slots], cand, now)
+        if vi is None:
+            return False
+        queue.pop(ci)
+        slot = slots[vi]
+        victim = inflight.pop(slot)
+        self._micro_ckpt[name][victim.uid] = \
+            self.ragged.snapshot_lane(name, slot)
+        self.ragged.retire(name, slot)
+        self.micro_results[name][victim.uid].preemptions += 1
+        queue.append(victim)
+        inflight[self._admit_micro(name, cand)] = cand
+        return True
+
     def micro_step(self) -> bool:
         """One scheduler tick of the ragged micro path: admit queued
-        requests into free lanes IN POLICY ORDER, stage every active
-        lane's next frame, advance all buckets with ONE masked dispatch
-        each, then retire lanes whose requests finished.  Returns True
-        if work remains."""
+        requests into free lanes IN POLICY ORDER (restoring preempted
+        continuations from their checkpoints), let the preemption
+        policy displace running best-effort lanes for urgent queued
+        work, stage every active lane's next frame, advance all buckets
+        with ONE masked dispatch each, then retire lanes whose requests
+        finished.  Returns True if work remains."""
         now = self.clock() if any(self._micro_queue.values()) else 0
         for name, queue in self._micro_queue.items():
             inflight = self._micro_inflight[name]
             while queue and self.ragged.free_lanes(name):
                 req = self.policy.pop(queue, now)
-                slot = self.ragged.admit(name, uid=req.uid)
-                inflight[slot] = req
+                inflight[self._admit_micro(name, req)] = req
+            for _ in range(len(inflight)):
+                if not self._preempt_micro(name, now):
+                    break
             for slot, req in inflight.items():
                 step = self.ragged.lanes(name)[slot].step
                 for pos, arr in enumerate(req.frames[step]):
@@ -232,6 +297,7 @@ class MultiTenantHost:
                 req = inflight[slot]
                 lane = self.ragged.lanes(name)[slot]
                 res = self.micro_results[name][req.uid]
+                self.policy.charge(req.tenant, 1.0)
                 # copy: output() returns a view into the whole wave's
                 # stacked host array — holding it would pin lanes x the
                 # needed memory for the life of the result

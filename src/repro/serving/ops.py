@@ -75,3 +75,43 @@ class RefServingDecode:
         params, cache, tokens, lengths = inputs
         return ctx.bundle.decode(params, cache, tokens, lengths,
                                  window=op.params.get("window"))
+
+
+@register_op(OpCode.SERVING_PREFILL_CHUNK, tag="reference")
+class RefServingPrefillChunk:
+    """Reference chunked-prefill macro-kernel: one prompt CHUNK at a
+    traced start offset through ``lm_prefill_chunk``, updating the
+    request's cache in place (no logits — the engine hands the last
+    prompt token to decode).
+
+    prepare() bakes the family decision into ``op_data``: dense runs
+    the plain backbone, vlm adds Gemma's sqrt(d_model) embedding scale
+    (its vision prefix was integrated by the FIRST chunk, which goes
+    through the ordinary SERVING_PREFILL path).  Families whose state
+    integrates every position (ssm/hybrid) or whose routing depends on
+    the token count (moe) cannot chunk bit-safely, so prepare() raises
+    — the same guard bucketed prefill applies (docs/PREEMPTION.md §4)."""
+
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        import math
+
+        family = ctx.bundle.cfg.family
+        if family == "vlm":
+            scale: Optional[float] = math.sqrt(ctx.bundle.cfg.d_model)
+        elif family == "dense":
+            scale = None
+        else:
+            raise ValueError(
+                f"chunked prefill is only bit-safe for dense/vlm "
+                f"families, not {family!r}")
+        return PrepareResult(output_specs=[], op_data={"scale": scale})
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        from repro.models.lm import lm_prefill_chunk
+
+        params, cache, tokens, start = inputs
+        return lm_prefill_chunk(params, ctx.bundle.cfg, cache, tokens,
+                                start, window=op.params.get("window"),
+                                embed_scale=ctx.op_data["scale"])

@@ -1,0 +1,431 @@
+"""Preemptible lanes + chunked prefill (PR 4 acceptance).
+
+Covers: lane snapshot/restore bit-identity against an uninterrupted
+run (including restore into a DIFFERENT lane), the no-recompile
+assertion across preempt/resume cycles (jit_cache_size), EDF-displace
+semantics through the real host and engine schedulers, WFQ share
+convergence under saturation, chunked-prefill token bit-identity for
+dense and vlm with exactly ONE chunk compile, the ssm/hybrid guard,
+and the slot-placement invariance the preemption machinery relies on
+(the apply_rope head-axis fix)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.apps import build_fc_stack, build_hotword
+from repro.apps.models import representative_dataset
+from repro.core import (AllOpsResolver, LaneCheckpoint, MicroModel,
+                        RaggedInterpreterPool, export, jit_cache_size)
+from repro.serving import (EDFDisplacePolicy, MultiTenantHost,
+                           PreemptionPolicy, Request, ServingEngine,
+                           WFQDisplacePolicy, WFQPolicy, get_preemption)
+
+
+@pytest.fixture(scope="module")
+def resolver():
+    return AllOpsResolver()
+
+
+@pytest.fixture(scope="module")
+def hotword():
+    # stateful (SVDF) streaming model: continuation state is REAL, so a
+    # checkpoint that loses a bit cannot hide
+    return MicroModel(export(build_hotword(n_layers=1)))
+
+
+@pytest.fixture(scope="module")
+def fc_int8(resolver):
+    gb = build_fc_stack()
+    return MicroModel(export(
+        gb, representative_dataset=representative_dataset(gb),
+        quantize_int8=True))
+
+
+@pytest.fixture(scope="module")
+def pod_setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _frames(model, n, seed=0):
+    shape = tuple(model.tensor(model.inputs[0]).shape)
+    rng = np.random.default_rng(seed)
+    return [rng.normal(0, 1, shape).astype(np.float32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# lane checkpoint/restore: bit-identity + no recompile
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_bit_identical_and_no_recompile(hotword,
+                                                         resolver):
+    """Preempt a streaming lane mid-request, run unrelated work, then
+    restore — every post-resume output must be bit-identical to the
+    uninterrupted run, into a DIFFERENT lane, with the masked program
+    still traced exactly once."""
+    frames = _frames(hotword, 4, seed=1)
+
+    ref_pool = RaggedInterpreterPool()
+    ref_pool.add_bucket("hw", hotword, resolver, lanes=3, exact=True)
+    slot = ref_pool.admit("hw", uid=7)
+    ref = []
+    for f in frames:
+        ref_pool.set_input("hw", slot, 0, f)
+        ref_pool.dispatch()
+        ref.append(ref_pool.output("hw", slot, 0).copy())
+
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("hw", hotword, resolver, lanes=3, exact=True)
+    slot = pool.admit("hw", uid=7)
+    got = []
+    for f in frames[:2]:
+        pool.set_input("hw", slot, 0, f)
+        pool.dispatch()
+        got.append(pool.output("hw", slot, 0).copy())
+    ckpt = pool.snapshot_lane("hw", slot)
+    assert isinstance(ckpt, LaneCheckpoint)
+    assert ckpt.step == 2 and ckpt.uid == 7
+    assert all(isinstance(v, np.ndarray) for v in ckpt.variables)
+    pool.retire("hw", slot)
+    # unrelated interleaved work occupies the freed lane meanwhile
+    other = _frames(hotword, 3, seed=2)
+    tmp = pool.admit("hw", uid=99)
+    assert tmp == slot
+    for f in other:
+        pool.set_input("hw", tmp, 0, f)
+        pool.dispatch()
+    pool.retire("hw", tmp)
+    # restore into a different lane than the one snapshotted
+    restored = pool.restore_lane(ckpt, slot=2)
+    assert restored == 2 and restored != slot
+    assert pool.lanes("hw")[2].step == 2
+    for f in frames[2:]:
+        pool.set_input("hw", restored, 0, f)
+        pool.dispatch()
+        got.append(pool.output("hw", restored, 0).copy())
+    for a, b in zip(ref, got):
+        assert np.array_equal(a, b)
+    # THE no-recompile assertion across the whole preempt/resume cycle
+    fn = pool._buckets["hw"].compiled.masked_batched(3, True)
+    assert jit_cache_size(fn) == 1
+
+
+def test_snapshot_restore_guards(hotword, resolver):
+    pool = RaggedInterpreterPool()
+    pool.add_bucket("hw", hotword, resolver, lanes=2)
+    with pytest.raises(RuntimeError):
+        pool.snapshot_lane("hw", 0)         # lane not active
+    slot = pool.admit("hw", uid=1)
+    ckpt = pool.snapshot_lane("hw", slot)
+    with pytest.raises(RuntimeError):
+        pool.restore_lane(ckpt, slot=slot)  # lane occupied
+    pool.admit("hw", uid=2)
+    with pytest.raises(RuntimeError):
+        pool.restore_lane(ckpt)             # no free lane
+
+
+# ---------------------------------------------------------------------------
+# preemption policy semantics (unit)
+# ---------------------------------------------------------------------------
+
+class _R:
+    """Bare request stub carrying only the scheduling fields."""
+
+    def __init__(self, uid, deadline_us=None, arrival_us=0, tenant=""):
+        self.uid = uid
+        self.deadline_us = deadline_us
+        self.arrival_us = arrival_us
+        self.tenant = tenant
+
+
+def test_edf_displace_picks_loosest_victim():
+    pol = EDFDisplacePolicy()
+    running = [_R(0, deadline_us=100), _R(1), _R(2, deadline_us=900)]
+    # deadline-less best-effort is displaced first
+    assert pol.victim(running, _R(9, deadline_us=50)) == 1
+    # without best-effort, the latest deadline goes
+    assert pol.victim(running[::2], _R(9, deadline_us=50)) == 1
+    # a deadline-less candidate never displaces
+    assert pol.victim(running, _R(9)) is None
+    # no strict improvement -> no eviction
+    assert pol.victim([_R(0, deadline_us=100)],
+                      _R(9, deadline_us=100)) is None
+    # margin widens the required improvement
+    assert EDFDisplacePolicy(margin_us=500).victim(
+        [_R(0, deadline_us=900)], _R(9, deadline_us=600)) is None
+
+
+def test_wfq_displace_reads_shared_service():
+    wfq = WFQPolicy(weights={"a": 1.0, "b": 1.0})
+    pol = WFQDisplacePolicy(wfq, slack=1.0)
+    wfq.charge("a", 5.0)
+    running = [_R(0, tenant="a"), _R(1, tenant="b")]
+    assert pol.victim(running, _R(9, tenant="b")) == 0
+    # within slack -> no eviction
+    wfq.charge("b", 4.5)
+    assert pol.victim(running, _R(9, tenant="b")) is None
+    with pytest.raises(TypeError):
+        WFQDisplacePolicy("not-a-policy")
+
+
+def test_get_preemption_resolution():
+    assert get_preemption(None) is None
+    assert isinstance(get_preemption("edf-displace"), EDFDisplacePolicy)
+    pol = EDFDisplacePolicy(margin_us=3)
+    assert get_preemption(pol) is pol
+    assert isinstance(get_preemption("never"), PreemptionPolicy)
+    with pytest.raises(ValueError):
+        get_preemption("round-robin")
+
+
+# ---------------------------------------------------------------------------
+# preemption through the REAL schedulers
+# ---------------------------------------------------------------------------
+
+def test_host_preempts_monopolizer_for_tight_deadline(fc_int8, resolver):
+    """Both lanes held by 6-frame best-effort monopolizers; a 1-frame
+    deadline request must displace one, finish next tick, and the
+    victim must still complete all its steps."""
+    rng = np.random.default_rng(3)
+    frame = lambda: [rng.normal(0, 1, (1, 64)).astype(np.float32)]
+    host = MultiTenantHost(arena_bytes=64 << 20, policy="edf",
+                           preempt="edf-displace", clock=lambda: 0)
+    host.add_ragged_micro("fc", fc_int8, resolver, lanes=2,
+                          bucket_lanes=False)
+    for uid in (0, 1):
+        host.submit_micro("fc", uid, [frame() for _ in range(6)],
+                          arrival_us=0)
+    host.micro_step()                       # monopolizers take the lanes
+    host.submit_micro("fc", 2, [frame()], deadline_us=50, arrival_us=0)
+    host.micro_step()                       # displacement + service
+    res = host.micro_results["fc"]
+    assert res[2].done and res[2].steps == 1
+    assert res[0].preemptions + res[1].preemptions == 1
+    while host.micro_step():
+        pass
+    assert all(r.done for r in res.values())
+    assert res[0].steps == 6 and res[1].steps == 6
+    # one masked program for the whole preempt/resume history
+    b = host.ragged._buckets["fc"]
+    assert jit_cache_size(b.compiled.masked_batched(b.lanes, b.exact)) == 1
+
+
+def test_engine_preempt_resume_bit_identical_tokens(pod_setup):
+    """A best-effort long request is displaced mid-decode by a tight
+    deadline; both must emit exactly the tokens of their solo runs, and
+    the decode step must stay traced once across the preempt/resume
+    cycle."""
+    cfg, m, params = pod_setup
+    rng = np.random.default_rng(5)
+    long_toks = rng.integers(0, cfg.vocab - 2, 40).astype(np.int32)
+    tight_toks = rng.integers(0, cfg.vocab - 2, 5).astype(np.int32)
+
+    solo = {}
+    for uid, toks, budget in ((0, long_toks, 12), (1, tight_toks, 3)):
+        eng = ServingEngine(m, params, max_slots=1, cache_len=64)
+        eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=budget))
+        solo[uid] = eng.run()[uid].output
+
+    eng = ServingEngine(m, params, max_slots=1, cache_len=64,
+                        policy="edf", preempt="edf-displace",
+                        prefill_chunk=8, clock=lambda: 0)
+    eng.submit(Request(uid=0, tokens=long_toks, max_new_tokens=12))
+    for _ in range(8):                      # chunk-prefill, then decode
+        eng.step()
+    assert eng.results[0].output, "long request should be decoding"
+    eng.submit(Request(uid=1, tokens=tight_toks, max_new_tokens=3,
+                       deadline_us=100))
+    res = eng.run()
+    assert res[0].preemptions == 1 and res[1].preemptions == 0
+    assert res[0].output == solo[0]
+    assert res[1].output == solo[1]
+    assert jit_cache_size(eng._decode) == 1
+    assert eng.chunk_compiles() == 1
+
+
+def test_decode_is_slot_placement_invariant(pod_setup):
+    """The same request must emit identical tokens from ANY slot of a
+    multi-slot engine — the invariance preempt-to-a-different-slot
+    restores rely on (regression test for the apply_rope head-axis
+    broadcast bug that rotated every slot by slot 0's position)."""
+    cfg, m, params = pod_setup
+    rng = np.random.default_rng(6)
+    toks = rng.integers(0, cfg.vocab - 2, 9).astype(np.int32)
+    filler = rng.integers(0, cfg.vocab - 2, 17).astype(np.int32)
+
+    eng = ServingEngine(m, params, max_slots=2, cache_len=64)
+    eng.submit(Request(uid=0, tokens=toks, max_new_tokens=4))
+    want = eng.run()[0].output              # slot 0, nothing else live
+
+    eng = ServingEngine(m, params, max_slots=2, cache_len=64)
+    eng.submit(Request(uid=9, tokens=filler, max_new_tokens=8))
+    eng.submit(Request(uid=0, tokens=toks, max_new_tokens=4))
+    res = eng.run()                         # slot 1, busy neighbour
+    assert res[0].output == want
+
+
+# ---------------------------------------------------------------------------
+# WFQ share convergence under saturation
+# ---------------------------------------------------------------------------
+
+def test_wfq_shares_converge_to_weights(fc_int8, resolver):
+    """Two tenants with weights 1:3 and saturated queues: the delivered
+    service ratio must converge to the weight ratio."""
+    rng = np.random.default_rng(4)
+    frame = lambda: [rng.normal(0, 1, (1, 64)).astype(np.float32)]
+    pol = WFQPolicy(weights={"a": 1.0, "b": 3.0})
+    host = MultiTenantHost(arena_bytes=64 << 20, policy=pol,
+                           clock=lambda: 0)
+    host.add_ragged_micro("fc", fc_int8, resolver, lanes=2,
+                          bucket_lanes=False)
+    uid = 0
+    for _ in range(200):                    # deep backlog: saturation
+        for t in ("a", "b"):
+            host.submit_micro("fc", uid, [frame()], tenant=t,
+                              arrival_us=0)
+            uid += 1
+    for _ in range(40):
+        host.micro_step()
+    a, b = pol.service["a"], pol.service["b"]
+    assert a + b == pytest.approx(80)       # 2 lanes x 40 ticks, all used
+    assert b / a == pytest.approx(3.0, rel=0.15)
+    # work conservation: an idle tenant's share spills over
+    host2 = MultiTenantHost(arena_bytes=64 << 20,
+                            policy=WFQPolicy(weights={"a": 1.0,
+                                                      "b": 3.0}),
+                            clock=lambda: 0)
+    host2.add_ragged_micro("fc", fc_int8, resolver, lanes=2,
+                           bucket_lanes=False)
+    for i in range(6):                      # only tenant a submits
+        host2.submit_micro("fc", i, [frame()], tenant="a", arrival_us=0)
+    ticks = 0
+    while host2.micro_step():
+        ticks += 1
+    assert ticks <= 4                       # b's unused share not wasted
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: token bit-identity, one compile, guards
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_token_bit_identity_dense(pod_setup):
+    """Mixed short/long dense prompts, chunked vs one-shot: identical
+    tokens, ONE chunk program traced no matter how many chunks ran."""
+    cfg, m, params = pod_setup
+    rng = np.random.default_rng(2)
+    prompts = {uid: rng.integers(0, cfg.vocab - 2, L).astype(np.int32)
+               for uid, L in enumerate((21, 9, 30))}
+    outs = {}
+    for mode, kw in (("oneshot", {}), ("chunked", {"prefill_chunk": 8})):
+        eng = ServingEngine(m, params, max_slots=2, cache_len=64, **kw)
+        for uid, toks in prompts.items():
+            eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=4))
+        outs[mode] = {u: r.output for u, r in eng.run().items()}
+        if mode == "chunked":
+            assert eng.chunk_compiles() == 1
+            assert jit_cache_size(eng._prefill_chunk) == 1
+    assert outs["oneshot"] == outs["chunked"]
+
+
+def test_chunked_prefill_token_bit_identity_vlm():
+    """Same contract for vlm: the FIRST chunk integrates the vision
+    prefix through the ordinary prefill step, later chunks attend to it
+    causally — tokens must match the one-shot run bit-for-bit."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("paligemma-3b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    cache_len = 64 + cfg.n_vision_tokens
+    reqs = []
+    for uid, L in enumerate((25, 18)):
+        toks = rng.integers(0, cfg.vocab - 2, L).astype(np.int32)
+        vis = rng.normal(0, 1, (cfg.n_vision_tokens,
+                                cfg.d_vision)).astype(np.float32)
+        reqs.append((uid, toks, vis))
+    outs = {}
+    for mode, kw in (("oneshot", {}), ("chunked", {"prefill_chunk": 8})):
+        eng = ServingEngine(m, params, max_slots=2,
+                            cache_len=cache_len, **kw)
+        for uid, toks, vis in reqs:
+            eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=4,
+                               extras={"vision": vis}))
+        outs[mode] = {u: r.output for u, r in eng.run().items()}
+        if mode == "chunked":
+            assert eng.chunk_compiles() == 1
+    assert outs["oneshot"] == outs["chunked"]
+
+
+def test_chunked_prefill_guarded_for_state_polluting_families():
+    """SSM and hybrid recurrent state integrates every input position,
+    so the engine must refuse chunked prefill for them — same guard
+    (and same reason) as bucketed prefill."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    for name in ("mamba2-780m", "zamba2-1.2b"):
+        cfg = get_config(name, reduced=True)
+        m = get_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError):
+            ServingEngine(m, params, max_slots=1, cache_len=32,
+                          prefill_chunk=8)
+
+
+def test_prefill_chunk_argument_validation(pod_setup):
+    cfg, m, params = pod_setup
+    eng = ServingEngine(m, params, max_slots=1, cache_len=64,
+                        prefill_chunk=True)
+    assert eng.chunk_tokens == 8            # auto size
+    assert ServingEngine(m, params, max_slots=1, cache_len=64
+                         ).chunk_tokens == 0   # default off
+    assert ServingEngine(m, params, max_slots=1, cache_len=64,
+                         prefill_chunk=0).chunk_tokens == 0  # 0 = off
+    with pytest.raises(ValueError):
+        ServingEngine(m, params, max_slots=1, cache_len=64,
+                      prefill_chunk=-4)
+
+    # over-cap prompts fall back to one-shot exact prefill
+    rng = np.random.default_rng(8)
+    toks = rng.integers(0, cfg.vocab - 2, 70).astype(np.int32)
+    eng = ServingEngine(m, params, max_slots=1, cache_len=64,
+                        prefill_chunk=8)
+    assert not eng._chunk_eligible(
+        Request(uid=0, tokens=toks, max_new_tokens=1))
+
+
+# ---------------------------------------------------------------------------
+# the benchmark cannot rot: end-to-end smoke (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_preemption_benchmark_tiny_smoke():
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.arrival_process",
+         "--preempt", "--tiny"],
+        cwd=repo_root, env=env, capture_output=True, text=True,
+        timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "Preemptible lanes" in proc.stdout
+    assert "engine_edf_preempt_chunk" in proc.stdout

@@ -15,13 +15,20 @@ Checks:
   1. **docstrings** — each module and each public module-level class in
      the linted packages carries a docstring.  A class is *public* when
      its name does not start with an underscore; classes nested inside
-     functions (test fixtures, closures) are exempt.
+     functions (test fixtures, closures) are exempt.  For the files in
+     ``METHOD_LINTED`` (the scheduling policy vocabulary) the contract
+     is stricter: every public METHOD of a public class must carry a
+     docstring too — a policy's ``key``/``victim`` semantics ARE its
+     documentation, so a silent method there is a rotted guide.
   2. **benchmark references** — every ``BENCH_<name>.json`` mentioned
      in the *living* documents — ``README.md``, ``ROADMAP.md``, and
      ``docs/*.md`` — exists under ``benchmarks/results/`` (so the
      numbers a guide cites are actually committed next to it).
      ``CHANGES.md`` is exempt: it is an append-only history whose old
      entries may legitimately name retired artifacts.
+  3. **no orphaned guides** — every document under ``docs/`` is
+     mentioned (by name) from ``README.md`` or ``docs/ARCHITECTURE.md``,
+     so a guide cannot silently fall out of the reading path.
 
 Usage::
 
@@ -39,8 +46,13 @@ from typing import Iterator, List, Tuple
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 LINTED_PACKAGES = ("src/repro/core", "src/repro/serving", "benchmarks")
+# files whose public-class METHODS must also carry docstrings (the
+# scheduling/preemption policy vocabulary — key()/victim() semantics)
+METHOD_LINTED = ("src/repro/serving/scheduling.py",)
 RESULTS_DIR = "benchmarks/results"
 BENCH_REF = re.compile(r"\bBENCH_[A-Za-z0-9_]+\.json\b")
+# documents every guide must be reachable from (by name mention)
+DOC_ROOTS = ("README.md", "docs/ARCHITECTURE.md")
 
 
 def linted_files(root: Path = REPO_ROOT) -> List[Path]:
@@ -76,12 +88,25 @@ def check_file(path: Path, root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]
     out: List[Tuple[str, int, str]] = []
     if ast.get_docstring(tree) is None:
         out.append((rel, 1, "module lacks a docstring"))
+    lint_methods = rel.replace("\\", "/") in METHOD_LINTED
     for node in _module_level_classes(tree):
         if node.name.startswith("_"):
             continue
         if ast.get_docstring(node) is None:
             out.append((rel, node.lineno,
                         f"public class {node.name} lacks a docstring"))
+        if not lint_methods:
+            continue
+        for sub in node.body:
+            if not isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                continue
+            if sub.name.startswith("_"):
+                continue
+            if ast.get_docstring(sub) is None:
+                out.append((rel, sub.lineno,
+                            f"public method {node.name}.{sub.name} "
+                            f"lacks a docstring"))
     return out
 
 
@@ -102,12 +127,34 @@ def check_bench_references(root: Path = REPO_ROOT
     return out
 
 
+def check_orphaned_docs(root: Path = REPO_ROOT
+                        ) -> List[Tuple[str, int, str]]:
+    """Violations for guides under ``docs/`` that no DOC_ROOT document
+    mentions — an unreachable guide is a rotting guide."""
+    reachable_text = ""
+    for name in DOC_ROOTS:
+        p = root / name
+        if p.is_file():
+            reachable_text += p.read_text()
+    out: List[Tuple[str, int, str]] = []
+    for doc in sorted((root / "docs").glob("*.md")):
+        rel = str(doc.relative_to(root))
+        if rel.replace("\\", "/") in DOC_ROOTS:
+            continue                        # a root is reachable by fiat
+        if doc.name not in reachable_text:
+            out.append((rel, 1,
+                        f"orphaned guide: {doc.name} is not linked "
+                        f"from any of {DOC_ROOTS}"))
+    return out
+
+
 def collect_violations(root: Path = REPO_ROOT) -> List[Tuple[str, int, str]]:
-    """All docstring + benchmark-reference violations."""
+    """All docstring + benchmark-reference + orphaned-guide violations."""
     out: List[Tuple[str, int, str]] = []
     for path in linted_files(root):
         out.extend(check_file(path, root))
     out.extend(check_bench_references(root))
+    out.extend(check_orphaned_docs(root))
     return out
 
 
