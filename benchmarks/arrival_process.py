@@ -517,7 +517,7 @@ def run_preempt(tiny: bool = False) -> List[Dict]:
 
     all_rows = rows + erows
     if not tiny:
-        save_result("BENCH_preemption", all_rows)
+        save_result("BENCH_preemption", all_rows, seed=SEED)
     return all_rows
 
 
@@ -554,7 +554,7 @@ def run(tiny: bool = False) -> List[Dict]:
                 prefill_rows)
     all_rows = rows + prefill_rows
     if not tiny:
-        save_result("BENCH_arrival_process", all_rows)
+        save_result("BENCH_arrival_process", all_rows, seed=SEED)
     return all_rows
 
 

@@ -1,14 +1,30 @@
 """Shared benchmark helpers: wall-time measurement with warmup, CSV
-emission, result persistence."""
+emission, result persistence.
+
+Result files are the repo's committed evidence, so ``save_result``
+stamps every one with a uniform metadata block (schema version, jax
+version, backend, seed, creation time) — two results are comparable
+exactly when their meta agrees on everything except ``created_utc``,
+which is informational only and excluded from comparisons.
+``tools/check_bench.py`` schema-validates every committed
+``BENCH_*.json`` against this layout so a broken writer can never land
+silently."""
 
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# bump when the result-file layout changes; tools/check_bench.py
+# refuses layouts it does not understand
+RESULT_SCHEMA = 1
+# meta keys that must agree for two results to be comparable;
+# created_utc is deliberately NOT here (wall clock is informational)
+COMPARABLE_META = ("schema", "jax", "backend", "seed")
 
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10,
@@ -31,18 +47,44 @@ def block(x):
     return x
 
 
-def save_result(name: str, rows: List[Dict]) -> str:
+def result_meta(seed: Optional[int] = None) -> Dict:
+    """The uniform metadata block every result file carries: schema
+    version, jax version, backend, the benchmark's seed, and the
+    (comparison-exempt) creation timestamp."""
+    import jax
+    return {
+        "schema": RESULT_SCHEMA,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "seed": seed,
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                     time.gmtime()),
+    }
+
+
+def save_result(name: str, rows: List[Dict],
+                seed: Optional[int] = None) -> str:
     """Persist benchmark rows under ``benchmarks/results/`` with the
     uniform ``BENCH_<name>.json`` naming — the prefix is added here so
     every benchmark lands consistently (and the docs lint, which
-    verifies each cited BENCH_*.json exists, covers them all)."""
+    verifies each cited BENCH_*.json exists, covers them all).  Rows
+    are wrapped with the ``result_meta`` block; ``tools/check_bench.py``
+    (run from the fast test tier and CI) validates the layout."""
     if not name.startswith("BENCH_"):
         name = "BENCH_" + name
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name + ".json")
     with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump({"meta": result_meta(seed), "rows": rows}, f,
+                  indent=1)
+        f.write("\n")
     return path
+
+
+def load_result(path: str) -> Dict:
+    """Read a result file written by ``save_result`` (meta + rows)."""
+    with open(path) as f:
+        return json.load(f)
 
 
 def print_table(title: str, rows: List[Dict]) -> None:

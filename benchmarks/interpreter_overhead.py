@@ -170,7 +170,7 @@ def run_batched() -> list:
             rows.extend(bench_batched(name, builder(), quantize))
     print_table("Batched invoke throughput (B-lane vmapped dispatch)",
                 rows)
-    save_result("BENCH_batched_invoke", rows)
+    save_result("BENCH_batched_invoke", rows, seed=0)
     return rows
 
 
@@ -183,7 +183,7 @@ def run() -> list:
         for quantize in quants:
             rows.append(bench_model(name, builder(), quantize))
     print_table("Interpreter overhead (Fig. 6 analogue)", rows)
-    save_result("interpreter_overhead", rows)
+    save_result("interpreter_overhead", rows, seed=0)
     return rows
 
 

@@ -44,7 +44,7 @@ def run() -> list:
             measure("hotword", build_hotword(), quantize=False),
             measure("vww", build_vww())]
     print_table("Arena memory split (Table 2 analogue, INT8)", rows)
-    save_result("memory_overhead", rows)
+    save_result("memory_overhead", rows, seed=None)
     return rows
 
 

@@ -64,7 +64,7 @@ def run() -> list:
             plan_sizes("vww", build_vww()),
             kv_arena_plan()]
     print_table("Memory-planner compaction (Fig. 4 analogue)", rows)
-    save_result("planner_bench", rows)
+    save_result("planner_bench", rows, seed=None)
     return rows
 
 

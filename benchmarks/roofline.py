@@ -64,7 +64,7 @@ def run() -> list:
     multi = load_rows(mesh="2x16x16")
     if multi:
         print_table("Roofline (multi-pod 2x16x16)", multi)
-    save_result("roofline", rows + multi)
+    save_result("roofline", rows + multi, seed=None)
     missing = 40 - len(rows)
     if missing > 0:
         print(f"\n[note] {missing} single-pod baselines not yet present "

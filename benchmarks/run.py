@@ -10,19 +10,26 @@
   preemption             heavy-tail mix: EDF alone vs EDF + preemptible
                          lanes, and the pod engine with preemption +
                          chunked prefill (docs/PREEMPTION.md)
+  autotune               calibration-driven bucket/chunk config vs the
+                         hand-picked defaults: compile counts + p95
+                         arrival-process latency (docs/SCHEDULING.md)
   memory_overhead        Tab. 2  persistent/nonpersistent arena split
   planner_bench          Fig. 4  naive vs FFD memory compaction
   kernel_speedup         Fig. 6  reference vs optimized kernels
   multitenancy_bench     Fig. 5  shared-arena savings
   roofline               §Roofline table from the dry-run artifacts
 
-``python -m benchmarks.run [names...]`` — default: all.  A benchmark
-that raises does NOT silently truncate the run: the remaining
-benchmarks still execute, every failure is reported with its
-traceback, and the process exits non-zero."""
+``python -m benchmarks.run [--tiny] [names...]`` — default: all.  A
+benchmark that raises does NOT silently truncate the run: the
+remaining benchmarks still execute, every failure is reported with its
+traceback, and the process exits non-zero.  ``--tiny`` runs each
+requested benchmark that supports it in its seconds-scale smoke mode
+(no JSON written) and skips the ones that do not — the CI pipeline's
+benchmark smoke job."""
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 import traceback
@@ -30,9 +37,11 @@ import traceback
 
 def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
-    from . import (arrival_process, interpreter_overhead, kernel_speedup,
-                   memory_overhead, multitenancy_bench, planner_bench,
-                   ragged_invoke, roofline)
+    tiny = "--tiny" in argv
+    argv = [a for a in argv if a != "--tiny"]
+    from . import (arrival_process, autotune, interpreter_overhead,
+                   kernel_speedup, memory_overhead, multitenancy_bench,
+                   planner_bench, ragged_invoke, roofline)
 
     benches = {
         "interpreter_overhead": interpreter_overhead.run,
@@ -40,6 +49,7 @@ def main(argv=None) -> None:
         "ragged_invoke": ragged_invoke.run,
         "arrival_process": arrival_process.run,
         "preemption": arrival_process.run_preempt,
+        "autotune": autotune.run,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,
         "kernel_speedup": kernel_speedup.run,
@@ -53,9 +63,18 @@ def main(argv=None) -> None:
                          f"have {list(benches)}")
     t0 = time.time()
     failures = []
+    ran = 0
     for name in names:
+        fn = benches[name]
+        kw = {}
+        if tiny:
+            if "tiny" not in inspect.signature(fn).parameters:
+                print(f"skipping {name} (no --tiny mode)")
+                continue
+            kw["tiny"] = True
+        ran += 1
         try:
-            benches[name]()
+            fn(**kw)
         except Exception:
             failures.append(name)
             print(f"\nFAILED {name}:\n{traceback.format_exc()}",
@@ -63,9 +82,15 @@ def main(argv=None) -> None:
     dt = time.time() - t0
     if failures:
         raise SystemExit(
-            f"{len(failures)}/{len(names)} benchmark(s) FAILED "
+            f"{len(failures)}/{ran} benchmark(s) FAILED "
             f"({', '.join(failures)}) in {dt:.1f}s")
-    print(f"\nall {len(names)} benchmarks done in {dt:.1f}s")
+    if ran == 0 and argv:
+        # an explicitly named selection that ran nothing is a broken
+        # gate, not a green one
+        raise SystemExit(
+            f"--tiny ran none of {argv}: no requested benchmark has "
+            f"a tiny mode")
+    print(f"\nall {ran} benchmark(s) done in {dt:.1f}s")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,9 @@ arena, memory planner, op resolver, quantization, and export toolchain."""
 from . import micro_ops  # registers the reference kernels on import
 from . import quantize  # keep the module visible as repro.core.quantize
 from .arena import ArenaOverflowError, TwoStackArena
+from .costmodel import (BucketCost, CalibrationProfile, ChunkCost,
+                        EngineMeasurer, SolveResult, calibrate,
+                        profile_model_key, solve)
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
 from .executor import (AllocationPlan, ArenaPool, BucketTable,
@@ -16,7 +19,8 @@ from .interpreter import MicroInterpreter
 from .memory_planner import (BufferRequest, GreedyMemoryPlanner,
                              LinearMemoryPlanner, MemoryPlan,
                              OfflineMemoryPlanner)
-from .profiler import MicroProfiler, ProfileReport
+from .profiler import (CompileStepTiming, MicroProfiler, ProfileReport,
+                       measure_compile_and_step)
 from .op_resolver import (AllOpsResolver, MicroMutableOpResolver,
                           OpResolutionError, register_op)
 from .schema import (MicroModel, OpCode, QuantParams, TensorDef,
@@ -34,4 +38,7 @@ __all__ = [
     "AllOpsResolver", "MicroMutableOpResolver", "OpResolutionError",
     "register_op", "MicroProfiler", "ProfileReport", "MicroModel", "OpCode", "QuantParams", "TensorDef",
     "TensorFlags", "model_to_source", "serialize_model",
+    "BucketCost", "CalibrationProfile", "ChunkCost", "EngineMeasurer",
+    "SolveResult", "calibrate", "profile_model_key", "solve",
+    "CompileStepTiming", "measure_compile_and_step",
 ]

@@ -1,0 +1,596 @@
+"""Calibration-driven cost model for bucket & chunk sizing.
+
+The paper's discipline is that resource-constrained inference replaces
+runtime-dynamic decisions with offline, MEASURED, static configuration:
+the memory planner lays the arena out before a single op runs.  This
+module applies the same discipline to the two serving knobs that were
+still hand-picked constants — the prefill ``BucketTable`` layout and
+the ``prefill_chunk`` size:
+
+  1. **calibrate** — a short deterministic calibration pass runs the
+     engine's real compiled steps through the profiler's compile/step
+     timer (``repro.core.profiler.measure_compile_and_step``),
+     measuring, per candidate bucket length, the one-time prefill
+     compile cost and the warm padded-step latency, and, per candidate
+     chunk size, the warm chunked-prefill step cost;
+  2. **solve** — a small dynamic program picks the bucket level set
+     (min/max/granularity generalized to explicit levels) and the
+     chunk size that minimize the workload's expected prefill latency:
+     each level costs its trace overhead once plus a warm padded step
+     per request it serves; padding waste pushes the solver toward
+     finer tables, compile cost pushes it toward coarser ones.  An
+     optional head-of-line bound (``max_dispatch_us``) models what
+     chunked prefill is FOR — bounding how long one dispatch may
+     monopolize the engine between decode steps — and makes the solver
+     trade serial prefill cost for bounded per-dispatch blocking;
+  3. **persist** — the result is a versioned ``CalibrationProfile``
+     JSON (measurements included, wall-clock excluded) so engines can
+     be constructed from a profile without re-measuring
+     (``ServingEngine.from_profile``; ``MultiTenantHost(profile=...)``
+     shares one profile's table across tenants).  When no profile
+     exists, every surface falls back to today's hand-picked defaults.
+
+Determinism contract: given the same seed and the same measurement
+function, ``calibrate`` produces an identical profile (asserted in
+tests/test_costmodel.py).  The default measurer reads wall clocks, so
+two real calibration runs agree in distribution, not bit-for-bit —
+inject ``measure=`` (any ``(kind, size) -> CompileStepTiming``
+callable) for exact reproducibility or for solver-only experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .executor import BucketTable
+from .profiler import CompileStepTiming, measure_compile_and_step
+
+PROFILE_VERSION = 1
+
+# default candidate chunk sizes offered to the solver (0 = chunking off)
+DEFAULT_CHUNK_CANDIDATES = (0, 8, 16)
+# floor for candidate bucket levels: below this, padding waste is noise
+MIN_LEVEL = 4
+# cap on measured candidate levels — calibration cost is one compile
+# per candidate, so the pass stays seconds-scale
+MAX_CANDIDATES = 12
+
+
+def profile_model_key(cfg: Any, cache_len: int) -> str:
+    """The identity a profile is calibrated FOR: model family + arch +
+    cache capacity.  ``ServingEngine.from_profile`` refuses a profile
+    whose key does not match (the measured costs would be someone
+    else's); ``MultiTenantHost`` may still deliberately share one
+    profile's bucket LAYOUT across tenants — see docs/SCHEDULING.md."""
+    return f"{cfg.family}/{getattr(cfg, 'arch_id', '?')}/L{int(cache_len)}"
+
+
+# ---------------------------------------------------------------------------
+# measurements
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketCost:
+    """Measured cost of one candidate bucket level: ``compile_us`` the
+    cold first prefill at padded length ``length``, ``step_us`` the
+    warm padded-step latency (the per-request price every prompt that
+    lands in this bucket pays)."""
+
+    length: int
+    compile_us: float
+    step_us: float
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """One-time cost the table pays when this level is first hit."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkCost:
+    """Measured cost of one candidate chunk size: ``step_us`` is one
+    warm chunked-prefill dispatch (a prompt of m tokens pays
+    ceil(m/chunk) of these), ``compile_us`` the cold first chunk —
+    paid ONCE total because the start offset is a traced scalar."""
+
+    chunk: int
+    compile_us: float
+    step_us: float
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """The chunk program's one-time trace cost."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
+class EngineMeasurer:
+    """The default ``measure`` hook: times the REAL compiled serving
+    steps of a fresh engine — ``("prefill", L)`` runs the one-shot
+    prefill at padded length L cold then warm, ``("chunk", C)`` runs
+    one chunked-prefill dispatch of C tokens.  Token values come from a
+    seeded rng (they cannot affect timing, only determinism of the
+    recorded workload), and every call synchronizes on the result so
+    async dispatch cannot leak device time out of the measurement."""
+
+    def __init__(self, bundle: Any, params: Any, cache_len: int,
+                 *, seed: int = 0, iters: int = 5):
+        self.bundle = bundle
+        self.params = params
+        self.cache_len = int(cache_len)
+        self.iters = int(iters)
+        self.rng = np.random.default_rng(seed)
+        self._engines: Dict[int, Any] = {}
+
+    def _engine(self, chunk: int):
+        # lazy import: serving sits above core in the layering
+        from repro.serving.engine import ServingEngine
+        eng = self._engines.get(chunk)
+        if eng is None:
+            eng = ServingEngine(
+                self.bundle, self.params, max_slots=1,
+                cache_len=self.cache_len, prefill_buckets=False,
+                prefill_chunk=chunk or None)
+            self._engines[chunk] = eng
+        return eng
+
+    def _batch(self, toks) -> Dict[str, Any]:
+        """The prefill batch for one measured prompt — a vlm bundle
+        additionally needs its vision prefix (synthesized patch
+        embeddings; only the shape matters for timing)."""
+        import jax.numpy as jnp
+        cfg = self.bundle.cfg
+        batch: Dict[str, Any] = {"tokens": toks}
+        if cfg.family == "vlm":
+            batch["vision"] = jnp.asarray(self.rng.normal(
+                0, 1, (1, cfg.n_vision_tokens, cfg.d_vision)
+            ).astype(np.float32))
+        return batch
+
+    def __call__(self, kind: str, size: int) -> CompileStepTiming:
+        import jax.numpy as jnp
+        vocab = self.bundle.cfg.vocab
+        toks = jnp.asarray(self.rng.integers(
+            0, max(vocab - 2, 1), int(size)).astype(np.int32)[None])
+        if kind == "prefill":
+            eng = self._engine(0)
+            batch = self._batch(toks)
+            return measure_compile_and_step(
+                lambda: eng._prefill((self.params, batch)),
+                iters=self.iters)
+        if kind == "chunk":
+            eng = self._engine(int(size))
+            cache1 = self.bundle.empty_cache(
+                1, self.cache_len, self.bundle.cfg.jnp_dtype())
+            return measure_compile_and_step(
+                lambda: eng._prefill_chunk(
+                    (self.params, cache1, toks, jnp.int32(0))),
+                iters=self.iters)
+        raise ValueError(f"unknown measurement kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# the solver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SolveResult:
+    """What the solver decided and why: the chosen bucket ``levels``
+    and ``chunk`` size, the objective at the optimum
+    (``expected_us``: total expected prefill latency over the
+    workload, trace overheads included), the worst single dispatch the
+    config can issue (``max_dispatch_us`` — the head-of-line number a
+    bound constrains), how many prefill programs the workload will
+    trace (``predicted_compiles``), and whether the head-of-line bound
+    was met (``feasible``; without a bound, always True)."""
+
+    levels: List[int]
+    chunk: int
+    expected_us: float
+    max_dispatch_us: float
+    predicted_compiles: int             # _prefill traces: the number
+    feasible: bool                      # jit_cache_size(_prefill) ends
+                                        # at (chunk program excluded —
+                                        # that is chunk_compiles())
+
+
+def _bucket_dp(plens: np.ndarray, cands: List[BucketCost],
+               bound: Optional[float]) -> Optional[Tuple[
+                   List[int], float, float, List[int]]]:
+    """Pick the min-cost subset of candidate levels covering every
+    prefill length in ``plens``: each chosen level pays its trace
+    overhead once (if hit) plus a warm step per request it serves.
+    Levels whose step exceeds ``bound`` are excluded.  Returns (levels,
+    cost, max_step_us, hit_levels) — ``hit_levels`` are the levels at
+    least one request actually pads into, i.e. the prefill programs
+    the workload will trace — or None when ``plens`` cannot be covered
+    (every allowed candidate is smaller than some length)."""
+    if len(plens) == 0:
+        return [], 0.0, 0.0, []
+    cands = [c for c in cands
+             if bound is None or c.step_us <= bound]
+    cands = sorted(cands, key=lambda c: c.length)
+    if not cands or cands[-1].length < int(plens.max()):
+        return None
+    xs = np.sort(plens)
+    bounds = [0] + [int(np.searchsorted(xs, c.length, side="right"))
+                    for c in cands]
+    k = len(cands)
+    INF = float("inf")
+    best = [INF] * (k + 1)
+    best[0] = 0.0
+    back = [0] * (k + 1)
+    for j in range(1, k + 1):
+        for i in range(j):
+            cnt = bounds[j] - bounds[i]
+            seg = 0.0 if cnt == 0 else (
+                cands[j - 1].trace_overhead_us
+                + cnt * cands[j - 1].step_us)
+            if best[i] + seg < best[j]:
+                best[j] = best[i] + seg
+                back[j] = i
+    # the answer must cover max(plens): last chosen level is any c_j
+    # >= max; walking back from the cheapest such j yields the table
+    need = int(plens.max())
+    j_opt = min((j for j in range(1, k + 1)
+                 if cands[j - 1].length >= need),
+                key=lambda j: best[j])
+    levels, hit_costs = [], []
+    j = j_opt
+    while j > 0:
+        i = back[j]
+        if bounds[j] - bounds[i] > 0 or j == j_opt:
+            levels.append(cands[j - 1].length)
+            if bounds[j] - bounds[i] > 0:
+                hit_costs.append(cands[j - 1])
+        j = i
+    levels.sort()
+    max_step = max((c.step_us for c in hit_costs), default=0.0)
+    return levels, best[j_opt], max_step, sorted(
+        c.length for c in hit_costs)
+
+
+def solve(prompt_lengths: Sequence[int], bucket_costs: Sequence[BucketCost],
+          chunk_costs: Sequence[ChunkCost], *, cache_len: int,
+          max_dispatch_us: Optional[float] = None,
+          vis_tokens: int = 0) -> SolveResult:
+    """Jointly choose the bucket table and chunk size minimizing the
+    workload's expected prefill latency.
+
+    For every chunk candidate (0 = chunking off), requests the engine
+    WOULD chunk (prefill length > chunk and the chunked prompt —
+    including the ``vis_tokens`` a vlm's vision prefix occupies —
+    fits the cache, mirroring ``ServingEngine._chunk_eligible``) pay
+    one warm PREFILL step at the chunk length (the engine's
+    ``_start_chunked`` runs the first chunk through the ordinary
+    prefill program) plus ceil(len/chunk)-1 warm chunk steps, with the
+    chunk program's trace overhead charged once; the remaining
+    requests go through the bucket DP.  The first-chunk prefill trace
+    at shape (1, chunk) shares the jit cache with a bucket level of
+    the same length, so ``predicted_compiles`` counts it only when no
+    unchunked request hits that level (and ``expected_us`` charges its
+    trace overhead under the same condition).  Among configurations
+    meeting the head-of-line bound (every single dispatch <=
+    ``max_dispatch_us``), the cheapest wins; when no configuration
+    meets the bound, the one with the smallest worst dispatch wins
+    (least-bad, flagged ``feasible=False``)."""
+    plens = np.array([max(int(l) - 1, 0) for l in prompt_lengths],
+                     dtype=np.int64)
+    plens = plens[plens >= 1]      # single-token prompts skip prefill
+    chunk_by = {int(c.chunk): c for c in chunk_costs}
+    by_len = {c.length: c for c in bucket_costs}
+    results: List[SolveResult] = []
+    for chunk in sorted(set([0] + list(chunk_by))):
+        if chunk == 0:
+            chunked = np.zeros(len(plens), bool)
+        else:
+            n_chunks = -(-plens // chunk)
+            chunked = (plens > chunk) \
+                & (vis_tokens + n_chunks * chunk <= cache_len)
+        cost = 0.0
+        max_disp = 0.0
+        compiles = 0
+        if chunked.any():
+            cc = chunk_by[chunk]
+            # first chunk: the ordinary prefill program at length
+            # `chunk` (measured as a bucket candidate when available)
+            first = by_len.get(chunk)
+            first_step = first.step_us if first is not None else cc.step_us
+            n_first = int(chunked.sum())
+            later = float((-(-plens[chunked] // chunk) - 1).sum())
+            cost += n_first * first_step + later * cc.step_us
+            cost += cc.trace_overhead_us        # the chunk program
+            max_disp = max(max_disp, cc.step_us, first_step)
+        dp = _bucket_dp(plens[~chunked], list(bucket_costs),
+                        max_dispatch_us)
+        if dp is None and max_dispatch_us is not None:
+            # the bound excludes every covering table: fall back to
+            # the unbounded optimum and flag it infeasible below —
+            # a too-tight bound is reported, never an exception
+            dp = _bucket_dp(plens[~chunked], list(bucket_costs), None)
+        if dp is None:
+            continue
+        levels, dp_cost, dp_max, hit_levels = dp
+        if not levels:              # every request chunked: the table
+            levels = [min(c.length for c in bucket_costs)]  # still
+        cost += dp_cost             # needs one level to exist
+        max_disp = max(max_disp, dp_max)
+        compiles += len(hit_levels)
+        if chunked.any() and chunk not in hit_levels:
+            # the (1, chunk) first-chunk prefill trace is NOT deduped
+            # against a HIT bucket level: one more prefill program
+            compiles += 1
+            first = by_len.get(chunk)
+            if first is not None:
+                cost += first.trace_overhead_us
+        feasible = (max_dispatch_us is None
+                    or max_disp <= max_dispatch_us)
+        results.append(SolveResult(
+            levels=levels, chunk=chunk, expected_us=cost,
+            max_dispatch_us=max_disp, predicted_compiles=compiles,
+            feasible=feasible))
+    if not results:
+        raise ValueError(
+            "no candidate configuration covers the workload — widen "
+            "candidate_levels or raise max_dispatch_us")
+    feas = [r for r in results if r.feasible]
+    if feas:
+        return min(feas, key=lambda r: (r.expected_us, len(r.levels),
+                                        r.chunk))
+    return min(results, key=lambda r: (r.max_dispatch_us, r.expected_us))
+
+
+# ---------------------------------------------------------------------------
+# the profile (versioned JSON; measurements in, wall clock out)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibrationProfile:
+    """A calibration pass, frozen: the solved configuration
+    (``bucket_levels`` + ``prefill_chunk``), the raw measurements it
+    was solved FROM, the workload it was solved FOR, and the identity
+    of the model it measured (``model_key``).
+
+    The JSON layout (``to_json``) is versioned; ``load`` refuses a
+    version it does not understand instead of misreading it.  Nothing
+    volatile (timestamps, hostnames) is stored, so the same seed and
+    the same measurements produce byte-identical profiles — profiles
+    are diffable artifacts, re-calibrated deliberately when the model,
+    the hardware, or the workload changes (docs/SCHEDULING.md)."""
+
+    model_key: str
+    seed: int
+    cache_len: int
+    bucket_levels: List[int]
+    prefill_chunk: int                       # 0 = chunking off
+    expected_us: float
+    default_expected_us: float
+    max_dispatch_us: float
+    predicted_compiles: int
+    feasible: bool
+    prompt_lengths: List[int]
+    bucket_costs: List[BucketCost]
+    chunk_costs: List[ChunkCost]
+    meta: Dict[str, str]
+    version: int = PROFILE_VERSION
+
+    def bucket_table(self) -> BucketTable:
+        """The solved table, ready to hand to an engine — identical
+        (``BucketTable.__eq__``) to ``BucketTable.from_levels`` of the
+        profile's levels."""
+        return BucketTable.from_levels(self.bucket_levels)
+
+    def matches(self, cfg: Any, cache_len: int) -> bool:
+        """Whether this profile was calibrated for exactly this model
+        and cache capacity."""
+        return self.model_key == profile_model_key(cfg, cache_len)
+
+    def matches_backend(self) -> bool:
+        """Whether this profile was MEASURED on the backend this
+        process runs on.  Costs are hardware facts: a profile
+        calibrated on one backend is someone else's cost landscape on
+        another, so ``ServingEngine.from_profile`` refuses a mismatch
+        the same way it refuses a foreign ``model_key``.  (A jax
+        *version* drift is allowed — same hardware class, costs drift
+        rather than change meaning — but ``meta["jax"]`` records it
+        for the re-calibration decision; see docs/SCHEDULING.md.)"""
+        import jax
+        return self.meta.get("backend") == jax.default_backend()
+
+    # -- (de)serialization -------------------------------------------
+
+    def to_json(self) -> str:
+        """The canonical, sorted-key JSON form (what ``save`` writes)."""
+        d = dataclasses.asdict(self)
+        return json.dumps(d, indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "CalibrationProfile":
+        """Inverse of ``to_json``; raises on an unknown version."""
+        d = json.loads(text)
+        version = d.get("version")
+        if version != PROFILE_VERSION:
+            raise ValueError(
+                f"calibration profile version {version!r} is not "
+                f"supported (expected {PROFILE_VERSION}); re-calibrate")
+        d["bucket_costs"] = [BucketCost(**c) for c in d["bucket_costs"]]
+        d["chunk_costs"] = [ChunkCost(**c) for c in d["chunk_costs"]]
+        return cls(**d)
+
+    def save(self, path: str) -> str:
+        """Write the profile JSON to ``path`` (returns ``path``)."""
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationProfile":
+        """Read a profile written by ``save``."""
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def _candidate_levels(plens: np.ndarray, cache_len: int,
+                      explicit: Optional[Sequence[int]]
+                      ) -> List[int]:
+    """The bucket lengths worth measuring: the power-of-two ladder
+    (today's default layout — so the solver can always reproduce the
+    fallback) plus the workload's own distinct prefill lengths, capped
+    at ``MAX_CANDIDATES`` by quantile subsampling."""
+    if explicit is not None:
+        cands = sorted({int(x) for x in explicit})
+        if not cands:
+            raise ValueError("candidate_levels must be non-empty")
+        cands = [c for c in cands if c <= cache_len]
+        if not cands:
+            raise ValueError(
+                f"every candidate level in {sorted(explicit)} exceeds "
+                f"the usable cache room ({cache_len}) — the engine "
+                f"would fall back to exact-length prefill for every "
+                f"prompt, which is what calibration exists to prevent")
+        return cands
+    need = int(plens.max()) if len(plens) else MIN_LEVEL
+    pow2 = []
+    b = MIN_LEVEL
+    while b <= cache_len:
+        pow2.append(b)
+        b <<= 1
+    own = sorted({int(x) for x in plens if MIN_LEVEL <= x <= cache_len})
+    room = max(2, MAX_CANDIDATES - len(pow2))
+    if len(own) > room:
+        qs = np.linspace(0, 100, room)
+        own = sorted({int(np.percentile(own, q,
+                                        method="higher")) for q in qs})
+    cands = sorted(set(pow2) | set(own) | {min(need, cache_len)})
+    return cands
+
+
+def calibrate(bundle: Any, params: Any,
+              prompt_lengths: Sequence[int], *,
+              cache_len: int = 256, seed: int = 0,
+              candidate_levels: Optional[Sequence[int]] = None,
+              chunk_candidates: Sequence[int] = DEFAULT_CHUNK_CANDIDATES,
+              max_dispatch_us: Optional[float] = None,
+              iters: int = 5,
+              measure: Optional[Callable[[str, int],
+                                         CompileStepTiming]] = None
+              ) -> CalibrationProfile:
+    """Run the calibration pass and solve for the serving config.
+
+    Measures every candidate bucket level's (compile, padded-step)
+    cost and every candidate chunk size's step cost through
+    ``measure`` (default: ``EngineMeasurer`` timing the real compiled
+    steps), then solves for the bucket levels and chunk size that
+    minimize the expected prefill latency of ``prompt_lengths`` —
+    reuse the arrival-process workload generators to sample these —
+    and freezes everything into a ``CalibrationProfile``.
+
+    ``max_dispatch_us`` bounds how long any single prefill dispatch
+    may monopolize the engine (the head-of-line knob chunking exists
+    for); ``measure`` injection makes the pass exactly reproducible
+    (see the module docstring's determinism contract)."""
+    plens = np.array([max(int(l) - 1, 0) for l in prompt_lengths],
+                     dtype=np.int64)
+    plens = plens[plens >= 1]
+    if len(plens) == 0:
+        raise ValueError("prompt_lengths contains no multi-token "
+                         "prompt — nothing to calibrate")
+    # lazy import: serving sits above core; by call time both exist
+    from repro.serving.engine import BUCKETED_FAMILIES
+    if bundle.cfg.family not in BUCKETED_FAMILIES:
+        raise ValueError(
+            f"bucket/chunk calibration applies to the bucketed "
+            f"prefill families {BUCKETED_FAMILIES}, not "
+            f"{bundle.cfg.family!r} (their prefill must stay "
+            f"exact-length — see docs/SCHEDULING.md)")
+    if measure is None:
+        measure = EngineMeasurer(bundle, params, cache_len, seed=seed,
+                                 iters=iters)
+    # a vlm's vision prefix occupies cache rows the prompt cannot use:
+    # mirror the engine's `room` (bucket over-cap) and chunk-fit math
+    vis = (int(getattr(bundle.cfg, "n_vision_tokens", 0))
+           if bundle.cfg.family == "vlm" else 0)
+    room = cache_len - vis
+    cands = _candidate_levels(plens, room, candidate_levels)
+    chunks = sorted({int(c) for c in chunk_candidates} - {0})
+    # measure prefill at each chunk size too: the engine's FIRST chunk
+    # runs through the ordinary prefill program at that length, so the
+    # solver needs its cost (and it may double as a bucket level)
+    cands = sorted(set(cands) | {c for c in chunks if c <= room})
+    # also measure every level the DEFAULT pow2 table would hit on
+    # this workload — NOT offered to the solver (explicit
+    # candidate_levels stay authoritative), only priced, so the
+    # solved-vs-default comparison below rests on measurements
+    default_tbl = BucketTable(min_bucket=8, max_bucket=cache_len)
+    default_levels = set()
+    for m in np.unique(plens):
+        lvl = default_tbl.fit(int(m))
+        if lvl is not None and lvl <= room:
+            default_levels.add(lvl)
+    bucket_costs = []
+    for L in sorted(set(cands) | default_levels):
+        t = measure("prefill", L)
+        bucket_costs.append(BucketCost(length=L, compile_us=t.compile_us,
+                                       step_us=t.step_us))
+    chunk_costs = []
+    for C in chunks:
+        t = measure("chunk", C)
+        chunk_costs.append(ChunkCost(chunk=C, compile_us=t.compile_us,
+                                     step_us=t.step_us))
+    solver_costs = [c for c in bucket_costs if c.length in set(cands)]
+    best = solve(prompt_lengths, solver_costs, chunk_costs,
+                 cache_len=cache_len, max_dispatch_us=max_dispatch_us,
+                 vis_tokens=vis)
+    # capacity guard: always keep one level at the largest measured
+    # candidate, so a serving-time prompt LONGER than anything in the
+    # calibration workload still buckets (one compile) instead of
+    # silently falling back to exact-length retrace-per-length.  An
+    # unhit level costs nothing — predicted_compiles and expected_us
+    # are unchanged for the calibrated workload.
+    levels = list(best.levels)
+    cap = max(c.length for c in solver_costs)
+    if levels[-1] < cap:
+        levels.append(cap)
+    best.levels = levels
+    # the objective of today's hand-picked fallback (pow2 ladder from
+    # 8, chunking off), evaluated on the SAME measurements — what
+    # "beating the defaults" is measured against.  Every bucketed
+    # default level was added to the candidate set above; over-room
+    # lengths (the engine's exact-length fallback, one trace per
+    # distinct length) interpolate from the nearest measured level
+    by_len = {c.length: c for c in bucket_costs}
+    default_cost = 0.0
+    default_traced: Dict[int, float] = {}
+    for m in plens:
+        lvl = default_tbl.fit(int(m))
+        if lvl is not None and lvl > room:
+            lvl = None                  # engine over-cap: exact length
+        want = lvl if lvl is not None else int(m)
+        c = by_len.get(want)
+        if c is not None:
+            default_cost += c.step_us
+            default_traced[want] = c.trace_overhead_us
+        else:
+            ref = min(bucket_costs,
+                      key=lambda r: abs(r.length - want))
+            default_cost += ref.step_us * want / ref.length
+            default_traced[want] = ref.trace_overhead_us
+    default_cost += sum(default_traced.values())
+    import jax
+    return CalibrationProfile(
+        model_key=profile_model_key(bundle.cfg, cache_len),
+        seed=int(seed), cache_len=int(cache_len),
+        bucket_levels=list(best.levels),
+        prefill_chunk=int(best.chunk),
+        expected_us=round(float(best.expected_us), 3),
+        default_expected_us=round(float(default_cost), 3),
+        max_dispatch_us=round(float(best.max_dispatch_us), 3),
+        predicted_compiles=int(best.predicted_compiles),
+        feasible=bool(best.feasible),
+        prompt_lengths=[int(x) for x in prompt_lengths],
+        bucket_costs=bucket_costs, chunk_costs=chunk_costs,
+        meta={"jax": jax.__version__,
+              "backend": jax.default_backend()})

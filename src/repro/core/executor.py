@@ -103,13 +103,23 @@ def _jnp_dtype(name: str):
 # ---------------------------------------------------------------------------
 
 class BucketTable:
-    """Power-of-two size quantization shared by every surface that must
-    not retrace on ragged sizes.
+    """Size quantization shared by every surface that must not retrace
+    on ragged sizes.
 
-    ``bucket(n)`` maps a size to the smallest power of two that holds it
-    (floored at ``min_bucket``, capped at ``max_bucket``), so the set of
-    distinct traced shapes is O(log(max/min)) instead of O(#sizes).  Two
-    consumers share one table:
+    ``bucket(n)`` maps a size to the smallest table *level* that holds
+    it, so the set of distinct traced shapes is O(#levels) instead of
+    O(#sizes).  The level layout comes from one of two places:
+
+      * **geometric** (the default): levels are ``min_bucket``
+        multiplied by ``granularity`` (default 2 — power-of-two
+        buckets) until ``max_bucket``, the hand-picked layout every
+        engine falls back to when no calibration profile exists;
+      * **explicit** (``from_levels`` / ``from_spec``): an arbitrary
+        ascending level list — what the calibration cost model
+        (``repro.core.costmodel``) solves for from MEASURED per-bucket
+        compile and step costs, persisted in a ``CalibrationProfile``.
+
+    Two consumers share one table:
 
       * **bucketed prefill** — ``ServingEngine`` pads each prompt to its
         bucket and compiles the prefill step once per *bucket* instead
@@ -129,22 +139,78 @@ class BucketTable:
     errors stay loud and immediate, like arena overflow.
     """
 
-    def __init__(self, min_bucket: int = 16, max_bucket: int = 4096):
-        if min_bucket < 1 or max_bucket < min_bucket:
-            raise ValueError((min_bucket, max_bucket))
-        self.min_bucket = int(min_bucket)
-        self.max_bucket = int(max_bucket)
+    def __init__(self, min_bucket: int = 16, max_bucket: int = 4096,
+                 granularity: int = 2,
+                 levels: Optional[Sequence[int]] = None):
+        if levels is not None:
+            if (min_bucket, max_bucket, granularity) != (16, 4096, 2):
+                raise ValueError(
+                    "pass either explicit levels or the geometric "
+                    "(min_bucket, max_bucket, granularity) "
+                    "parameters, not both — levels fully determine "
+                    "the table")
+            lv = [int(x) for x in levels]
+            if not lv or sorted(set(lv)) != lv or lv[0] < 1:
+                raise ValueError(
+                    f"levels must be a non-empty strictly ascending "
+                    f"sequence of positive ints, got {levels!r}")
+        else:
+            if min_bucket < 1 or max_bucket < min_bucket:
+                raise ValueError((min_bucket, max_bucket))
+            if granularity < 2 or int(granularity) != granularity:
+                raise ValueError(
+                    f"granularity must be an integer >= 2, got "
+                    f"{granularity!r}")
+            lv, b = [], int(min_bucket)
+            while b <= max_bucket:
+                lv.append(b)
+                b *= int(granularity)
+        self.levels: List[int] = lv
+        self.min_bucket = lv[0]
+        self.max_bucket = lv[-1]
         self.hits: Dict[int, int] = {}
+
+    @classmethod
+    def from_levels(cls, levels: Sequence[int]) -> "BucketTable":
+        """A table with exactly these ascending levels — the layout a
+        calibration profile's solver emits."""
+        return cls(levels=levels)
+
+    def spec(self) -> Dict[str, Any]:
+        """JSON-serializable layout (``from_spec`` round-trips it
+        bit-identically) — how a ``CalibrationProfile`` persists the
+        solved table."""
+        return {"levels": list(self.levels)}
+
+    @classmethod
+    def from_spec(cls, spec: Dict[str, Any]) -> "BucketTable":
+        """Rebuild a table from ``spec()`` output (e.g. loaded from a
+        calibration profile JSON)."""
+        return cls(levels=spec["levels"])
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, BucketTable):
+            return NotImplemented
+        return self.levels == other.levels
+
+    def __hash__(self) -> int:
+        # levels are fixed at construction (only `hits` mutates), so
+        # hashing by layout keeps tables usable as dict/set members
+        # consistently with the layout equality above
+        return hash(tuple(self.levels))
+
+    def __repr__(self) -> str:
+        return f"BucketTable(levels={self.levels})"
 
     def fit(self, n: int) -> Optional[int]:
         """Smallest table bucket holding ``n``, or None when ``n``
         exceeds ``max_bucket`` — records nothing."""
         if n < 1:
             raise ValueError(f"size must be >= 1, got {n}")
-        b = self.min_bucket
-        while b < n:
-            b <<= 1
-        return b if b <= self.max_bucket else None
+        for b in self.levels:
+            if b >= n:
+                return b
+        return None
 
     def bucket(self, n: int) -> int:
         """Smallest table bucket holding ``n`` (and count the hit)."""

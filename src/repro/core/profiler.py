@@ -75,6 +75,55 @@ class ProfileReport:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass
+class CompileStepTiming:
+    """One calibration measurement: the COLD first call of a jitted
+    program (trace + compile + run, ``compile_us``) next to its WARM
+    steady-state cost (median of ``iters`` runs, ``step_us``).
+
+    This is the measurement primitive the calibration cost model
+    (``repro.core.costmodel``) builds on: a bucket's value is its warm
+    padded-step latency, its price is the one-time compile it adds to
+    the table — both sides of the solver's trade live in this pair."""
+
+    compile_us: float
+    step_us: float
+    iters: int
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """What the first call paid beyond a warm step — the compile
+        cost a bucket table charges per level it actually traces."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
+def measure_compile_and_step(fn, *args, iters: int = 5,
+                             block=None) -> CompileStepTiming:
+    """Time ``fn(*args)`` cold (first call = trace + compile + run) and
+    warm (median of ``iters`` further calls) — the compile/step timer
+    behind calibration.
+
+    ``fn`` must not have been called with this signature before,
+    otherwise the "cold" call is already warm and the measured compile
+    cost collapses to a step cost.  ``block`` (default
+    ``jax.block_until_ready``) synchronizes on the result so async
+    dispatch cannot leak device time out of the measurement."""
+    if block is None:
+        block = jax.block_until_ready
+    t0 = time.perf_counter()
+    block(fn(*args))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        block(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return CompileStepTiming(compile_us=compile_us,
+                             step_us=times[len(times) // 2],
+                             iters=len(times))
+
+
 class MicroProfiler:
     """Paper §5.4: instrument the interpreter's operator sequence."""
 

@@ -313,6 +313,44 @@ class ServingEngine:
             self._prefill_chunk = jax.jit(functools.partial(
                 chunk_reg.eval, chunk_ctx, chunk_op))
 
+    @classmethod
+    def from_profile(cls, bundle: ModelBundle, params: Any, profile: Any,
+                     **kw) -> "ServingEngine":
+        """Construct an engine from a ``CalibrationProfile``
+        (``repro.core.costmodel``) instead of hand-picked constants:
+        the profile's solved bucket levels become the engine's
+        ``BucketTable`` and its solved ``prefill_chunk`` the chunk
+        size, with no re-measurement.  ``cache_len`` defaults to the
+        capacity the profile was calibrated at.
+
+        The profile must match this model + cache capacity
+        (``profile.matches``) AND the running backend
+        (``profile.matches_backend``) — a profile measured on another
+        model or another piece of hardware is someone else's cost
+        landscape and is refused loudly.  Explicit keyword overrides
+        win over the profile (pass
+        ``prefill_buckets=``/``prefill_chunk=`` to pin them), and a
+        missing profile is simply the ordinary constructor: the
+        no-profile fallback is today's defaults."""
+        kw.setdefault("cache_len", profile.cache_len)
+        if not profile.matches(bundle.cfg, kw["cache_len"]):
+            from repro.core.costmodel import profile_model_key
+            raise ValueError(
+                f"profile was calibrated for {profile.model_key!r}, "
+                f"not {profile_model_key(bundle.cfg, kw['cache_len'])!r}"
+                f" — re-calibrate (or share deliberately through "
+                f"MultiTenantHost(profile=...))")
+        if not profile.matches_backend():
+            import jax
+            raise ValueError(
+                f"profile was measured on backend "
+                f"{profile.meta.get('backend')!r}, but this process "
+                f"runs on {jax.default_backend()!r} — costs are "
+                f"hardware facts; re-calibrate on this backend")
+        kw.setdefault("prefill_buckets", profile.bucket_table())
+        kw.setdefault("prefill_chunk", profile.prefill_chunk or None)
+        return cls(bundle, params, **kw)
+
     def prefill_compiles(self) -> int:
         """How many distinct prefill programs were traced — the
         trace-count hook.  With bucketing on, this is the number of

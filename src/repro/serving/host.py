@@ -124,7 +124,7 @@ class MultiTenantHost:
     """One arena, many models — never running concurrently."""
 
     def __init__(self, arena_bytes: int, *, policy: Any = None,
-                 clock=None, preempt: Any = None):
+                 clock=None, preempt: Any = None, profile: Any = None):
         self.arena = TwoStackArena(arena_bytes)
         self.engines: Dict[str, ServingEngine] = {}
         self.micro: Dict[str, InterpreterPool] = {}
@@ -140,8 +140,17 @@ class MultiTenantHost:
         self.clock = clock if clock is not None else default_clock
         # the shared bucket tables: one for prompt lengths (engines
         # agree on prefill bucket boundaries), one for ragged lane
-        # counts (nearby tenants share ArenaPool free lists)
-        self.prompt_buckets = BucketTable(min_bucket=8, max_bucket=4096)
+        # counts (nearby tenants share ArenaPool free lists).  With a
+        # CalibrationProfile the prompt table is the profile's SOLVED
+        # layout, deliberately shared across every tenant (engines of
+        # other models reuse the layout, not the measurements); with
+        # no profile, it is today's hand-picked pow2 default.
+        self.profile = profile
+        if profile is not None:
+            self.prompt_buckets = profile.bucket_table()
+        else:
+            self.prompt_buckets = BucketTable(min_bucket=8,
+                                              max_bucket=4096)
         self.lane_buckets = BucketTable(min_bucket=2, max_bucket=1024)
 
     def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
@@ -152,12 +161,15 @@ class MultiTenantHost:
         engine admits through the host's policy/clock and buckets its
         prefill lengths through the host's shared prompt table (when
         its family supports bucketing)."""
-        buckets = (self.prompt_buckets
-                   if bundle.cfg.family in BUCKETED_FAMILIES else False)
+        bucketable = bundle.cfg.family in BUCKETED_FAMILIES
+        buckets = self.prompt_buckets if bucketable else False
+        chunk = (self.profile.prefill_chunk or None
+                 if self.profile is not None and bucketable else None)
         eng = ServingEngine(bundle, params, max_slots=max_slots,
                             cache_len=cache_len, arena=self.arena,
                             policy=self.policy, clock=self.clock,
                             prefill_buckets=buckets,
+                            prefill_chunk=chunk,
                             preempt=self.preempt)
         scratch = _scratch_bytes(bundle, max_prompt)
         if scratch > self._scratch_high:

@@ -1,0 +1,110 @@
+"""The bench-result contract, enforced: every committed
+``benchmarks/results/BENCH_*.json`` is the exact layout
+``benchmarks.common.save_result`` writes (meta block + flat rows of
+finite scalars), so a broken writer — or a hand-edited artifact — can
+never land silently (tools/check_bench.py, also a CI job)."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "tools"))
+sys.path.insert(0, str(REPO_ROOT))      # for `benchmarks.common`
+
+import check_bench  # noqa: E402
+
+
+def _scaffold(tmp_path, name, payload) -> pathlib.Path:
+    results = tmp_path / "benchmarks" / "results"
+    results.mkdir(parents=True, exist_ok=True)
+    p = results / name
+    p.write_text(payload if isinstance(payload, str)
+                 else json.dumps(payload))
+    return p
+
+
+GOOD_META = {"schema": 1, "jax": "0.4.37", "backend": "cpu", "seed": 0,
+             "created_utc": "2026-01-01T00:00:00Z"}
+
+
+def test_committed_results_are_valid():
+    violations = check_bench.collect_violations()
+    assert not violations, "\n".join(
+        f"{rel}: {msg}" for rel, msg in violations)
+
+
+def test_save_result_layout_passes_the_lint(tmp_path, monkeypatch):
+    """What save_result writes is what check_bench accepts — the
+    writer and the linter cannot drift apart."""
+    from benchmarks import common
+    monkeypatch.setattr(common, "RESULTS_DIR",
+                        str(tmp_path / "benchmarks" / "results"))
+    path = common.save_result("roundtrip", [{"x": 1, "ok": True}],
+                              seed=7)
+    assert path.endswith("BENCH_roundtrip.json")
+    assert check_bench.check_result(pathlib.Path(path),
+                                    root=tmp_path) == []
+    loaded = common.load_result(path)
+    assert loaded["rows"] == [{"x": 1, "ok": True}]
+    assert loaded["meta"]["seed"] == 7
+    for key in check_bench.REQUIRED_META:
+        assert key in loaded["meta"], key
+
+
+def test_lint_catches_legacy_bare_list(tmp_path):
+    _scaffold(tmp_path, "BENCH_old.json", [{"x": 1}])
+    (rel, msg), = check_bench.collect_violations(root=tmp_path)
+    assert rel == "benchmarks/results/BENCH_old.json"
+    assert "meta" in msg
+
+
+def test_lint_catches_missing_meta_key_and_bad_schema(tmp_path):
+    meta = dict(GOOD_META, schema=99)
+    del meta["seed"]
+    _scaffold(tmp_path, "BENCH_m.json",
+              {"meta": meta, "rows": [{"x": 1}]})
+    msgs = [m for _, m in check_bench.collect_violations(root=tmp_path)]
+    assert any("'seed'" in m for m in msgs)
+    assert any("schema" in m for m in msgs)
+
+
+def test_lint_catches_non_finite_numbers(tmp_path):
+    # json.dumps emits bare NaN/Infinity by default — exactly the
+    # artifact a naive percentile bug would commit
+    _scaffold(tmp_path, "BENCH_nan.json", json.dumps(
+        {"meta": GOOD_META, "rows": [{"p95_us": float("nan")},
+                                     {"p99_us": float("inf")}]}))
+    msgs = [m for _, m in check_bench.collect_violations(root=tmp_path)]
+    assert len(msgs) == 2 and all("non-finite" in m for m in msgs)
+
+
+def test_lint_catches_empty_rows_and_nested_values(tmp_path):
+    _scaffold(tmp_path, "BENCH_empty.json",
+              {"meta": GOOD_META, "rows": []})
+    _scaffold(tmp_path, "BENCH_nested.json",
+              {"meta": GOOD_META, "rows": [{"x": {"nested": 1}}]})
+    msgs = [m for _, m in check_bench.collect_violations(root=tmp_path)]
+    assert any("non-empty list" in m for m in msgs)
+    assert any("unsupported type" in m for m in msgs)
+
+
+def test_tiny_runner_refuses_an_empty_selection():
+    """`benchmarks.run --tiny <name>` where the named benchmark has no
+    tiny mode must exit non-zero — a smoke gate that runs nothing must
+    not read as green."""
+    from benchmarks import run as bench_run
+    with pytest.raises(SystemExit, match="tiny"):
+        bench_run.main(["--tiny", "kernel_speedup"])
+
+
+def test_lint_catches_invalid_json_and_empty_dir(tmp_path):
+    _scaffold(tmp_path, "BENCH_broken.json", "{not json")
+    msgs = [m for _, m in check_bench.collect_violations(root=tmp_path)]
+    assert any("invalid JSON" in m for m in msgs)
+    empty = tmp_path / "other"
+    (empty / "benchmarks" / "results").mkdir(parents=True)
+    (rel, msg), = check_bench.collect_violations(root=empty)
+    assert "no BENCH_" in msg

@@ -1,0 +1,469 @@
+"""The calibration cost model's contract (repro.core.costmodel):
+calibration is deterministic given a seed and a measurement function,
+profiles round-trip through their versioned JSON into identical engine
+configurations, the solver's bucket/chunk choices follow the measured
+cost landscape, engines fall back to today's hand-picked defaults when
+no profile exists, and ``BucketTable`` holds up at its edges (over-cap
+sizes, single-level tables, min==max, profile-vs-hand construction)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (BucketCost, BucketTable, CalibrationProfile,
+                        ChunkCost, CompileStepTiming, calibrate,
+                        profile_model_key, solve)
+
+
+class _Cfg:
+    family = "dense"
+    arch_id = "toy"
+    vocab = 32
+
+
+class _Bundle:
+    cfg = _Cfg()
+
+
+def synthetic_measure(compile_us=2000.0, step_per_tok=2.0,
+                      chunk_overhead=1.2):
+    """A deterministic stand-in for EngineMeasurer: compile cost is
+    flat, step cost linear in the padded length, chunk steps carry a
+    small per-dispatch overhead factor."""
+    def measure(kind, size):
+        if kind == "prefill":
+            return CompileStepTiming(
+                compile_us=compile_us + step_per_tok * size,
+                step_us=step_per_tok * size, iters=5)
+        return CompileStepTiming(
+            compile_us=compile_us + chunk_overhead * step_per_tok * size,
+            step_us=chunk_overhead * step_per_tok * size, iters=5)
+    return measure
+
+
+LENGTHS = [5] * 8 + [9] * 6 + [17] * 4 + [41] * 2
+
+
+# ---------------------------------------------------------------------------
+# BucketTable edges (profile-constructed tables included)
+# ---------------------------------------------------------------------------
+
+def test_bucket_table_default_is_pow2_ladder():
+    t = BucketTable(min_bucket=8, max_bucket=64)
+    assert t.levels == [8, 16, 32, 64]
+    assert t.fit(1) == 8 and t.fit(9) == 16 and t.fit(64) == 64
+
+
+def test_bucket_table_over_cap_prompt():
+    t = BucketTable(min_bucket=8, max_bucket=64)
+    assert t.fit(65) is None            # probe records nothing
+    assert t.hits == {}
+    with pytest.raises(ValueError):     # commit stays loud
+        t.bucket(65)
+
+
+def test_bucket_table_single_element():
+    t = BucketTable.from_levels([32])
+    assert t.min_bucket == t.max_bucket == 32
+    assert t.fit(1) == 32 and t.fit(32) == 32 and t.fit(33) is None
+    assert t.bucket(7) == 32 and t.hits == {32: 1}
+
+
+def test_bucket_table_min_equals_max():
+    t = BucketTable(min_bucket=16, max_bucket=16)
+    assert t.levels == [16]
+    assert t == BucketTable.from_levels([16])
+
+
+def test_bucket_table_granularity():
+    t = BucketTable(min_bucket=4, max_bucket=64, granularity=4)
+    assert t.levels == [4, 16, 64]
+    with pytest.raises(ValueError):
+        BucketTable(min_bucket=4, max_bucket=64, granularity=1)
+    with pytest.raises(ValueError):     # silently truncating 2.9 -> 2
+        BucketTable(min_bucket=4, max_bucket=64, granularity=2.9)
+
+
+def test_bucket_table_rejects_bad_levels():
+    for bad in ([], [8, 8], [16, 8], [0, 8]):
+        with pytest.raises(ValueError):
+            BucketTable.from_levels(bad)
+    with pytest.raises(ValueError):     # contradictory mixed forms
+        BucketTable(min_bucket=8, max_bucket=64, levels=[4, 8])
+
+
+def test_bucket_table_is_hashable_consistently_with_eq():
+    a = BucketTable(min_bucket=8, max_bucket=64)
+    b = BucketTable.from_levels([8, 16, 32, 64])
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1             # usable as dict/set member
+
+
+def test_profile_table_matches_hand_constructed_bit_identically():
+    """A table rebuilt from a profile spec behaves IDENTICALLY to the
+    hand-constructed one on every size — same levels, same fits, same
+    hit accounting."""
+    hand = BucketTable.from_levels([8, 24, 48])
+    rebuilt = BucketTable.from_spec(hand.spec())
+    assert rebuilt == hand and rebuilt.levels == [8, 24, 48]
+    for n in range(1, 49):
+        assert rebuilt.fit(n) == hand.fit(n), n
+        assert rebuilt.bucket(n) == hand.bucket(n), n
+    assert rebuilt.hits == hand.hits
+    # pow2 default expressed as levels == pow2 default expressed as args
+    assert BucketTable(8, 64) == BucketTable.from_levels([8, 16, 32, 64])
+
+
+# ---------------------------------------------------------------------------
+# calibration determinism + profile round-trip
+# ---------------------------------------------------------------------------
+
+def test_calibration_is_deterministic():
+    kw = dict(cache_len=64, seed=3, measure=synthetic_measure(),
+              chunk_candidates=(0, 8))
+    a = calibrate(_Bundle(), None, LENGTHS, **kw)
+    b = calibrate(_Bundle(), None, LENGTHS, **kw)
+    assert a.to_json() == b.to_json()   # byte-identical profiles
+    assert a.model_key == profile_model_key(_Cfg(), 64)
+    # nothing volatile may be stored: the meta block is version info
+    assert set(a.meta) == {"jax", "backend"}
+
+
+def test_profile_round_trip(tmp_path):
+    p = calibrate(_Bundle(), None, LENGTHS, cache_len=64, seed=0,
+                  measure=synthetic_measure())
+    path = p.save(str(tmp_path / "profile.json"))
+    q = CalibrationProfile.load(path)
+    assert q.to_json() == p.to_json()
+    assert q.bucket_table() == p.bucket_table()
+    assert q.prefill_chunk == p.prefill_chunk
+    assert q.bucket_costs == p.bucket_costs
+    assert q.chunk_costs == p.chunk_costs
+
+
+def test_profile_version_guard(tmp_path):
+    p = calibrate(_Bundle(), None, LENGTHS, cache_len=64,
+                  measure=synthetic_measure())
+    bad = p.to_json().replace('"version": 1', '"version": 99')
+    with pytest.raises(ValueError, match="version"):
+        CalibrationProfile.from_json(bad)
+
+
+def test_calibrate_rejects_unbucketable_families():
+    class SsmCfg:
+        family = "ssm"
+        arch_id = "s"
+        vocab = 8
+
+    class SsmBundle:
+        cfg = SsmCfg()
+
+    with pytest.raises(ValueError, match="exact-length"):
+        calibrate(SsmBundle(), None, LENGTHS, cache_len=64,
+                  measure=synthetic_measure())
+
+
+# ---------------------------------------------------------------------------
+# solver semantics on synthetic cost landscapes
+# ---------------------------------------------------------------------------
+
+def _costs(lengths, measure):
+    bc = [BucketCost(length=L, compile_us=measure("prefill", L).compile_us,
+                     step_us=measure("prefill", L).step_us)
+          for L in lengths]
+    return bc
+
+
+def test_solver_merges_buckets_when_compile_dominates():
+    """Huge compile cost, flat step cost: one level covering the max
+    length beats a finer ladder — the table collapses."""
+    m = synthetic_measure(compile_us=1e6, step_per_tok=1.0)
+    r = solve(LENGTHS, _costs([8, 16, 32, 64], m), [], cache_len=64)
+    assert r.levels == [64] and r.predicted_compiles == 1
+
+
+def test_solver_keeps_fine_buckets_when_padding_dominates():
+    """Free compiles, costly padding: every measured level that saves
+    padding for some request is worth tracing (level 32 serves no
+    length in this mix, so it — and only it — is dropped)."""
+    m = synthetic_measure(compile_us=0.0, step_per_tok=100.0)
+    r = solve(LENGTHS, _costs([8, 16, 32, 64], m), [], cache_len=64)
+    assert r.levels == [8, 16, 64] and r.predicted_compiles == 3
+
+
+def test_solver_objective_counts_trace_overhead_once_per_level():
+    m = synthetic_measure(compile_us=500.0, step_per_tok=1.0)
+    r = solve([9, 9, 9], _costs([8, 16], m), [], cache_len=64)
+    # 3 requests pad (9-1=8 tokens) into level 8: 3 steps + 1 compile
+    assert r.levels == [8]
+    assert r.expected_us == pytest.approx(3 * 8.0 + 500.0)
+
+
+def test_head_of_line_bound_forces_chunking():
+    """A dispatch bound below the big bucket's step cost excludes it;
+    the solver must reach for chunked prefill to stay feasible."""
+    m = synthetic_measure(compile_us=100.0, step_per_tok=10.0,
+                          chunk_overhead=2.0)
+    bc = _costs([8, 16, 32, 64], m)
+    cc = [ChunkCost(chunk=8, compile_us=m("chunk", 8).compile_us,
+                    step_us=m("chunk", 8).step_us)]
+    free = solve(LENGTHS, bc, cc, cache_len=64)
+    bound = solve(LENGTHS, bc, cc, cache_len=64, max_dispatch_us=200.0)
+    assert free.chunk == 0              # serial optimum never chunks
+    assert bound.chunk == 8 and bound.feasible
+    assert bound.max_dispatch_us <= 200.0
+
+
+def test_solver_chunk_fit_counts_vlm_vision_tokens():
+    """Chunk eligibility must mirror ``ServingEngine._chunk_eligible``,
+    vision prefix included: a chunked prompt that fits a dense cache
+    can overflow a vlm cache whose prefix occupies rows."""
+    m = synthetic_measure(compile_us=2000.0, step_per_tok=2.0,
+                          chunk_overhead=0.9)
+    bc = _costs([56], m)
+    cc = [ChunkCost(chunk=8, compile_us=m("chunk", 8).compile_us,
+                    step_us=m("chunk", 8).step_us)]
+    reqs = [57] * 20                    # enough to amortize the chunk
+    dense = solve(reqs, bc, cc, cache_len=64, vis_tokens=0)
+    vlm = solve(reqs, bc, cc, cache_len=64, vis_tokens=16)
+    assert dense.chunk == 8             # 56 chunked rows fit 64
+    assert vlm.chunk == 0               # 16 + 56 > 64: engine would
+    assert vlm.levels == [56]           # one-shot it, so must the model
+
+
+def test_first_chunk_prefill_trace_dedupes_against_hit_bucket():
+    """The engine's first chunk runs through the ordinary prefill
+    program at (1, chunk); when unchunked requests also hit that
+    bucket level the jit cache dedupes the trace, so the solver must
+    count ONE prefill program, not two — and when nothing else hits
+    it, the extra trace (and its overhead) must be charged."""
+    m = synthetic_measure(compile_us=50.0, step_per_tok=10.0,
+                          chunk_overhead=0.5)
+    bc = _costs([8, 64], m)
+    cc = [ChunkCost(chunk=8, compile_us=m("chunk", 8).compile_us,
+                    step_us=m("chunk", 8).step_us)]
+    # short requests hit level 8; long ones chunk with chunk=8:
+    # the (1, 8) prefill trace is shared -> 1 prefill program total
+    shared = solve([5] * 10 + [41] * 10, bc, cc, cache_len=64)
+    assert shared.chunk == 8 and shared.levels == [8]
+    assert shared.predicted_compiles == 1
+    # all requests chunk: the first-chunk trace is the ONLY prefill
+    # program, and its trace overhead is in the objective
+    alone = solve([41] * 10, bc, cc, cache_len=64)
+    assert alone.chunk == 8
+    assert alone.predicted_compiles == 1
+    first = next(c for c in bc if c.length == 8)
+    cc8 = cc[0]
+    want = (10 * (first.step_us + 4 * cc8.step_us)
+            + cc8.trace_overhead_us + first.trace_overhead_us)
+    assert alone.expected_us == pytest.approx(want)
+
+
+def test_explicit_candidates_beyond_room_fail_loudly():
+    """Candidate levels the engine could never use (over the cache
+    room) must raise, not silently produce an unusable profile."""
+    class VlmCfg:
+        family = "vlm"
+        arch_id = "v"
+        vocab = 8
+        n_vision_tokens = 48
+
+    class VlmBundle:
+        cfg = VlmCfg()
+
+    with pytest.raises(ValueError, match="cache room"):
+        calibrate(VlmBundle(), None, LENGTHS, cache_len=64,
+                  candidate_levels=(32, 64),    # room is only 16
+                  measure=synthetic_measure())
+
+
+def test_infeasible_bound_is_flagged_not_hidden():
+    m = synthetic_measure(compile_us=0.0, step_per_tok=10.0)
+    r = solve([41], _costs([64], m), [], cache_len=64,
+              max_dispatch_us=1.0)
+    assert not r.feasible               # least-bad config, loud flag
+
+
+def test_default_comparison_is_priced_from_measurements():
+    """default_expected_us must count EVERY request at the default
+    table's measured level — the default pow2 levels this workload
+    hits are measured even when the solver's explicit candidates skip
+    them (and they stay out of the solved table)."""
+    p = calibrate(_Bundle(), None, [25] * 4, cache_len=64, seed=0,
+                  candidate_levels=(40, 64),
+                  measure=synthetic_measure(compile_us=2000.0,
+                                            step_per_tok=2.0))
+    # default: plen 24 -> pow2 level 32 (measured: step 64, trace 2000)
+    assert 32 in {c.length for c in p.bucket_costs}
+    assert p.default_expected_us == pytest.approx(4 * 64.0 + 2000.0)
+    # ...but 32 was never offered to the solver
+    assert all(l in (40, 64) for l in p.bucket_levels)
+
+
+def test_calibrate_keeps_a_capacity_guard_level():
+    """A prompt longer than anything in the calibration workload must
+    still bucket (one compile), not silently fall back to exact-length
+    retrace-per-length: the solved table always keeps its largest
+    measured candidate as a guard level."""
+    p = calibrate(_Bundle(), None, [9] * 10, cache_len=64, seed=0,
+                  candidate_levels=(8, 16, 64),
+                  measure=synthetic_measure(compile_us=1e6))
+    assert p.bucket_levels[-1] == 64    # guard, even though the
+    t = p.bucket_table()                # workload never needs it
+    assert t.fit(63) == 64
+    # the guard is free: only the workload's hit level is predicted
+    assert p.predicted_compiles == 1
+
+
+def test_default_measurer_builds_vlm_prefill_batches():
+    """calibrate() admits vlm (it is a BUCKETED family), so the
+    default EngineMeasurer must synthesize the vision prefix a vlm
+    prefill batch requires instead of KeyError-ing on it."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import get_model
+    cfg = get_config("paligemma-3b", reduced=True)
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    p = calibrate(bundle, params, [6] * 4, cache_len=64, seed=0,
+                  candidate_levels=(8,), chunk_candidates=(), iters=1)
+    assert p.model_key == profile_model_key(cfg, 64)
+    assert p.bucket_levels == [8]
+    assert all(c.step_us > 0 for c in p.bucket_costs)
+
+
+def test_single_token_prompts_need_no_calibration():
+    with pytest.raises(ValueError, match="multi-token"):
+        calibrate(_Bundle(), None, [1, 1], cache_len=64,
+                  measure=synthetic_measure())
+
+
+# ---------------------------------------------------------------------------
+# engine / host plumbing: profile in, defaults as fallback
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import get_model
+    cfg = get_config("qwen3-32b", reduced=True)
+    bundle = get_model(cfg)
+    return bundle, bundle.init(jax.random.PRNGKey(0))
+
+
+def _profile_for(bundle, **kw):
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("measure", synthetic_measure())
+    kw.setdefault("candidate_levels", (8, 16, 40, 64))
+    return calibrate(bundle, None, LENGTHS, **kw)
+
+
+def test_from_profile_configures_the_engine(lm, tmp_path):
+    """save → load → from_profile lands the exact solved config on the
+    engine: same table (bit-identical levels), same chunk size."""
+    from repro.serving import ServingEngine
+    bundle, params = lm
+    prof = _profile_for(bundle)
+    loaded = CalibrationProfile.load(
+        prof.save(str(tmp_path / "p.json")))
+    eng = ServingEngine.from_profile(bundle, params, loaded,
+                                     max_slots=2)
+    assert eng.cache_len == prof.cache_len
+    assert eng.bucket_table == prof.bucket_table()
+    assert eng.bucket_table.levels == prof.bucket_levels
+    assert eng.chunk_tokens == prof.prefill_chunk
+    # explicit overrides beat the profile
+    eng2 = ServingEngine.from_profile(bundle, params, loaded,
+                                      max_slots=2,
+                                      prefill_buckets=False)
+    assert eng2.bucket_table is None
+
+
+def test_from_profile_rejects_foreign_model(lm):
+    from repro.serving import ServingEngine
+    bundle, params = lm
+    prof = _profile_for(bundle)
+    prof.model_key = "dense/someone-else/L64"
+    with pytest.raises(ValueError, match="calibrated for"):
+        ServingEngine.from_profile(bundle, params, prof, max_slots=2)
+    # a different cache_len is a different cost landscape too
+    prof2 = _profile_for(bundle)
+    with pytest.raises(ValueError, match="calibrated for"):
+        ServingEngine.from_profile(bundle, params, prof2, max_slots=2,
+                                   cache_len=32)
+
+
+def test_from_profile_rejects_foreign_backend(lm):
+    """Costs are hardware facts: a profile measured on another backend
+    is refused like a foreign model_key."""
+    from repro.serving import ServingEngine
+    bundle, params = lm
+    prof = _profile_for(bundle)
+    assert prof.matches_backend()       # stamped with the live backend
+    prof.meta["backend"] = "tpu"
+    assert not prof.matches_backend()
+    with pytest.raises(ValueError, match="backend"):
+        ServingEngine.from_profile(bundle, params, prof, max_slots=2)
+
+
+def test_no_profile_fallback_is_todays_default(lm):
+    """Without a profile nothing changes: the engine auto-builds the
+    hand-picked pow2 ladder, chunking stays off, and the host hands
+    every tenant the shared default table."""
+    from repro.serving import MultiTenantHost, ServingEngine
+    bundle, params = lm
+    eng = ServingEngine(bundle, params, max_slots=2, cache_len=64)
+    assert eng.bucket_table == BucketTable(min_bucket=8, max_bucket=64)
+    assert eng.chunk_tokens == 0
+    host = MultiTenantHost(arena_bytes=64 << 20)
+    assert host.profile is None
+    heng = host.add_model("lm", bundle, params, cache_len=64)
+    assert heng.bucket_table is host.prompt_buckets
+    assert heng.bucket_table == BucketTable(min_bucket=8,
+                                            max_bucket=4096)
+    assert heng.chunk_tokens == 0
+
+
+def test_host_shares_one_profile_across_tenants(lm):
+    from repro.serving import MultiTenantHost
+    bundle, params = lm
+    prof = _profile_for(bundle)
+    host = MultiTenantHost(arena_bytes=128 << 20, profile=prof)
+    a = host.add_model("a", bundle, params, cache_len=64)
+    b = host.add_model("b", bundle, params, cache_len=64)
+    assert a.bucket_table is host.prompt_buckets
+    assert b.bucket_table is host.prompt_buckets      # ONE shared table
+    assert a.bucket_table == prof.bucket_table()
+    assert a.chunk_tokens == prof.prefill_chunk
+    assert b.chunk_tokens == prof.prefill_chunk
+
+
+@pytest.mark.slow
+def test_real_calibration_beats_defaults_and_stays_bit_identical(lm):
+    """The acceptance loop end to end with REAL measurements: the
+    autotuned engine traces fewer prefill programs than the default on
+    a clustered length mix, with bit-identical decoded tokens."""
+    from repro.serving import Request, ServingEngine
+    bundle, params = lm
+    lengths = [5] * 6 + [7] * 4 + [9] * 4 + [41] * 2
+    prof = calibrate(bundle, params, lengths, cache_len=64, seed=0,
+                     candidate_levels=(8, 16, 40, 64),
+                     chunk_candidates=(0, 8))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, bundle.cfg.vocab - 2, L).astype(np.int32)
+               for L in lengths]
+
+    def run(eng):
+        for uid, toks in enumerate(prompts):
+            eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=3))
+        eng.run()
+        return {u: r.output for u, r in eng.results.items()}
+
+    default = ServingEngine(bundle, params, max_slots=2, cache_len=64)
+    tuned = ServingEngine.from_profile(bundle, params, prof,
+                                       max_slots=2)
+    out_default = run(default)
+    out_tuned = run(tuned)
+    assert out_tuned == out_default                   # bit-identical
+    assert tuned.prefill_compiles() < default.prefill_compiles()
+    assert tuned.prefill_compiles() == prof.predicted_compiles

@@ -1,0 +1,133 @@
+"""Bench-result lint: schema-validate every committed benchmark result
+file so a broken ``save_result`` (or a hand-edited artifact) can never
+land silently.
+
+Every ``benchmarks/results/BENCH_*.json`` must be the layout
+``benchmarks.common.save_result`` writes:
+
+  * a top-level object with exactly a ``meta`` block and a ``rows``
+    list;
+  * ``meta`` carries the uniform metadata block — ``schema`` (a
+    version this linter understands), ``jax``, ``backend``, ``seed``,
+    and ``created_utc`` (wall clock, informational: present but
+    exempt from comparisons, per ``benchmarks.common.COMPARABLE_META``);
+  * ``rows`` is a non-empty list of flat objects whose values are
+    strings, booleans, null, or FINITE numbers — a NaN or Infinity
+    that sneaks into a percentile is a measurement bug, and JSON
+    emitters that tolerate them produce files other parsers reject.
+
+Like ``tools/check_docs.py`` this is pure-filesystem (nothing is
+imported from the package), runs from the fast test tier
+(tests/test_bench_lint.py) and from CI, and exits 1 on any violation.
+
+Usage::
+
+    python tools/check_bench.py           # lint, exit 1 on violations
+    python tools/check_bench.py --list    # print the files scanned
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+RESULTS_DIR = "benchmarks/results"
+# accepted layout versions (benchmarks.common.RESULT_SCHEMA values)
+KNOWN_SCHEMAS = (1,)
+# the uniform metadata block save_result stamps
+REQUIRED_META = ("schema", "jax", "backend", "seed", "created_utc")
+
+Violation = Tuple[str, str]
+
+
+def result_files(root: Path = REPO_ROOT) -> List[Path]:
+    """The committed result files the lint covers, sorted."""
+    return sorted((root / RESULTS_DIR).glob("BENCH_*.json"))
+
+
+def _check_scalar(key: str, value: object) -> List[str]:
+    if isinstance(value, bool) or value is None:
+        return []
+    if isinstance(value, (int, float)):
+        if not math.isfinite(value):
+            return [f"row value {key!r} is non-finite ({value!r})"]
+        return []
+    if isinstance(value, str):
+        return []
+    return [f"row value {key!r} has unsupported type "
+            f"{type(value).__name__} (rows must stay flat scalars)"]
+
+
+def check_result(path: Path, root: Path = REPO_ROOT) -> List[Violation]:
+    """All schema violations in one result file."""
+    rel = str(path.relative_to(root))
+    try:
+        data = json.loads(path.read_text())
+    except ValueError as e:
+        return [(rel, f"invalid JSON: {e}")]
+    out: List[Violation] = []
+    if not isinstance(data, dict) or set(data) != {"meta", "rows"}:
+        return [(rel, "top level must be an object with exactly "
+                      "{'meta', 'rows'} (the save_result layout)")]
+    meta, rows = data["meta"], data["rows"]
+    if not isinstance(meta, dict):
+        out.append((rel, "meta must be an object"))
+    else:
+        for key in REQUIRED_META:
+            if key not in meta:
+                out.append((rel, f"meta lacks required key {key!r}"))
+        if meta.get("schema") not in KNOWN_SCHEMAS:
+            out.append((rel, f"meta.schema {meta.get('schema')!r} is "
+                             f"not a known layout {KNOWN_SCHEMAS}"))
+        for key in ("jax", "backend"):
+            if key in meta and not isinstance(meta[key], str):
+                out.append((rel, f"meta.{key} must be a string"))
+    if not isinstance(rows, list) or not rows:
+        out.append((rel, "rows must be a non-empty list"))
+        return out
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or not row:
+            out.append((rel, f"rows[{i}] must be a non-empty object"))
+            continue
+        for key, value in row.items():
+            out.extend((rel, f"rows[{i}]: {msg}")
+                       for msg in _check_scalar(key, value))
+    return out
+
+
+def collect_violations(root: Path = REPO_ROOT) -> List[Violation]:
+    """All violations across every committed result file (plus one
+    when there are no result files at all — an empty results dir means
+    the benchmarks stopped persisting, which is itself a failure)."""
+    files = result_files(root)
+    if not files:
+        return [(RESULTS_DIR, "no BENCH_*.json result files found")]
+    out: List[Violation] = []
+    for path in files:
+        out.extend(check_result(path, root))
+    return out
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--list" in argv:
+        for path in result_files():
+            print(path.relative_to(REPO_ROOT))
+        return 0
+    violations = collect_violations()
+    for rel, msg in violations:
+        print(f"{rel}: {msg}")
+    if violations:
+        print(f"\n{len(violations)} bench-result violation(s); the "
+              f"expected layout is documented in benchmarks/common.py")
+        return 1
+    print(f"bench lint OK ({len(result_files())} result files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,7 @@
 """Docs lint: every public class (and module) in ``repro.core``,
-``repro.serving`` (including the scheduling policies), and
-``benchmarks/`` must carry a docstring, and every benchmark artifact
-the docs mention must exist.
+``repro.serving`` (including the scheduling policies),
+``benchmarks/``, and ``tools/`` must carry a docstring, and every
+benchmark artifact the docs mention must exist.
 
 The architecture and scheduling guides (docs/ARCHITECTURE.md,
 docs/SCHEDULING.md) point readers at defining classes and at committed
@@ -45,7 +45,8 @@ from pathlib import Path
 from typing import Iterator, List, Tuple
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-LINTED_PACKAGES = ("src/repro/core", "src/repro/serving", "benchmarks")
+LINTED_PACKAGES = ("src/repro/core", "src/repro/serving", "benchmarks",
+                   "tools")
 # files whose public-class METHODS must also carry docstrings (the
 # scheduling/preemption policy vocabulary — key()/victim() semantics)
 METHOD_LINTED = ("src/repro/serving/scheduling.py",)
