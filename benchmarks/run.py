@@ -10,6 +10,9 @@
   preemption             heavy-tail mix: EDF alone vs EDF + preemptible
                          lanes, and the pod engine with preemption +
                          chunked prefill (docs/PREEMPTION.md)
+  paged_kv               paged KV pool vs contiguous slabs at the same
+                         HBM budget: peak occupancy + token
+                         bit-identity (docs/ARCHITECTURE.md §8)
   autotune               calibration-driven bucket/chunk config vs the
                          hand-picked defaults: compile counts + p95
                          arrival-process latency (docs/SCHEDULING.md)
@@ -49,6 +52,7 @@ def main(argv=None) -> None:
         "ragged_invoke": ragged_invoke.run,
         "arrival_process": arrival_process.run,
         "preemption": arrival_process.run_preempt,
+        "paged_kv": arrival_process.run_paged,
         "autotune": autotune.run,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,

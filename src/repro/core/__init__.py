@@ -4,14 +4,17 @@ arena, memory planner, op resolver, quantization, and export toolchain."""
 from . import micro_ops  # registers the reference kernels on import
 from . import quantize  # keep the module visible as repro.core.quantize
 from .arena import ArenaOverflowError, TwoStackArena
-from .costmodel import (BucketCost, CalibrationProfile, ChunkCost,
+from .costmodel import (BlockCost, BlockSolveResult, BucketCost,
+                        CalibrationProfile, ChunkCost, DecodeCost,
                         EngineMeasurer, SolveResult, calibrate,
-                        profile_model_key, solve)
+                        load_cached_profile, profile_cache_path,
+                        profile_model_key, save_cached_profile, solve,
+                        solve_block_size)
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
 from .executor import (AllocationPlan, ArenaPool, BucketTable,
                        CompiledPlan, InterpreterPool, LaneCheckpoint,
-                       LaneState,
+                       LaneState, PagedKVPool,
                        RaggedInterpreterPool, SharedArenaState,
                        jit_cache_size)
 from .graph_builder import GraphBuilder
@@ -32,7 +35,7 @@ __all__ = [
     "MicroInterpreter", "AllocationPlan", "ArenaPool", "BucketTable",
     "CompiledPlan", "InterpreterPool", "LaneCheckpoint",
     "LaneState",
-    "RaggedInterpreterPool", "jit_cache_size",
+    "PagedKVPool", "RaggedInterpreterPool", "jit_cache_size",
     "SharedArenaState", "BufferRequest", "GreedyMemoryPlanner",
     "LinearMemoryPlanner", "MemoryPlan", "OfflineMemoryPlanner",
     "AllOpsResolver", "MicroMutableOpResolver", "OpResolutionError",
@@ -40,5 +43,7 @@ __all__ = [
     "TensorFlags", "model_to_source", "serialize_model",
     "BucketCost", "CalibrationProfile", "ChunkCost", "EngineMeasurer",
     "SolveResult", "calibrate", "profile_model_key", "solve",
+    "BlockCost", "BlockSolveResult", "DecodeCost", "solve_block_size",
+    "load_cached_profile", "profile_cache_path", "save_cached_profile",
     "CompileStepTiming", "measure_compile_and_step",
 ]

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import pathlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -50,6 +51,11 @@ from .executor import BucketTable
 from .profiler import CompileStepTiming, measure_compile_and_step
 
 PROFILE_VERSION = 1
+
+# default on-disk location of the calibration-profile cache, keyed by
+# model_key: <repo>/benchmarks/results/profiles/<key with / -> __>.json
+DEFAULT_PROFILE_DIR = (pathlib.Path(__file__).resolve().parents[3]
+                       / "benchmarks" / "results" / "profiles")
 
 # default candidate chunk sizes offered to the solver (0 = chunking off)
 DEFAULT_CHUNK_CANDIDATES = (0, 8, 16)
@@ -107,11 +113,49 @@ class ChunkCost:
         return max(self.compile_us - self.step_us, 0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeCost:
+    """Measured cost of the fused decode step at ``slots`` concurrent
+    slots: ``step_us`` one warm batched dispatch (every active request
+    advances one token for this price), ``compile_us`` the cold first
+    dispatch — paid once per engine, since slot occupancy is a traced
+    value."""
+
+    slots: int
+    compile_us: float
+    step_us: float
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """The decode program's one-time trace cost."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCost:
+    """Measured cost of one candidate PAGED KV block size: ``step_us``
+    one warm paged decode dispatch with ``block``-row blocks (the
+    Pallas kernel's tile IS the block, so this is where a too-small
+    block shows up as per-tile overhead), ``compile_us`` the cold
+    first dispatch."""
+
+    block: int
+    compile_us: float
+    step_us: float
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """The paged decode program's one-time trace cost."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
 class EngineMeasurer:
     """The default ``measure`` hook: times the REAL compiled serving
     steps of a fresh engine — ``("prefill", L)`` runs the one-shot
     prefill at padded length L cold then warm, ``("chunk", C)`` runs
-    one chunked-prefill dispatch of C tokens.  Token values come from a
+    one chunked-prefill dispatch of C tokens, ``("decode", B)`` one
+    fused decode dispatch at B slots, ``("decode_paged", BS)`` one
+    paged decode dispatch at block size BS.  Token values come from a
     seeded rng (they cannot affect timing, only determinism of the
     recorded workload), and every call synchronizes on the result so
     async dispatch cannot leak device time out of the measurement."""
@@ -124,6 +168,7 @@ class EngineMeasurer:
         self.iters = int(iters)
         self.rng = np.random.default_rng(seed)
         self._engines: Dict[int, Any] = {}
+        self._aux_engines: Dict[Tuple[str, int], Any] = {}
 
     def _engine(self, chunk: int):
         # lazy import: serving sits above core in the layering
@@ -169,7 +214,49 @@ class EngineMeasurer:
                 lambda: eng._prefill_chunk(
                     (self.params, cache1, toks, jnp.int32(0))),
                 iters=self.iters)
+        if kind == "decode":
+            # one fused decode dispatch at `size` concurrent slots —
+            # half-full caches so masking work is representative
+            eng = self._aux(kind, int(size))
+            b = int(size)
+            cur = jnp.zeros((b, 1), jnp.int32)
+            lens = jnp.full((b,), self.cache_len // 2, jnp.int32)
+            return measure_compile_and_step(
+                lambda: eng._decode((self.params, eng.cache, cur, lens)),
+                iters=self.iters)
+        if kind == "decode_paged":
+            # one paged decode dispatch with `size`-row KV blocks; the
+            # engine's freshly-zeroed pool and garbage tables are fine
+            # here — timing depends on shapes, not on which blocks the
+            # tables point at
+            eng = self._aux(kind, int(size))
+            b = eng.max_slots
+            cur = jnp.zeros((b, 1), jnp.int32)
+            lens = jnp.full((b,), self.cache_len // 2, jnp.int32)
+            return measure_compile_and_step(
+                lambda: eng._decode((self.params, eng.kv_pool,
+                                     eng.block_tables, cur, lens)),
+                iters=self.iters)
         raise ValueError(f"unknown measurement kind {kind!r}")
+
+    def _aux(self, kind: str, size: int):
+        """Engines for the decode-side measurement kinds, keyed by
+        (kind, size): ``decode`` wants a contiguous engine at `size`
+        slots, ``decode_paged`` a 2-slot paged engine at block `size`."""
+        from repro.serving.engine import ServingEngine
+        eng = self._aux_engines.get((kind, size))
+        if eng is None:
+            if kind == "decode":
+                eng = ServingEngine(
+                    self.bundle, self.params, max_slots=size,
+                    cache_len=self.cache_len, prefill_buckets=False)
+            else:
+                eng = ServingEngine(
+                    self.bundle, self.params, max_slots=2,
+                    cache_len=self.cache_len, prefill_buckets=False,
+                    kv_block=size)
+            self._aux_engines[(kind, size)] = eng
+        return eng
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +430,72 @@ def solve(prompt_lengths: Sequence[int], bucket_costs: Sequence[BucketCost],
     return min(results, key=lambda r: (r.max_dispatch_us, r.expected_us))
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockSolveResult:
+    """What the block solver decided and why: the chosen ``block``
+    size, the expected ``admissible_slots`` the paged pool can hold at
+    the reference HBM budget (vs. ``contiguous_slots``, the same
+    budget spent on whole cache_len slabs), the ``mean_blocks`` a
+    workload request actually needs, and the measured warm paged
+    decode ``step_us`` at that block size (the tie-breaker)."""
+
+    block: int
+    admissible_slots: float
+    contiguous_slots: int
+    mean_blocks: float
+    step_us: float
+
+
+def solve_block_size(prompt_lengths: Sequence[int],
+                     block_costs: Sequence[BlockCost], *,
+                     cache_len: int, slots: int = 2,
+                     new_tokens: int = 16,
+                     vis_tokens: int = 0) -> BlockSolveResult:
+    """Choose the paged-KV block size for a workload: at a reference
+    HBM budget of ``slots`` contiguous cache_len slabs, a smaller
+    block admits more concurrent requests (less tail waste, finer
+    packing) but pays more per-tile kernel overhead (each block is one
+    Pallas tile) — so the solver maximizes expected admissible slots
+    and breaks ties on the MEASURED warm paged-decode step cost.
+
+    Per request the engine reserves ceil(min(vis + (len-1) +
+    new_tokens, cache_len) / block) blocks (``_blocks_needed``); one
+    pool block is the garbage sink and never allocatable.  Candidates
+    that do not divide ``cache_len`` are skipped (the engine requires
+    an integral table)."""
+    plens = np.array([max(int(l) - 1, 0) for l in prompt_lengths],
+                     dtype=np.int64)
+    plens = plens[plens >= 1]
+    if len(plens) == 0:
+        raise ValueError("prompt_lengths contains no multi-token "
+                         "prompt — nothing to solve block size for")
+    budget_rows = int(slots) * int(cache_len)
+    best: Optional[BlockSolveResult] = None
+    for c in sorted(block_costs, key=lambda c: c.block):
+        bs = int(c.block)
+        if bs <= 0 or cache_len % bs != 0:
+            continue
+        usable = budget_rows // bs - 1          # minus the garbage block
+        if usable <= 0:
+            continue
+        need_rows = np.minimum(vis_tokens + plens + new_tokens, cache_len)
+        need_blocks = -(-need_rows // bs)
+        mean_blocks = float(need_blocks.mean())
+        admissible = usable / mean_blocks
+        cand = BlockSolveResult(
+            block=bs, admissible_slots=round(admissible, 3),
+            contiguous_slots=int(slots), mean_blocks=round(mean_blocks, 3),
+            step_us=c.step_us)
+        if best is None or (cand.admissible_slots, -cand.step_us) > \
+                (best.admissible_slots, -best.step_us):
+            best = cand
+    if best is None:
+        raise ValueError(
+            f"no block candidate divides cache_len={cache_len} — offer "
+            f"divisor block sizes (e.g. powers of two up to cache_len)")
+    return best
+
+
 # ---------------------------------------------------------------------------
 # the profile (versioned JSON; measurements in, wall clock out)
 # ---------------------------------------------------------------------------
@@ -375,6 +528,13 @@ class CalibrationProfile:
     bucket_costs: List[BucketCost]
     chunk_costs: List[ChunkCost]
     meta: Dict[str, str]
+    # paged-KV extension (defaulted: version-1 profiles without these
+    # fields load unchanged — kv_block 0 means "paging not calibrated")
+    kv_block: int = 0
+    decode_costs: List[DecodeCost] = dataclasses.field(
+        default_factory=list)
+    block_costs: List[BlockCost] = dataclasses.field(
+        default_factory=list)
     version: int = PROFILE_VERSION
 
     def bucket_table(self) -> BucketTable:
@@ -418,6 +578,11 @@ class CalibrationProfile:
                 f"supported (expected {PROFILE_VERSION}); re-calibrate")
         d["bucket_costs"] = [BucketCost(**c) for c in d["bucket_costs"]]
         d["chunk_costs"] = [ChunkCost(**c) for c in d["chunk_costs"]]
+        d.setdefault("kv_block", 0)
+        d["decode_costs"] = [DecodeCost(**c)
+                             for c in d.get("decode_costs", [])]
+        d["block_costs"] = [BlockCost(**c)
+                            for c in d.get("block_costs", [])]
         return cls(**d)
 
     def save(self, path: str) -> str:
@@ -431,6 +596,42 @@ class CalibrationProfile:
         """Read a profile written by ``save``."""
         with open(path) as f:
             return cls.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# the on-disk profile cache (keyed by model_key)
+# ---------------------------------------------------------------------------
+
+def profile_cache_path(model_key: str,
+                       cache_dir: Optional[Any] = None) -> str:
+    """Where the cached profile for ``model_key`` lives: one JSON per
+    key under ``benchmarks/results/profiles/`` (slashes flattened so
+    the key stays a single filename)."""
+    base = pathlib.Path(cache_dir) if cache_dir is not None \
+        else DEFAULT_PROFILE_DIR
+    return str(base / (model_key.replace("/", "__") + ".json"))
+
+
+def save_cached_profile(profile: CalibrationProfile,
+                        cache_dir: Optional[Any] = None) -> str:
+    """Persist ``profile`` into the cache at its ``model_key`` slot
+    (creating the cache directory if needed); returns the path."""
+    path = profile_cache_path(profile.model_key, cache_dir)
+    pathlib.Path(path).parent.mkdir(parents=True, exist_ok=True)
+    return profile.save(path)
+
+
+def load_cached_profile(model_key: str,
+                        cache_dir: Optional[Any] = None
+                        ) -> Optional[CalibrationProfile]:
+    """The cached profile for ``model_key``, or None when absent —
+    absence is the normal cold-cache case, so no exception.  A present
+    but unreadable/foreign-version file DOES raise: silent fallback
+    would hide a corrupted cache."""
+    path = profile_cache_path(model_key, cache_dir)
+    if not pathlib.Path(path).exists():
+        return None
+    return CalibrationProfile.load(path)
 
 
 def _candidate_levels(plens: np.ndarray, cache_len: int,
@@ -475,6 +676,9 @@ def calibrate(bundle: Any, params: Any,
               chunk_candidates: Sequence[int] = DEFAULT_CHUNK_CANDIDATES,
               max_dispatch_us: Optional[float] = None,
               iters: int = 5,
+              decode_slots: Sequence[int] = (),
+              block_candidates: Sequence[int] = (),
+              new_tokens: int = 16,
               measure: Optional[Callable[[str, int],
                                          CompileStepTiming]] = None
               ) -> CalibrationProfile:
@@ -491,7 +695,18 @@ def calibrate(bundle: Any, params: Any,
     ``max_dispatch_us`` bounds how long any single prefill dispatch
     may monopolize the engine (the head-of-line knob chunking exists
     for); ``measure`` injection makes the pass exactly reproducible
-    (see the module docstring's determinism contract)."""
+    (see the module docstring's determinism contract).
+
+    The decode side is opt-in (both default empty, so injected
+    measurement hooks written for the prefill-only contract keep
+    working): ``decode_slots`` prices the fused decode step at each
+    slot count (``("decode", B)``), and ``block_candidates`` prices
+    the PAGED decode step at each block size (``("decode_paged",
+    BS)``) then solves for the block size maximizing admissible
+    concurrent slots at a reference HBM budget (``solve_block_size``
+    with ``new_tokens`` reserved per request) — the solved size lands
+    in ``profile.kv_block`` and ``ServingEngine.from_profile`` turns
+    it on."""
     plens = np.array([max(int(l) - 1, 0) for l in prompt_lengths],
                      dtype=np.int64)
     plens = plens[plens >= 1]
@@ -540,6 +755,24 @@ def calibrate(bundle: Any, params: Any,
         t = measure("chunk", C)
         chunk_costs.append(ChunkCost(chunk=C, compile_us=t.compile_us,
                                      step_us=t.step_us))
+    decode_costs = []
+    for B in sorted({int(b) for b in decode_slots if int(b) >= 1}):
+        t = measure("decode", B)
+        decode_costs.append(DecodeCost(slots=B, compile_us=t.compile_us,
+                                       step_us=t.step_us))
+    block_costs = []
+    for BS in sorted({int(b) for b in block_candidates
+                      if int(b) >= 1 and cache_len % int(b) == 0}):
+        t = measure("decode_paged", BS)
+        block_costs.append(BlockCost(block=BS, compile_us=t.compile_us,
+                                     step_us=t.step_us))
+    kv_block = 0
+    if block_costs:
+        ref_slots = max(decode_slots) if decode_slots else 2
+        kv_block = solve_block_size(
+            prompt_lengths, block_costs, cache_len=cache_len,
+            slots=ref_slots, new_tokens=new_tokens,
+            vis_tokens=vis).block
     solver_costs = [c for c in bucket_costs if c.length in set(cands)]
     best = solve(prompt_lengths, solver_costs, chunk_costs,
                  cache_len=cache_len, max_dispatch_us=max_dispatch_us,
@@ -593,4 +826,6 @@ def calibrate(bundle: Any, params: Any,
         prompt_lengths=[int(x) for x in prompt_lengths],
         bucket_costs=bucket_costs, chunk_costs=chunk_costs,
         meta={"jax": jax.__version__,
-              "backend": jax.default_backend()})
+              "backend": jax.default_backend()},
+        kv_block=int(kv_block),
+        decode_costs=decode_costs, block_costs=block_costs)

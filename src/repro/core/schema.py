@@ -134,6 +134,10 @@ class OpCode:
     SERVING_PREFILL = 41
     SERVING_DECODE = 42
     SERVING_PREFILL_CHUNK = 43
+    # paged-KV variants: same macro-ops over a physical block pool and
+    # per-slot block tables instead of contiguous per-slot cache rows
+    SERVING_DECODE_PAGED = 44
+    SERVING_PREFILL_CHUNK_PAGED = 45
 
 
 # Pod-scale macro-ops: resolvable through the tag chain but never part
@@ -141,7 +145,9 @@ class OpCode:
 # distort the Table-2 code-size accounting depending on import order).
 SERVING_OPCODES = frozenset({OpCode.SERVING_PREFILL,
                              OpCode.SERVING_DECODE,
-                             OpCode.SERVING_PREFILL_CHUNK})
+                             OpCode.SERVING_PREFILL_CHUNK,
+                             OpCode.SERVING_DECODE_PAGED,
+                             OpCode.SERVING_PREFILL_CHUNK_PAGED})
 
 
 OP_NAMES = {v: k for k, v in vars(OpCode).items() if not k.startswith("_")}

@@ -26,7 +26,8 @@ from repro.core import quantize as Q
 from repro.core.op_resolver import PrepareResult, register_op
 from repro.core.schema import OpCode
 
-from .decode_attention import decode_attention_pallas
+from .decode_attention import (decode_attention_pallas,
+                               paged_decode_attention_pallas)
 from .flash_attention import flash_attention_pallas
 from .quant_matmul import quant_matmul_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -103,6 +104,19 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
                                    jnp.asarray(lengths, jnp.int32),
                                    window=window, scale=scale, bk=bk,
                                    interpret=interpret)
+
+
+def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = INTERPRET):
+    """Block-table decode attention: pools (P,KH,BS,D), tables (B,T).
+    The kernel tile IS the KV block, so no block-size picking here —
+    the pool's block size (chosen by the cost-model solver) decides."""
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, jnp.asarray(tables, jnp.int32),
+        jnp.asarray(lengths, jnp.int32), window=window, scale=scale,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -215,3 +229,36 @@ class PallasServingDecode:
         # kernel must too — tag choice may never change semantics
         return lm.lm_decode(params, ctx.bundle.cfg, cache, tokens,
                             lengths, attn_impl=decode_attention)
+
+
+@register_op(OpCode.SERVING_DECODE_PAGED, tag="pallas")
+class PallasServingDecodePaged:
+    """Optimized paged decode step: per-layer attention walks the slot's
+    block table with the scalar-prefetch Pallas kernel for dense-KV
+    transformer families (dense/moe).  The vlm family shares the same
+    paged model step but keeps reference attention (as on the
+    contiguous path), with the embed scale baked at prepare time."""
+
+    @staticmethod
+    def prepare(ctx, op):
+        import math as _math
+        cfg = ctx.bundle.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"paged KV requires a dense (KH, C, dh) cache layout; "
+                f"family {cfg.family!r} is not supported")
+        scale = _math.sqrt(cfg.d_model) if cfg.family == "vlm" else None
+        use_kernel = cfg.family in ("dense", "moe")
+        return PrepareResult(output_specs=[],
+                             op_data={"use_kernel": use_kernel,
+                                      "embed_scale": scale})
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        params, pool, tables, tokens, lengths = inputs
+        from repro.models import lm
+        impl = paged_decode_attention if ctx.op_data["use_kernel"] else None
+        return lm.lm_decode_paged(params, ctx.bundle.cfg, pool, tables,
+                                  tokens, lengths,
+                                  embed_scale=ctx.op_data["embed_scale"],
+                                  attn_impl=impl)

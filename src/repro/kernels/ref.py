@@ -103,6 +103,32 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
                       vx.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, tables: jnp.ndarray,
+                               lengths: jnp.ndarray,
+                               window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged twin of :func:`decode_attention_ref`.
+
+    q: (B, H, D); pools: (P, KH, BS, D) — the shared physical block
+    pool; tables: (B, T) int32 physical block ids in logical order
+    (T*BS = logical cache length, unmapped tail entries point at the
+    pool's garbage block 0); lengths: (B,) valid entries.
+
+    Gathers each row's blocks back to a contiguous (B, KH, T*BS, D)
+    view and delegates to the contiguous oracle, so a paged cache whose
+    gathered view equals a contiguous cache produces bit-identical
+    output (garbage-block rows sit past ``lengths`` and get exactly
+    zero softmax weight).
+    """
+    _, kh, bs, d = k_pool.shape
+    b, t = tables.shape
+    kc = k_pool[tables].transpose(0, 2, 1, 3, 4).reshape(b, kh, t * bs, d)
+    vc = v_pool[tables].transpose(0, 2, 1, 3, 4).reshape(b, kh, t * bs, d)
+    return decode_attention_ref(q, kc, vc, lengths,
+                                window=window, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD (state-space duality) — sequential oracle
 # ---------------------------------------------------------------------------

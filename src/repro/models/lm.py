@@ -271,6 +271,157 @@ def decode_attention_block(p: Params, cfg: ModelConfig, x, cache_k, cache_v,
 
 
 # ---------------------------------------------------------------------------
+# decode attention — paged KV (block pool + per-slot block table)
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention_block(p: Params, cfg: ModelConfig, x,
+                                 pool_k, pool_v, tables, lengths,
+                                 attn_impl=None
+                                 ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                            jnp.ndarray]:
+    """Paged twin of ``decode_attention_block``: the slot's KV rows
+    live scattered across a shared physical block pool instead of one
+    contiguous ring.
+
+    x (B,1,D); pool_k/pool_v (P,KH,BS,dh) — ONE layer's physical
+    blocks; tables (B,T) int32 physical block ids in logical order
+    (T*BS = the slot's logical ring capacity, entry 0 = the pool's
+    garbage block for unmapped tail entries); lengths (B,) absolute
+    positions.  Returns (out (B,1,D), new_pool_k, new_pool_v).
+
+    The new token's K/V land at logical ring position ``lengths % c``
+    → physical ``(tables[b, pos // BS], pos % BS)`` — a scatter, which
+    is value-identical to the contiguous path's one-hot multiply-add
+    (an IEEE ``k*1 + cache*0`` is exactly ``k``/``cache``).  The
+    reference attention gathers the table back to a contiguous
+    (B,KH,c,dh) view and runs the EXACT einsum/mask/softmax sequence
+    of the contiguous block, so decoded values are bit-identical;
+    ``attn_impl`` (the vendor-kernel hook, §4.8) instead receives the
+    pool + table and walks blocks natively:
+    ``attn_impl(q (B,H,dh), pool_k, pool_v, tables, n_valid)``."""
+    b = x.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    g = h // kh
+    bs = pool_k.shape[2]
+    t = tables.shape[1]
+    c = t * bs
+    q, k, v = _proj_qkv(p, cfg, x, lengths[:, None])
+    pos = (lengths % c).astype(jnp.int32)
+    phys = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    # duplicate phys ids only ever collide on the garbage block (active
+    # slots own disjoint blocks), so last-write-wins is harmless there
+    pool_k = pool_k.at[phys, :, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, :, off].set(v[:, 0].astype(pool_v.dtype))
+    n_valid = jnp.minimum(lengths + 1, c)
+    if attn_impl is not None:
+        out = attn_impl(q[:, 0], pool_k, pool_v, tables,
+                        n_valid).reshape(b, 1, h, dh)
+    else:
+        kc = pool_k[tables].transpose(0, 2, 1, 3, 4).reshape(b, kh, c, dh)
+        vc = pool_v[tables].transpose(0, 2, 1, 3, 4).reshape(b, kh, c, dh)
+        qg = q[:, 0].reshape(b, kh, g, dh)
+        scale = 1.0 / math.sqrt(dh)
+        logits = jnp.einsum("bkgd,bkcd->bkgc", qg, kc,
+                            preferred_element_type=jnp.float32) * scale
+        posc = jnp.arange(c)[None, None, None, :]
+        valid = posc < n_valid[:, None, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgc,bkcd->bkgd", w, vc).reshape(b, 1, h, dh)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+    return y, pool_k, pool_v
+
+
+def lm_decode_paged(params: Params, cfg: ModelConfig, pool: Dict,
+                    tables, tokens, lengths, *, data_shards: int = 16,
+                    embed_scale: Optional[float] = None, attn_impl=None):
+    """One decode step over the paged KV pool.  tokens (B,1); lengths
+    (B,); tables (B,T) int32; pool {k,v}: (L,P,KH,BS,dh).  Returns
+    (logits (B,V), new_pool).  The block tables and lengths are traced
+    arguments — mapping/unmapping blocks (slot growth, admission,
+    retirement, checkpoint restore) changes VALUES only, so this
+    program is traced exactly once per engine (the compile-once
+    discipline of the lane masks, applied to KV placement)."""
+    x = embed_tokens(params, cfg, tokens)
+    if embed_scale is not None:
+        x = x * jnp.asarray(embed_scale, x.dtype)
+    i0 = 0
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        xin = rms_norm(x, fb["ln1"], cfg.norm_eps)
+        att, kc, vc = paged_decode_attention_block(
+            fb["attn"], cfg, xin, pool["k"][0], pool["v"][0],
+            tables, lengths, attn_impl=attn_impl)
+        h = x + att
+        hin = rms_norm(h, fb["ln2"], cfg.norm_eps)
+        x = h + mlp_block(fb["mlp"], cfg, hin)
+        first_kv = (kc, vc)
+        i0 = 1
+
+    def body(h, layer_in):
+        p_l, pk, pv = layer_in
+        xin = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+        att, kc, vc = paged_decode_attention_block(
+            p_l["attn"], cfg, xin, pk, pv, tables, lengths,
+            attn_impl=attn_impl)
+        hh = h + att
+        hin = rms_norm(hh, p_l["ln2"], cfg.norm_eps)
+        if "moe" in p_l:
+            y, _ = moe_block(p_l["moe"], cfg, hin, data_shards)
+        else:
+            y = mlp_block(p_l["mlp"], cfg, hin)
+        return hh + y, (kc, vc)
+
+    x, (ks_, vs_) = jax.lax.scan(body, x,
+                                 (params["blocks"], pool["k"][i0:],
+                                  pool["v"][i0:]))
+    if i0:
+        ks_ = jnp.concatenate([first_kv[0][None], ks_])
+        vs_ = jnp.concatenate([first_kv[1][None], vs_])
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, {"k": ks_, "v": vs_}
+
+
+def lm_prefill_chunk_paged(params: Params, cfg: ModelConfig, pool: Dict,
+                           table_row, tokens, start, *,
+                           window: Optional[int] = None,
+                           embed_scale: Optional[float] = None,
+                           data_shards: int = 16) -> Dict:
+    """Paged twin of ``lm_prefill_chunk``: gather ONE slot's blocks to
+    a contiguous batch=1 cache, run the exact contiguous chunk math,
+    and scatter the result back into the pool.
+
+    table_row (T,) int32 is the slot's block table; ``start`` stays a
+    traced scalar and the gather/scatter indices are traced values, so
+    one compiled program serves every chunk of every slot whatever
+    blocks it holds.  Unmapped trailing entries point at the garbage
+    block: the gather reads garbage rows the chunk's causal mask never
+    attends (positions beyond ``start + S``), and the scatter writes
+    them back to the garbage block where nothing reads them."""
+    bs = pool["k"].shape[3]
+    t = table_row.shape[0]
+
+    def gather(p):                       # (L,P,KH,BS,dh) -> (L,1,KH,C,dh)
+        l, _, kh, _, dh = p.shape
+        one = p[:, table_row].transpose(0, 2, 1, 3, 4)
+        return one.reshape(l, kh, t * bs, dh)[:, None]
+
+    cache1 = {"k": gather(pool["k"]), "v": gather(pool["v"])}
+    cache1 = lm_prefill_chunk(params, cfg, cache1, tokens, start,
+                              window=window, embed_scale=embed_scale,
+                              data_shards=data_shards)
+
+    def scatter(p, one):                 # inverse of gather
+        l, _, kh, _, dh = p.shape
+        src = one[:, 0].reshape(l, kh, t, bs, dh).transpose(0, 2, 1, 3, 4)
+        return p.at[:, table_row].set(src.astype(p.dtype))
+
+    return {"k": scatter(pool["k"], cache1["k"]),
+            "v": scatter(pool["v"], cache1["v"])}
+
+
+# ---------------------------------------------------------------------------
 # FFN — dense (SwiGLU / GELU)
 # ---------------------------------------------------------------------------
 

@@ -69,6 +69,25 @@ docs/PREEMPTION.md):
     bit-identical (decode is a pure function of the restored state)
     and, like every scheduling decision, touches no traced value — so
     preempt/resume cycles never recompile.
+
+A fifth degree of freedom changes the KV layout itself
+(docs/ARCHITECTURE.md §8):
+
+  * **paged KV** (``kv_block=``) — instead of one contiguous
+    ``cache_len`` ring per slot, KV lives in fixed-size blocks inside
+    a shared physical pool sized independently of ``max_slots``
+    (``kv_pool_blocks=``), and each slot holds a row of a traced
+    ``(max_slots, cache_len // kv_block)`` block table.  Slots map
+    blocks ON DEMAND as they decode (a two-phase reserve/map contract
+    on ``PagedKVPool`` makes mid-decode growth infallible), so
+    admission is bounded by blocks actually in use, not worst-case
+    slot length — more concurrent sequences at the same HBM budget.
+    Checkpoint/restore becomes a block-table handoff: evicting a slot
+    moves its block IDS into the checkpoint and zeroes its table row;
+    restoring writes them into the new slot's row — no KV rows are
+    copied either way, and since the table is a traced argument,
+    admit/retire/grow/restore never recompile.  Gated to families
+    with the dense (KH, C, dh) ring layout (dense/moe/vlm).
 """
 
 from __future__ import annotations
@@ -83,7 +102,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
-from repro.core.executor import BucketTable
+from repro.core.executor import BucketTable, PagedKVPool
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import OpCode, OpDef
 from repro.kernels import ops as _vendor_kernels  # registers tag="pallas"
@@ -157,7 +176,14 @@ class SlotCheckpoint:
     checkpoints a chunked prefill in flight (its batch=1 cache and how
     many prompt tokens it has integrated).  Values are np copies: a
     checkpoint pins host memory only, never a device buffer, and
-    nothing traced is captured — restore can never recompile."""
+    nothing traced is captured — restore can never recompile.
+
+    On a PAGED engine (``kv_block=``) the checkpoint carries no KV at
+    all: ``cache`` is None and ``blocks`` pins the slot's physical
+    block ids (plus its unspent worst-case ``reserved`` count) — the
+    KV rows stay in the shared pool untouched, and restore just writes
+    the ids into the new slot's block-table row (a value update of a
+    traced argument: no copy, no retrace)."""
 
     phase: str                          # "decode" | "prefill"
     cache: Any                          # batch=1 cache pytree (np leaves)
@@ -165,6 +191,8 @@ class SlotCheckpoint:
     cur_token: int = 0                  # next token to feed (decode)
     budget: int = 0                     # remaining new tokens (decode)
     done_tokens: int = 0                # prompt tokens integrated (prefill)
+    blocks: Optional[List[int]] = None  # paged: pinned physical block ids
+    reserved: int = 0                   # paged: unspent reservation
 
 
 @dataclasses.dataclass
@@ -191,7 +219,9 @@ class ServingEngine:
                  tags: Sequence[str] = DEFAULT_TAGS,
                  policy: Any = None, clock=None,
                  prefill_buckets: Any = None,
-                 prefill_chunk: Any = None, preempt: Any = None):
+                 prefill_chunk: Any = None, preempt: Any = None,
+                 kv_block: Any = None,
+                 kv_pool_blocks: Optional[int] = None):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
@@ -240,10 +270,43 @@ class ServingEngine:
                         f"prefill_chunk must be >= 1, got {prefill_chunk}")
                 self.chunk_tokens = int(prefill_chunk)
         dtype = self.cfg.jnp_dtype()
+        # kv_block: None/0 = contiguous per-slot rings (the default);
+        # int = paged mode with that block size.  kv_pool_blocks sizes
+        # the shared physical pool (default: enough for every slot at
+        # full length + the garbage block — same bytes as contiguous;
+        # the occupancy win comes from passing LESS than that).
+        self.kv_block = int(kv_block) if kv_block else 0
+        self.paged = bool(self.kv_block)
+        if self.paged:
+            if self.cfg.family not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"paged KV requires a dense (KH, C, dh) cache "
+                    f"layout; family {self.cfg.family!r} is not "
+                    f"supported")
+            if cache_len % self.kv_block:
+                raise ValueError(
+                    f"kv_block must divide cache_len, got "
+                    f"{self.kv_block} vs {cache_len}")
+            self.n_table = cache_len // self.kv_block
 
         # --- arena accounting (C3/C4): KV is interpreter-lifetime ----
-        cache = bundle.empty_cache(max_slots, cache_len, dtype)
-        kv_bytes = _cache_bytes(cache)
+        if self.paged:
+            n_blocks = (int(kv_pool_blocks) if kv_pool_blocks
+                        else max_slots * self.n_table + 1)
+            self.kv_pool = bundle.empty_cache(n_blocks, self.kv_block,
+                                              dtype)
+            self.pool = PagedKVPool(n_blocks, self.kv_block)
+            self.block_tables = jnp.zeros((max_slots, self.n_table),
+                                          jnp.int32)
+            self._slot_blocks: List[List[int]] = [
+                [] for _ in range(max_slots)]
+            self._slot_reserved: List[int] = [0] * max_slots
+            kv_bytes = _cache_bytes(self.kv_pool)
+            cache = None
+        else:
+            cache = bundle.empty_cache(max_slots, cache_len, dtype)
+            kv_bytes = _cache_bytes(cache)
+        self.kv_bytes = kv_bytes
         if arena is None:
             arena = TwoStackArena(arena_bytes or align_up(
                 kv_bytes + (64 << 10)) * 2)
@@ -275,18 +338,22 @@ class ServingEngine:
         # prepare() runs once here (it may bake family decisions into
         # op_data); eval is jitted with context and op bound, so the
         # traced step is a pure function of (params, cache, tokens, ...).
-        opcodes = [OpCode.SERVING_PREFILL, OpCode.SERVING_DECODE]
+        decode_code = (OpCode.SERVING_DECODE_PAGED if self.paged
+                       else OpCode.SERVING_DECODE)
+        chunk_code = (OpCode.SERVING_PREFILL_CHUNK_PAGED if self.paged
+                      else OpCode.SERVING_PREFILL_CHUNK)
+        opcodes = [OpCode.SERVING_PREFILL, decode_code]
         if self.chunk_tokens:
-            opcodes.append(OpCode.SERVING_PREFILL_CHUNK)
+            opcodes.append(chunk_code)
         self.resolver = MicroMutableOpResolver(tags).add_many(opcodes)
         window = self.cfg.sliding_window
         self._prefill_op = OpDef(OpCode.SERVING_PREFILL, (), (),
                                  params={"cache_len": cache_len,
                                          "window": window})
-        self._decode_op = OpDef(OpCode.SERVING_DECODE, (), (),
+        self._decode_op = OpDef(decode_code, (), (),
                                 params={"window": window})
         prefill_reg = self.resolver.resolve(OpCode.SERVING_PREFILL)
-        decode_reg = self.resolver.resolve(OpCode.SERVING_DECODE)
+        decode_reg = self.resolver.resolve(decode_code)
         pctx = serving_ops.ServingContext(bundle)
         prefill_ctx = serving_ops.ServingContext(
             bundle, prefill_reg.prepare(pctx, self._prefill_op).op_data)
@@ -305,17 +372,17 @@ class ServingEngine:
         # chunk of every prompt (prepare() re-checks the family gate)
         self._prefill_chunk = None
         if self.chunk_tokens:
-            chunk_op = OpDef(OpCode.SERVING_PREFILL_CHUNK, (), (),
+            chunk_op = OpDef(chunk_code, (), (),
                              params={"window": window})
-            chunk_reg = self.resolver.resolve(OpCode.SERVING_PREFILL_CHUNK)
+            chunk_reg = self.resolver.resolve(chunk_code)
             chunk_ctx = serving_ops.ServingContext(
                 bundle, chunk_reg.prepare(pctx, chunk_op).op_data)
             self._prefill_chunk = jax.jit(functools.partial(
                 chunk_reg.eval, chunk_ctx, chunk_op))
 
     @classmethod
-    def from_profile(cls, bundle: ModelBundle, params: Any, profile: Any,
-                     **kw) -> "ServingEngine":
+    def from_profile(cls, bundle: ModelBundle, params: Any,
+                     profile: Any = None, **kw) -> "ServingEngine":
         """Construct an engine from a ``CalibrationProfile``
         (``repro.core.costmodel``) instead of hand-picked constants:
         the profile's solved bucket levels become the engine's
@@ -331,7 +398,24 @@ class ServingEngine:
         win over the profile (pass
         ``prefill_buckets=``/``prefill_chunk=`` to pin them), and a
         missing profile is simply the ordinary constructor: the
-        no-profile fallback is today's defaults."""
+        no-profile fallback is today's defaults.
+
+        With ``profile=None`` the profile CACHE is consulted: a
+        profile previously saved under
+        ``benchmarks/results/profiles/`` for this model + cache_len
+        (``save_cached_profile``) is loaded and applied; no cached
+        profile — or one measured on another backend — quietly falls
+        back to the ordinary constructor (a cache miss is not an
+        error, unlike an explicitly passed stale profile)."""
+        if profile is None:
+            from repro.core.costmodel import (load_cached_profile,
+                                              profile_model_key)
+            key = profile_model_key(bundle.cfg, kw.get("cache_len", 256))
+            profile = load_cached_profile(key)
+            if profile is not None and not profile.matches_backend():
+                profile = None
+            if profile is None:
+                return cls(bundle, params, **kw)
         kw.setdefault("cache_len", profile.cache_len)
         if not profile.matches(bundle.cfg, kw["cache_len"]):
             from repro.core.costmodel import profile_model_key
@@ -349,6 +433,9 @@ class ServingEngine:
                 f"hardware facts; re-calibrate on this backend")
         kw.setdefault("prefill_buckets", profile.bucket_table())
         kw.setdefault("prefill_chunk", profile.prefill_chunk or None)
+        if getattr(profile, "kv_block", 0) \
+                and bundle.cfg.family in ("dense", "moe", "vlm"):
+            kw.setdefault("kv_block", profile.kv_block)
         return cls(bundle, params, **kw)
 
     def prefill_compiles(self) -> int:
@@ -415,6 +502,78 @@ class ServingEngine:
         return (self.cfg.n_vision_tokens
                 if self.cfg.family == "vlm" else 0)
 
+    # -- paged KV: block accounting (docs/ARCHITECTURE.md §8) -----------
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case blocks for ``req``: prompt + full decode budget,
+        capped at the ring capacity.  Reserved (not mapped) at
+        admission so on-demand growth can never fail mid-decode."""
+        rows = min(self._vis() + len(req.tokens) - 1 + req.max_new_tokens,
+                   self.cache_len)
+        return max(1, -(-rows // self.kv_block))
+
+    def _paged_admissible(self, req: Request) -> bool:
+        """Can ``req`` take a slot right now?  A checkpointed request's
+        resources are already pinned in its checkpoint; a fresh one
+        needs its worst case reservable from the pool."""
+        return (req.uid in self._ckpt
+                or self.pool.can_reserve(self._blocks_needed(req)))
+
+    def _ensure_blocks(self, slot: int, upto_pos: int) -> None:
+        """Map blocks (debiting the slot's reservation) until the
+        slot's table covers cache position ``upto_pos``.  Host-side
+        bookkeeping only — ``_sync_table_row`` publishes the row to
+        the traced block table (a VALUE update — never retraces)."""
+        blocks = self._slot_blocks[slot]
+        while (len(blocks) * self.kv_block <= upto_pos
+               and len(blocks) < self.n_table):
+            phys = self.pool.map_block()
+            self._slot_reserved[slot] -= 1
+            blocks.append(phys)
+
+    def _table_row(self, slot: int) -> jnp.ndarray:
+        """The slot's block table row, from host bookkeeping: mapped
+        blocks in logical order, garbage block for the unmapped tail."""
+        row = np.zeros(self.n_table, np.int32)
+        blocks = self._slot_blocks[slot]
+        row[:len(blocks)] = blocks
+        return jnp.asarray(row)
+
+    def _sync_table_row(self, slot: int) -> None:
+        """Publish the slot's row into the DECODE block table.  Only a
+        decoding slot's row may be live there: the fused decode step
+        ring-writes EVERY slot row unconditionally, so a slot that is
+        inactive or mid-chunked-prefill keeps its decode row pointed at
+        the garbage block (its chunk dispatches carry ``_table_row``
+        directly) or stale decode writes would corrupt its blocks."""
+        self.block_tables = self.block_tables.at[slot].set(
+            self._table_row(slot))
+
+    def _scatter_slot_cache(self, slot: int, cache1: Any) -> None:
+        """Scatter a contiguous batch=1 cache into the slot's mapped
+        blocks (one-shot prefill lands contiguous, then pages in).
+        Unmapped table entries point at the garbage block, so the tail
+        of the scatter is harmlessly absorbed there."""
+        row = self._table_row(slot)
+        t, bs = self.n_table, self.kv_block
+
+        def sc(pool, one):
+            l, _, kh, _, dh = pool.shape
+            src = one[:, 0].reshape(l, kh, t, bs, dh).transpose(
+                0, 2, 1, 3, 4)
+            return pool.at[:, row].set(jnp.asarray(src, pool.dtype))
+
+        self.kv_pool = jax.tree.map(sc, self.kv_pool, cache1)
+
+    def _release_slot_blocks(self, slot: int) -> None:
+        """Return a finished slot's blocks + unspent reservation to the
+        pool and point its table row back at the garbage block."""
+        self.pool.release(self._slot_blocks[slot],
+                          reserved=max(self._slot_reserved[slot], 0))
+        self._slot_blocks[slot] = []
+        self._slot_reserved[slot] = 0
+        self.block_tables = self.block_tables.at[slot].set(0)
+
     def _activate_slot(self, req: Request, slot: int,
                        cache1: Any = None, *,
                        length: Optional[int] = None,
@@ -425,15 +584,24 @@ class ServingEngine:
         step keys on.  The keyword overrides are the restore path — a
         resumed request continues from its checkpointed (length, next
         token, remaining budget) instead of a fresh prompt."""
+        last_pos = (len(req.tokens) - 1 + self._vis()
+                    if length is None else length)
+        if self.paged:
+            # cover everything written so far PLUS the position the
+            # next decode step will write (last_pos % capacity), then
+            # go live in the decode block table
+            self._ensure_blocks(slot, min(last_pos, self.cache_len - 1))
+            self._sync_table_row(slot)
         if cache1 is not None:
-            self._insert_cache(slot, cache1)
+            if self.paged:
+                self._scatter_slot_cache(slot, cache1)
+            else:
+                self._insert_cache(slot, cache1)
         self.slot_req[slot] = self.results[req.uid]
         self.slot_meta[slot] = req
         self.slot_budget[slot] = (req.max_new_tokens if budget is None
                                   else budget)
         self.active[slot] = True
-        last_pos = (len(req.tokens) - 1 + self._vis()
-                    if length is None else length)
         self.lengths = self.lengths.at[slot].set(last_pos)
         self.cur_tokens = self.cur_tokens.at[slot, 0].set(
             int(req.tokens[-1]) if cur_token is None else cur_token)
@@ -492,6 +660,14 @@ class ServingEngine:
         _, cache1 = self._prefill((self.params, batch))
         self.last_step["prefill_tokens"].append(len(first))
         self.policy.charge(req.tenant, 1.0)
+        if self.paged:
+            # page the first chunk into the pool now; later chunks
+            # write the pool directly through the paged chunk op
+            self._ensure_blocks(
+                slot, min(self._vis() + len(first) - 1,
+                          self.cache_len - 1))
+            self._scatter_slot_cache(slot, cache1)
+            cache1 = None
         self._chunking[slot] = _ChunkState(req, cache1, len(first))
         self.results[req.uid].prefill_s += time.perf_counter() - t0
 
@@ -512,9 +688,17 @@ class ServingEngine:
             tok = np.concatenate(
                 [tok, np.zeros(self.chunk_tokens - real, tok.dtype)])
         start = cs.done + self._vis()
-        cs.cache1 = self._prefill_chunk(
-            (self.params, cs.cache1, jnp.asarray(tok[None]),
-             jnp.int32(start)))
+        if self.paged:
+            self._ensure_blocks(
+                slot, min(start + self.chunk_tokens - 1,
+                          self.cache_len - 1))
+            self.kv_pool = self._prefill_chunk(
+                (self.params, self.kv_pool, self._table_row(slot),
+                 jnp.asarray(tok[None]), jnp.int32(start)))
+        else:
+            cs.cache1 = self._prefill_chunk(
+                (self.params, cs.cache1, jnp.asarray(tok[None]),
+                 jnp.int32(start)))
         cs.done += real
         self.last_step["chunks"] += 1
         self.policy.charge(cs.req.tenant, 1.0)
@@ -546,12 +730,27 @@ class ServingEngine:
         The slot itself is untouched — pair with ``_evict``."""
         if slot in self._chunking:
             cs = self._chunking[slot]
+            if self.paged:
+                return SlotCheckpoint(
+                    phase="prefill", cache=None, done_tokens=cs.done,
+                    blocks=list(self._slot_blocks[slot]),
+                    reserved=self._slot_reserved[slot])
             return SlotCheckpoint(
                 phase="prefill",
                 cache=jax.tree.map(np.asarray, cs.cache1),
                 done_tokens=cs.done)
         if not self.active[slot]:
             raise RuntimeError(f"slot {slot} is not running")
+        if self.paged:
+            # no KV copy: the rows stay in the pool, the checkpoint
+            # pins the block ids (checkpoint-as-table-handoff)
+            return SlotCheckpoint(
+                phase="decode", cache=None,
+                length=int(self.lengths[slot]),
+                cur_token=int(self.cur_tokens[slot, 0]),
+                budget=int(self.slot_budget[slot]),
+                blocks=list(self._slot_blocks[slot]),
+                reserved=self._slot_reserved[slot])
         return SlotCheckpoint(
             phase="decode", cache=self._extract_cache(slot),
             length=int(self.lengths[slot]),
@@ -573,6 +772,12 @@ class ServingEngine:
             self.active[slot] = False
             self.slot_req[slot] = None
             self.slot_meta[slot] = None
+        if self.paged:
+            # block ownership moved to the checkpoint: detach the slot
+            # (table row back to the garbage block) without releasing
+            self._slot_blocks[slot] = []
+            self._slot_reserved[slot] = 0
+            self.block_tables = self.block_tables.at[slot].set(0)
         self._ckpt[req.uid] = ckpt
         self.results[req.uid].preemptions += 1
         self.queue.append(req)
@@ -585,6 +790,22 @@ class ServingEngine:
         loop at exactly the captured state — the jitted decode step is
         a pure function of (cache, token, length), so the continuation
         is bit-identical to the uninterrupted run."""
+        if self.paged:
+            # block-table handoff: the pinned ids attach to the NEW
+            # slot — the KV rows never moved.  A resumed decode goes
+            # live in the decode table via _activate_slot's sync; a
+            # resumed chunked prefill keeps its decode row on the
+            # garbage block (chunk dispatches carry the row directly)
+            self._slot_blocks[slot] = list(ckpt.blocks or [])
+            self._slot_reserved[slot] = ckpt.reserved
+            if ckpt.phase == "prefill":
+                self._chunking[slot] = _ChunkState(req, None,
+                                                   ckpt.done_tokens)
+            else:
+                self._activate_slot(req, slot, None, length=ckpt.length,
+                                    cur_token=ckpt.cur_token,
+                                    budget=ckpt.budget)
+            return
         if ckpt.phase == "prefill":
             cache1 = jax.tree.map(jnp.asarray, ckpt.cache)
             self._chunking[slot] = _ChunkState(req, cache1,
@@ -598,11 +819,19 @@ class ServingEngine:
 
     def _admit(self, req: Request, slot: int) -> None:
         """Route an admission: restore a checkpointed request, start a
-        chunked prefill for a long prompt, or prefill one-shot."""
+        chunked prefill for a long prompt, or prefill one-shot.  On a
+        paged engine a FRESH admission reserves its worst-case block
+        count up front (the caller checked ``_paged_admissible``), so
+        every later ``map_block`` is infallible."""
         ckpt = self._ckpt.pop(req.uid, None)
         if ckpt is not None:
             self._restore_slot(req, slot, ckpt)
-        elif self._chunk_eligible(req):
+            return
+        if self.paged:
+            need = self._blocks_needed(req)
+            self.pool.reserve(need)
+            self._slot_reserved[slot] = need
+        if self._chunk_eligible(req):
             self._start_chunked(req, slot)
         else:
             self._prefill_one(req, slot)
@@ -637,7 +866,17 @@ class ServingEngine:
             for slot in range(self.max_slots):
                 if self.queue and not self.active[slot] \
                         and slot not in self._chunking:
-                    self._admit(self.policy.pop(self.queue, now), slot)
+                    if self.paged:
+                        # admission control: the policy's pick only
+                        # takes the slot if its worst case fits the
+                        # pool's free blocks (restores are pre-pinned)
+                        ci = self.policy.select(self.queue, now)
+                        if not self._paged_admissible(self.queue[ci]):
+                            break
+                        self._admit(self.queue.pop(ci), slot)
+                    else:
+                        self._admit(self.policy.pop(self.queue, now),
+                                    slot)
             # displacement: every slot busy, queue still holding work —
             # let the preemption policy evict a running victim for the
             # queue's policy-first candidate (strict-improvement
@@ -659,6 +898,9 @@ class ServingEngine:
                                              cand, now)
                     if vi is None:
                         break
+                    if self.paged and not self._paged_admissible(cand):
+                        break   # evicting frees no blocks (they pin
+                        # to the checkpoint), so check BEFORE evicting
                     self.queue.pop(ci)
                     slot = running[vi][0]
                     self._evict(slot)
@@ -666,12 +908,18 @@ class ServingEngine:
         if not self.active.any():
             return bool(self.queue or self._chunking)
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(
-            (self.params, self.cache, self.cur_tokens, self.lengths))
+        if self.paged:
+            logits, self.kv_pool = self._decode(
+                (self.params, self.kv_pool, self.block_tables,
+                 self.cur_tokens, self.lengths))
+        else:
+            logits, self.cache = self._decode(
+                (self.params, self.cache, self.cur_tokens, self.lengths))
         dt = time.perf_counter() - t0
         self.last_step["decoded"] = True
         toks = self._sample(logits, 0.0)
         self.lengths = self.lengths + 1
+        lens_host = np.asarray(self.lengths)
         new_cur = np.array(self.cur_tokens)    # writable host copy
         eos = self.cfg.vocab - 1
         for slot in range(self.max_slots):
@@ -689,6 +937,16 @@ class ServingEngine:
                 self.active[slot] = False
                 self.slot_req[slot] = None
                 self.slot_meta[slot] = None
+                if self.paged:
+                    self._release_slot_blocks(slot)
+            elif self.paged:
+                # grow on demand: map the block the NEXT decode step's
+                # ring write lands in (covered by the reservation)
+                before = len(self._slot_blocks[slot])
+                self._ensure_blocks(
+                    slot, int(lens_host[slot]) % self.cache_len)
+                if len(self._slot_blocks[slot]) != before:
+                    self._sync_table_row(slot)
         self.cur_tokens = jnp.asarray(new_cur)
         return bool(self.active.any() or self.queue or self._chunking)
 

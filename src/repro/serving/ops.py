@@ -115,3 +115,74 @@ class RefServingPrefillChunk:
         return lm_prefill_chunk(params, ctx.bundle.cfg, cache, tokens,
                                 start, window=op.params.get("window"),
                                 embed_scale=ctx.op_data["scale"])
+
+
+def _paged_family_scale(cfg) -> Optional[float]:
+    """Shared family gate for the paged serving ops: paged KV needs the
+    dense (KH, C, dh) ring layout, so ssm/hybrid/audio are out."""
+    import math
+
+    if cfg.family == "vlm":
+        return math.sqrt(cfg.d_model)
+    if cfg.family in ("dense", "moe"):
+        return None
+    raise ValueError(
+        f"paged KV requires a dense (KH, C, dh) cache layout; "
+        f"family {cfg.family!r} is not supported")
+
+
+@register_op(OpCode.SERVING_DECODE_PAGED, tag="reference")
+class RefServingDecodePaged:
+    """Reference paged decode macro-kernel: one fused step over the
+    shared physical block pool, with each slot's KV placement given by
+    its row of the traced block-table argument.  Delegates to
+    ``lm_decode_paged``, whose attention gathers a slot's blocks back
+    to a contiguous view and runs the contiguous reference einsums —
+    the bit-identity oracle for the pallas-tagged twin."""
+
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        return PrepareResult(
+            output_specs=[],
+            op_data={"scale": _paged_family_scale(ctx.bundle.cfg)})
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        from repro.models.lm import lm_decode_paged
+
+        params, pool, tables, tokens, lengths = inputs
+        return lm_decode_paged(params, ctx.bundle.cfg, pool, tables,
+                               tokens, lengths,
+                               embed_scale=ctx.op_data["scale"])
+
+
+@register_op(OpCode.SERVING_PREFILL_CHUNK_PAGED, tag="reference")
+class RefServingPrefillChunkPaged:
+    """Reference paged chunked-prefill macro-kernel: gathers ONE slot's
+    blocks to a contiguous batch=1 cache, runs the exact contiguous
+    chunk math (``lm_prefill_chunk``), and scatters back — so chunked
+    prefill into a paged pool stays token-identical to the contiguous
+    chunked path.  Same dense/vlm bit-safety gate as the contiguous
+    chunk op (moe routing depends on token count, so unlike decode it
+    cannot chunk even though its cache layout is paged-compatible)."""
+
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        family = ctx.bundle.cfg.family
+        if family not in ("dense", "vlm"):
+            raise ValueError(
+                f"chunked prefill is only bit-safe for dense/vlm "
+                f"families, not {family!r}")
+        return PrepareResult(
+            output_specs=[],
+            op_data={"scale": _paged_family_scale(ctx.bundle.cfg)})
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        from repro.models.lm import lm_prefill_chunk_paged
+
+        params, pool, table_row, tokens, start = inputs
+        return lm_prefill_chunk_paged(
+            params, ctx.bundle.cfg, pool, table_row, tokens, start,
+            window=op.params.get("window"),
+            embed_scale=ctx.op_data["scale"])

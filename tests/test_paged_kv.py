@@ -1,0 +1,382 @@
+"""Paged KV arena + block-table decode attention (PR 6 acceptance).
+
+Covers: the PagedKVPool reserve/map/release accounting (garbage sink,
+two-phase admission, double-release guards), bit-identity of the paged
+reference attention against the contiguous reference on a scattered
+physical layout, the Pallas block-table kernel against its reference
+twin, end-to-end paged-vs-contiguous engine token identity for dense
+and vlm, block-table checkpoint/restore into a DIFFERENT slot with no
+KV copy, and the compile-once contract as slots admit, grow, preempt,
+restore, and retire blocks (the block table is a traced argument, so
+none of that may retrace the decode step)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (BlockCost, PagedKVPool, calibrate,
+                        jit_cache_size, load_cached_profile,
+                        profile_cache_path, profile_model_key,
+                        save_cached_profile, solve_block_size)
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def pod_setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def vlm_setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("paligemma-3b", reduced=True)
+    m = get_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# pool accounting (unit)
+# ---------------------------------------------------------------------------
+
+def test_pool_reserve_map_release_accounting():
+    pool = PagedKVPool(9, 16)
+    assert pool.usable_blocks == 8
+    assert pool.free_blocks() == 8
+    assert pool.can_reserve(8) and not pool.can_reserve(9)
+    pool.reserve(3)
+    assert pool.reserved_blocks() == 3 and pool.free_blocks() == 5
+    b1, b2 = pool.map_block(), pool.map_block()
+    assert b1 != b2 and PagedKVPool.GARBAGE_BLOCK not in (b1, b2)
+    assert pool.reserved_blocks() == 1 and pool.alloc_count == 2
+    # a finished request returns its blocks AND its unspent promise
+    pool.release([b1, b2], reserved=1)
+    assert pool.free_blocks() == 8 and pool.reserved_blocks() == 0
+
+
+def test_pool_guards():
+    with pytest.raises(ValueError):
+        PagedKVPool(1, 16)                  # no room for the sink
+    with pytest.raises(ValueError):
+        PagedKVPool(4, 0)
+    pool = PagedKVPool(4, 8)
+    with pytest.raises(RuntimeError):
+        pool.map_block()                    # no reservation
+    with pytest.raises(RuntimeError):
+        pool.reserve(4)                     # only 3 usable
+    pool.reserve(2)
+    b = pool.map_block()
+    with pytest.raises(ValueError):
+        pool.release([PagedKVPool.GARBAGE_BLOCK])
+    pool.release([b], reserved=1)
+    with pytest.raises(ValueError):
+        pool.release([b])                   # double release
+    with pytest.raises(ValueError):
+        pool.release([], reserved=1)        # over-cancel
+
+
+# ---------------------------------------------------------------------------
+# kernel twins: paged reference == contiguous reference, Pallas == ref
+# ---------------------------------------------------------------------------
+
+def _scattered_layout(rng, b=2, kh=2, h=4, c=64, bs=16, d=32):
+    """A contiguous (B,KH,C,D) cache and the SAME rows scattered into a
+    shuffled physical (P,KH,BS,D) pool with per-slot block tables."""
+    import jax.numpy as jnp
+    t = c // bs
+    q = rng.normal(0, 1, (b, h, d)).astype(np.float32)
+    k = rng.normal(0, 1, (b, kh, c, d)).astype(np.float32)
+    v = rng.normal(0, 1, (b, kh, c, d)).astype(np.float32)
+    lengths = np.array([c - 3, c // 2], np.int32)[:b]
+    n_blocks = b * t + 1
+    perm = rng.permutation(np.arange(1, n_blocks))    # garbage 0 kept
+    tables = perm.reshape(b, t).astype(np.int32)
+    k_pool = np.zeros((n_blocks, kh, bs, d), np.float32)
+    v_pool = np.zeros((n_blocks, kh, bs, d), np.float32)
+    for i in range(b):
+        for j in range(t):
+            k_pool[tables[i, j]] = k[i, :, j * bs:(j + 1) * bs]
+            v_pool[tables[i, j]] = v[i, :, j * bs:(j + 1) * bs]
+    return tuple(jnp.asarray(x) for x in
+                 (q, k, v, k_pool, v_pool, tables, lengths))
+
+
+def test_paged_ref_bit_identical_to_contiguous_ref():
+    from repro.kernels.ref import (decode_attention_ref,
+                                   paged_decode_attention_ref)
+
+    rng = np.random.default_rng(0)
+    q, k, v, k_pool, v_pool, tables, lengths = _scattered_layout(rng)
+    want = decode_attention_ref(q, k, v, lengths)
+    got = paged_decode_attention_ref(q, k_pool, v_pool, tables, lengths)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_paged_pallas_matches_reference():
+    from repro.kernels.ops import paged_decode_attention
+    from repro.kernels.ref import paged_decode_attention_ref
+
+    rng = np.random.default_rng(1)
+    q, _, _, k_pool, v_pool, tables, lengths = _scattered_layout(rng)
+    want = paged_decode_attention_ref(q, k_pool, v_pool, tables, lengths)
+    got = paged_decode_attention(q, k_pool, v_pool, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: paged vs contiguous token bit-identity (dense + vlm)
+# ---------------------------------------------------------------------------
+
+def _mixed_outputs(m, params, cache_len, vocab, *, kv_block=None,
+                   extras=None, seed=11):
+    rng = np.random.default_rng(seed)
+    kw = {"kv_block": kv_block} if kv_block else {}
+    eng = ServingEngine(m, params, max_slots=2, cache_len=cache_len,
+                        **kw)
+    for uid, (plen, budget) in enumerate(((21, 6), (5, 8), (30, 4),
+                                          (9, 5))):
+        toks = rng.integers(0, vocab - 2, plen).astype(np.int32)
+        ex = None if extras is None else extras(rng)
+        eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=budget,
+                           extras=ex))
+    res = eng.run()
+    return eng, {u: r.output for u, r in res.items()}
+
+
+def test_engine_paged_bit_identical_dense(pod_setup):
+    cfg, m, params = pod_setup
+    ceng, want = _mixed_outputs(m, params, 64, cfg.vocab)
+    peng, got = _mixed_outputs(m, params, 64, cfg.vocab, kv_block=16)
+    assert got == want
+    assert jit_cache_size(peng._decode) == 1
+    # all blocks returned: the pool fully drains at completion
+    assert peng.pool.free_blocks() == peng.pool.usable_blocks
+    assert peng.pool.reserved_blocks() == 0
+
+
+def test_engine_paged_bit_identical_vlm(vlm_setup):
+    cfg, m, params = vlm_setup
+    cache_len = 64 + cfg.n_vision_tokens
+    bs = 16 if cache_len % 16 == 0 else 8
+    assert cache_len % bs == 0
+
+    def extras(rng):
+        return {"vision": rng.normal(0, 1, (cfg.n_vision_tokens,
+                                            cfg.d_vision)
+                                     ).astype(np.float32)}
+
+    _, want = _mixed_outputs(m, params, cache_len, cfg.vocab,
+                             extras=extras)
+    peng, got = _mixed_outputs(m, params, cache_len, cfg.vocab,
+                               kv_block=bs, extras=extras)
+    assert got == want
+    assert jit_cache_size(peng._decode) == 1
+
+
+def test_paged_guards(pod_setup):
+    cfg, m, params = pod_setup
+    with pytest.raises(ValueError):
+        ServingEngine(m, params, max_slots=1, cache_len=64,
+                      kv_block=24)          # 64 % 24 != 0
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    scfg = get_config("mamba2-780m", reduced=True)
+    sm = get_model(scfg)
+    sparams = sm.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        # recurrent state has no (KH, C, dh) rows to page
+        ServingEngine(sm, sparams, max_slots=1, cache_len=32,
+                      kv_block=8)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint = block-table handoff: restore into a DIFFERENT slot,
+# no KV copy, no retrace
+# ---------------------------------------------------------------------------
+
+def test_paged_checkpoint_carries_blocks_not_kv(pod_setup):
+    """Preempt a paged request mid-decode: the checkpoint must pin
+    block ids (cache=None — zero KV rows copied), and restoring it
+    into a DIFFERENT slot must continue the run bit-identically with
+    the decode step still traced exactly once."""
+    cfg, m, params = pod_setup
+    rng = np.random.default_rng(13)
+    toks = rng.integers(0, cfg.vocab - 2, 9).astype(np.int32)
+    filler = rng.integers(0, cfg.vocab - 2, 7).astype(np.int32)
+
+    eng = ServingEngine(m, params, max_slots=2, cache_len=64,
+                        kv_block=16)
+    eng.submit(Request(uid=0, tokens=toks, max_new_tokens=8))
+    solo = ServingEngine(m, params, max_slots=2, cache_len=64,
+                         kv_block=16)
+    solo.submit(Request(uid=0, tokens=toks, max_new_tokens=8))
+    want = solo.run()[0].output
+
+    for _ in range(3):                      # uid0 decoding in slot 0
+        eng.step()
+    assert eng.active[0] and eng.results[0].output
+    ckpt = eng.snapshot_slot(0)
+    assert ckpt.phase == "decode"
+    assert ckpt.cache is None               # the handoff copies no KV
+    assert ckpt.blocks and all(b != 0 for b in ckpt.blocks)
+    blocks_before = list(ckpt.blocks)
+    req0 = eng._evict(0)
+    assert eng.results[0].preemptions == 1
+    # slot 0 is taken by other work before uid0 comes back, so the
+    # restore lands in slot 1 — a different slot than snapshotted
+    eng.queue.clear()
+    eng.submit(Request(uid=1, tokens=filler, max_new_tokens=8))
+    eng.step()
+    assert eng.active[0] and eng.slot_req[0].uid == 1
+    eng._admit(req0, 1)
+    assert eng.slot_req[1].uid == 0
+    # same physical blocks, remapped — not copied — into the new row
+    assert eng._slot_blocks[1] == blocks_before
+    res = eng.run()
+    assert res[0].output == want
+    assert jit_cache_size(eng._decode) == 1
+
+
+def test_paged_grow_shrink_never_retraces(pod_setup):
+    """Slots growing into fresh blocks mid-decode and retiring them at
+    completion are VALUE updates of the traced block table: one decode
+    program over an entire churn of admissions."""
+    cfg, m, params = pod_setup
+    rng = np.random.default_rng(17)
+    eng = ServingEngine(m, params, max_slots=2, cache_len=64,
+                        kv_block=8)
+    uid = 0
+    for wave in range(3):                   # staggered lengths/budgets
+        for plen, budget in ((3, 12), (19, 4)):
+            toks = rng.integers(0, cfg.vocab - 2, plen).astype(np.int32)
+            eng.submit(Request(uid=uid, tokens=toks,
+                               max_new_tokens=budget))
+            uid += 1
+        eng.run()
+    assert all(r.done for r in eng.results.values())
+    assert jit_cache_size(eng._decode) == 1
+    assert eng.pool.free_blocks() == eng.pool.usable_blocks
+
+
+# ---------------------------------------------------------------------------
+# cost model: block solver + profile plumbing
+# ---------------------------------------------------------------------------
+
+def test_solve_block_size_prefers_packing_then_speed():
+    costs = [BlockCost(block=8, compile_us=100, step_us=30),
+             BlockCost(block=16, compile_us=100, step_us=20),
+             BlockCost(block=24, compile_us=100, step_us=10),  # 64%24!=0
+             BlockCost(block=64, compile_us=100, step_us=5)]
+    r = solve_block_size([9] * 4, costs, cache_len=64, slots=2,
+                         new_tokens=8)
+    # 16 rows needed/request: bs=8 -> 2 blocks, 15 usable -> 7.5 slots
+    assert r.block == 8 and r.admissible_slots == 7.5
+    assert r.contiguous_slots == 2 and r.mean_blocks == 2.0
+    # whole-slab "blocks" degenerate to contiguous occupancy (minus
+    # the garbage block): the solver never prefers them
+    r2 = solve_block_size([9] * 4, [c for c in costs
+                                    if c.block == 64],
+                          cache_len=64, slots=2, new_tokens=8)
+    assert r2.block == 64 and r2.admissible_slots == 1.0
+    with pytest.raises(ValueError):
+        solve_block_size([9], [BlockCost(24, 1, 1)], cache_len=64)
+    with pytest.raises(ValueError):
+        solve_block_size([1], costs, cache_len=64)
+
+
+def _synthetic_measure(kind, size):
+    """Deterministic fake timings for every measurement kind."""
+    from repro.core import CompileStepTiming
+    base = {"prefill": (500.0, 10.0), "chunk": (400.0, 6.0),
+            "decode": (600.0, 8.0), "decode_paged": (700.0, 9.0)}
+    c, s = base[kind]
+    return CompileStepTiming(compile_us=c + size, step_us=s + size / 8,
+                             iters=1)
+
+
+def test_calibrate_solves_kv_block_and_profile_roundtrip(pod_setup,
+                                                         tmp_path):
+    cfg, m, params = pod_setup
+    prof = calibrate(m, params, [6, 6, 22, 22], cache_len=64, seed=0,
+                     decode_slots=(2,), block_candidates=(8, 16, 24),
+                     measure=_synthetic_measure)
+    assert prof.kv_block in (8, 16)         # 24 skipped: 64 % 24 != 0
+    assert [c.block for c in prof.block_costs] == [8, 16]
+    assert [c.slots for c in prof.decode_costs] == [2]
+    assert prof.version == 1
+    # roundtrip, including the new defaulted fields
+    from repro.core import CalibrationProfile
+    back = CalibrationProfile.from_json(prof.to_json())
+    assert back == prof
+    # a version-1 profile WITHOUT the paged fields still loads
+    import json
+    d = json.loads(prof.to_json())
+    for key in ("kv_block", "decode_costs", "block_costs"):
+        del d[key]
+    old = CalibrationProfile.from_json(json.dumps(d))
+    assert old.kv_block == 0 and old.block_costs == []
+    # the on-disk cache: save under model_key, load it back, miss->None
+    path = save_cached_profile(prof, cache_dir=tmp_path)
+    assert path == profile_cache_path(prof.model_key, tmp_path)
+    assert load_cached_profile(prof.model_key, tmp_path) == prof
+    assert load_cached_profile("dense/nope/L64", tmp_path) is None
+
+
+def test_from_profile_enables_paging(pod_setup, tmp_path):
+    cfg, m, params = pod_setup
+    prof = calibrate(m, params, [6, 6, 22, 22], cache_len=64, seed=0,
+                     decode_slots=(2,), block_candidates=(8, 16),
+                     measure=_synthetic_measure)
+    assert prof.kv_block
+    eng = ServingEngine.from_profile(m, params, prof, max_slots=2,
+                                     cache_len=64)
+    assert eng.paged and eng.kv_block == prof.kv_block
+    # explicit override wins over the profile
+    eng2 = ServingEngine.from_profile(m, params, prof, max_slots=2,
+                                      cache_len=64, kv_block=0)
+    assert not eng2.paged
+    # profile=None consults the CACHE: a miss is the plain constructor
+    key = profile_model_key(cfg, 64)
+    assert not os.path.exists(profile_cache_path(key, tmp_path))
+    eng3 = ServingEngine.from_profile(m, params, max_slots=2,
+                                      cache_len=64)
+    assert isinstance(eng3, ServingEngine)
+
+
+# ---------------------------------------------------------------------------
+# the benchmark cannot rot: end-to-end smoke (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_paged_benchmark_tiny_smoke():
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.arrival_process",
+         "--paged", "--tiny"],
+        cwd=repo_root, env=env, capture_output=True, text=True,
+        timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "Paged KV pool" in proc.stdout
+    assert "tokens_match" in proc.stdout

@@ -40,6 +40,14 @@ RESULTS_DIR = "benchmarks/results"
 KNOWN_SCHEMAS = (1,)
 # the uniform metadata block save_result stamps
 REQUIRED_META = ("schema", "jax", "backend", "seed", "created_utc")
+# per-benchmark row keys that must be present in EVERY row of that
+# file — the columns a reader (or a regression gate) depends on; files
+# not listed here are held only to the generic flat-scalar layout
+REQUIRED_ROW_KEYS = {
+    "BENCH_paged_kv.json": ("mode", "hbm_bytes", "kv_block",
+                            "max_slots", "peak_concurrent",
+                            "occupancy_gain", "tokens_match"),
+}
 
 Violation = Tuple[str, str]
 
@@ -89,10 +97,15 @@ def check_result(path: Path, root: Path = REPO_ROOT) -> List[Violation]:
     if not isinstance(rows, list) or not rows:
         out.append((rel, "rows must be a non-empty list"))
         return out
+    required = REQUIRED_ROW_KEYS.get(path.name, ())
     for i, row in enumerate(rows):
         if not isinstance(row, dict) or not row:
             out.append((rel, f"rows[{i}] must be a non-empty object"))
             continue
+        for key in required:
+            if key not in row:
+                out.append((rel, f"rows[{i}] lacks required key "
+                                 f"{key!r}"))
         for key, value in row.items():
             out.extend((rel, f"rows[{i}]: {msg}")
                        for msg in _check_scalar(key, value))
