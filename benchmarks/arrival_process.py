@@ -345,6 +345,7 @@ def _preempt_row(mode: str, wl, sim: Dict, dispatch_us: float) -> Dict:
     slo = float((sim["done_at"][dl] <= wl["deadlines"][dl]).mean())
     return {
         "mode": mode,
+        "family": "fc-int8",       # the micro-lane rows' "model family"
         "lanes": PREEMPT_LANES,
         "n_deadline": int(dl.sum()),
         "n_monopolizers": int(wl["mono"].sum()),
@@ -403,34 +404,48 @@ def _autotuned_profile(bundle, params, tiny: bool):
 def _measure_engine_costs(bundle, params, chunk: int) -> Dict:
     """Warm per-dispatch costs of the engine's three step kinds —
     decode, one-shot prefill per padded length, one chunk — the
-    virtual clock's tick vocabulary."""
+    virtual clock's tick vocabulary.  Family-generic: the cache leaf
+    synced on is whatever the bundle's pytree holds (KV rings or
+    recurrent state), the chunk dispatch follows the family's chunk-op
+    signature, and ``chunk=0`` (moe: no chunked prefill) skips the
+    chunk measurement entirely."""
+    import jax
     import jax.numpy as jnp
 
     from repro.serving import ServingEngine
 
+    def _sync(x):
+        return jax.tree.leaves(x)[0].block_until_ready()
+
     eng = ServingEngine(bundle, params, max_slots=2, cache_len=64,
-                        prefill_chunk=chunk)
+                        prefill_chunk=chunk or None)
     rng = np.random.default_rng(SEED)
     costs: Dict = {}
-    for L in (chunk, 8, 64):
+    for L in sorted({chunk or 8, 8, 64}):
         toks = jnp.asarray(rng.integers(
             0, bundle.cfg.vocab - 2, L).astype(np.int32)[None])
         costs[("prefill", L)] = time_call(
-            lambda t=toks: eng._prefill((params, {"tokens": t}))[1]["k"]
-            .block_until_ready(), warmup=1, iters=5) * 1e6
-    cache1 = bundle.empty_cache(1, 64, bundle.cfg.jnp_dtype())
-    toks = jnp.asarray(rng.integers(
-        0, bundle.cfg.vocab - 2, chunk).astype(np.int32)[None])
-    costs["chunk"] = time_call(
-        lambda: eng._prefill_chunk(
-            (params, cache1, toks, jnp.int32(8)))["k"]
-        .block_until_ready(), warmup=1, iters=5) * 1e6
+            lambda t=toks: _sync(
+                eng._prefill((params, {"tokens": t}))[1]),
+            warmup=1, iters=5) * 1e6
+    if chunk:
+        cache1 = bundle.empty_cache(1, 64, bundle.cfg.jnp_dtype())
+        toks = jnp.asarray(rng.integers(
+            0, bundle.cfg.vocab - 2, chunk).astype(np.int32)[None])
+        if eng._recurrent_chunk:
+            args = (params, cache1, toks, jnp.int32(8),
+                    jnp.int32(chunk))
+        else:
+            args = (params, cache1, toks, jnp.int32(8))
+        costs["chunk"] = time_call(
+            lambda: _sync(eng._prefill_chunk(args)),
+            warmup=1, iters=5) * 1e6
     cur = jnp.zeros((2, 1), jnp.int32)
     lens = jnp.asarray([8, 8], jnp.int32)
     cache2 = bundle.empty_cache(2, 64, bundle.cfg.jnp_dtype())
     costs["decode"] = time_call(
-        lambda: eng._decode((params, cache2, cur, lens))[0]
-        .block_until_ready(), warmup=1, iters=5) * 1e6
+        lambda: _sync(eng._decode((params, cache2, cur, lens))[0]),
+        warmup=1, iters=5) * 1e6
     return costs
 
 
@@ -450,6 +465,13 @@ def _sim_engine(bundle, params, wl, mode: str, costs: Dict,
         kw["preempt"] = "edf-displace"
     if "chunk" in mode:
         kw["prefill_chunk"] = chunk
+    if "bucket" in mode:
+        # the moe fast-path mode: capacity-stable bucketed prefill in
+        # place of chunking (moe cannot chunk); its siblings run
+        # exact-length so the contrast isolates bucketing
+        kw["prefill_buckets"] = True
+    elif bundle.cfg.family == "moe":
+        kw["prefill_buckets"] = False
     clock = VirtualClock()
     if "chunk" in mode and profile is not None:
         # prefill_buckets pinned to the engine default so this mode
@@ -476,7 +498,7 @@ def _sim_engine(bundle, params, wl, mode: str, costs: Dict,
             nxt += 1
         more = eng.step()
         ev = eng.last_step
-        dt = ev["chunks"] * costs["chunk"]
+        dt = ev["chunks"] * costs.get("chunk", 0.0)
         if ev["decoded"]:
             dt += costs["decode"]
         for L in ev["prefill_tokens"]:
@@ -495,14 +517,17 @@ def _sim_engine(bundle, params, wl, mode: str, costs: Dict,
     return done_at
 
 
-def _engine_row(mode: str, wl, done_at: np.ndarray) -> Dict:
+def _engine_row(mode: str, family: str, wl,
+                done_at: np.ndarray) -> Dict:
     lat = done_at - wl["arrivals"]
-    assert not np.isnan(lat).any(), f"{mode}: unfinished requests"
+    assert not np.isnan(lat).any(), f"{family}/{mode}: unfinished " \
+        "requests"
     dl = ~wl["mono"]
     p50, p99 = np.percentile(lat[dl], (50, 99))
     slo = float((done_at[dl] <= wl["deadlines"][dl]).mean())
     return {
         "mode": mode,
+        "family": family,
         "slots": 2,
         "n_deadline": int(dl.sum()),
         "n_monopolizers": int(wl["mono"].sum()),
@@ -537,33 +562,52 @@ def run_preempt(tiny: bool = False) -> List[Dict]:
     print_table("Preemptible lanes (heavy-tail mix: 1-frame deadline "
                 "class + 6-frame best-effort monopolizers)", rows)
 
-    # pod engine: long-prompt monopolizer
+    # pod engine: long-prompt monopolizer, swept over the FULL family
+    # matrix — every family whose fast paths the engine now supports
+    # runs the same workload shape (family parity, PR 7).  The third
+    # mode is the family's long-prompt fast path: chunked prefill for
+    # chunkable families, capacity-stable bucketed prefill for moe
+    # (which cannot chunk).
     import jax
 
     from repro.configs import get_config
     from repro.models import get_model
 
-    cfg = get_config("qwen3-32b", reduced=True)
-    bundle = get_model(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
-    prof = _autotuned_profile(bundle, params, tiny)
-    # the hand default (8) survives only as the cache-miss fallback —
-    # and when the solver decided chunking off (the monopolizer
-    # section exists to show chunking, so it stays on here)
-    chunk = (int(prof.prefill_chunk)
-             if prof is not None and prof.prefill_chunk else 8)
-    costs = _measure_engine_costs(bundle, params, chunk)
-    ewl = _engine_workload(np.random.default_rng(SEED + 3),
-                           12 if tiny else 40, cfg.vocab,
-                           costs["decode"], costs[("prefill", 8)])
     erows: List[Dict] = []
-    for mode in ("engine_edf", "engine_edf_preempt",
-                 "engine_edf_preempt_chunk"):
-        done = _sim_engine(bundle, params, ewl, mode, costs, chunk,
-                           profile=prof)
-        erows.append(_engine_row(mode, ewl, done))
+    families = [("dense", "qwen3-32b"), ("ssm", "mamba2-780m"),
+                ("hybrid", "zamba2-1.2b"), ("moe", "deepseek-moe-16b")]
+    for family, arch in families:
+        cfg = get_config(arch, reduced=True)
+        bundle = get_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        # the calibration-profile path (cache or fresh calibration) is
+        # the dense flagship's; other families run the hand default so
+        # one full sweep stays minutes-scale
+        prof = (_autotuned_profile(bundle, params, tiny)
+                if family == "dense" else None)
+        # the hand default (8) survives only as the cache-miss
+        # fallback — and when the solver decided chunking off (this
+        # section exists to show the long-prompt fast path, so it
+        # stays on here); moe: chunk=0, its fast path is bucketing
+        if family == "moe":
+            chunk = 0
+        else:
+            chunk = (int(prof.prefill_chunk)
+                     if prof is not None and prof.prefill_chunk else 8)
+        costs = _measure_engine_costs(bundle, params, chunk)
+        ewl = _engine_workload(
+            np.random.default_rng(SEED + 3),
+            (12 if family == "dense" else 8) if tiny
+            else (40 if family == "dense" else 24),
+            cfg.vocab, costs["decode"], costs[("prefill", 8)])
+        fast = ("engine_edf_preempt_bucket" if family == "moe"
+                else "engine_edf_preempt_chunk")
+        for mode in ("engine_edf", "engine_edf_preempt", fast):
+            done = _sim_engine(bundle, params, ewl, mode, costs, chunk,
+                               profile=prof)
+            erows.append(_engine_row(mode, family, ewl, done))
     print_table("Pod engine (short deadline class + long-prompt "
-                "best-effort monopolizers)", erows)
+                "best-effort monopolizers), full family matrix", erows)
 
     all_rows = rows + erows
     if not tiny:

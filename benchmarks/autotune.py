@@ -50,13 +50,22 @@ CANDIDATES = (8, 16, 32, 40, 64)
 CHUNKS = (0, 8)
 
 
-def _build():
+# the full family matrix (family parity, PR 7): every family with a
+# bucketed or chunked fast path to size is calibrated and served.
+# dense/moe solve bucket tables (moe via capacity-stable masked
+# dispatch); ssm/hybrid solve only the chunk size (their prefill stays
+# exact-length, so their chunk candidates are the whole search space).
+FAMILIES = (("dense", "qwen3-32b"), ("ssm", "mamba2-780m"),
+            ("hybrid", "zamba2-1.2b"), ("moe", "deepseek-moe-16b"))
+
+
+def _build(arch: str = "qwen3-32b"):
     import jax
 
     from repro.configs import get_config
     from repro.models import get_model
 
-    cfg = get_config("qwen3-32b", reduced=True)
+    cfg = get_config(arch, reduced=True)
     bundle = get_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
     return bundle, params
@@ -198,14 +207,15 @@ def _sim(bundle, params, wl, profile, decode_us: float,
             "padded_tokens": padded}
 
 
-def _latency_row(mode: str, wl, sim: Dict) -> Dict:
+def _latency_row(mode: str, family: str, wl, sim: Dict) -> Dict:
     lat = sim["done_at"] - wl["arrivals"]
-    assert not np.isnan(lat).any(), f"{mode}: unfinished requests"
+    assert not np.isnan(lat).any(), \
+        f"{family}/{mode}: unfinished requests"
     dl = ~wl["mono"]
     p50, p95 = np.percentile(lat, (50, 95))
     slo = float((sim["done_at"][dl] <= wl["deadlines"][dl]).mean())
     return {
-        "section": "latency", "mode": mode,
+        "section": "latency", "mode": mode, "family": family,
         "n_requests": len(lat),
         "p50_us": round(float(p50), 1),
         "p95_us": round(float(p95), 1),
@@ -214,16 +224,20 @@ def _latency_row(mode: str, wl, sim: Dict) -> Dict:
     }
 
 
-def run(tiny: bool = False) -> List[Dict]:
-    """Calibrate, then serve the identical arrival process with the
-    default and the autotuned config; emit ``BENCH_autotune.json``
-    unless ``tiny``."""
+def _family_rows(family: str, arch: str, tiny: bool):
+    """Calibrate one family, then serve the identical arrival process
+    with its default and autotuned configs; returns (config rows,
+    latency rows)."""
     from repro.core import calibrate
 
-    bundle, params = _build()
+    bundle, params = _build(arch)
     vocab = bundle.cfg.vocab
     n = 12 if tiny else N_REQUESTS
     n_calib = 40 if tiny else N_CALIB
+    # moe has no chunked fast path (typed UnsupportedFamilyError), so
+    # its chunk search space is {0}; every other family here sweeps the
+    # usual candidates
+    chunks = (0,) if family == "moe" else CHUNKS
 
     # 1. the length model: the SAME 80/20 short/long mix the PR-4
     # arrival process serves (costs are placeholders — only the
@@ -233,7 +247,7 @@ def run(tiny: bool = False) -> List[Dict]:
     lengths = [len(p) for p in cwl["prompts"]]
     profile = calibrate(bundle, params, lengths, cache_len=CACHE_LEN,
                         seed=SEED, candidate_levels=CANDIDATES,
-                        chunk_candidates=CHUNKS)
+                        chunk_candidates=chunks)
     decode_us = _measure_decode_us(bundle, params)
 
     # 2. the served workload: measured costs set arrivals & deadlines.
@@ -265,23 +279,41 @@ def run(tiny: bool = False) -> List[Dict]:
             "autotuned": _sim(bundle, params, wl, profile, decode_us,
                               tuned=True)}
     match = sims["autotuned"]["tokens"] == sims["default"]["tokens"]
-    assert match, "autotuned config changed the decoded tokens"
+    assert match, \
+        f"{family}: autotuned config changed the decoded tokens"
 
     rows: List[Dict] = []
     for mode, sim in sims.items():
         rows.append({
-            "section": "config", "mode": mode,
+            "section": "config", "mode": mode, "family": family,
             "bucket_levels": ",".join(map(str, sim["levels"])),
             "prefill_chunk": sim["chunk"],
             "prefill_compiles": sim["prefill_compiles"],
-            "predicted_compiles": (profile.predicted_compiles
-                                   if mode == "autotuned" else -1),
+            # the profile's compile prediction assumes its bucket table
+            # is applied — only true of an autotuned bucketed family
+            "predicted_compiles": (
+                profile.predicted_compiles
+                if mode == "autotuned" and sim["levels"] else -1),
             "padded_tokens": sim["padded_tokens"],
             "tokens_match_default": bool(match),
         })
-    print_table("Autotuned vs default config (solved bucket table "
-                "+ chunk; compile counts)", rows)
-    lrows = [_latency_row(mode, wl, sim) for mode, sim in sims.items()]
+    lrows = [_latency_row(mode, family, wl, sim)
+             for mode, sim in sims.items()]
+    return rows, lrows
+
+
+def run(tiny: bool = False) -> List[Dict]:
+    """Calibrate and serve every family in the matrix with its default
+    and autotuned configs; emit ``BENCH_autotune.json`` unless
+    ``tiny``."""
+    rows: List[Dict] = []
+    lrows: List[Dict] = []
+    for family, arch in FAMILIES:
+        r, l = _family_rows(family, arch, tiny)
+        rows += r
+        lrows += l
+    print_table("Autotuned vs default config, full family matrix "
+                "(solved bucket table + chunk; compile counts)", rows)
     print_table("Arrival-process completion latency on measured costs "
                 "(cold compile stalls included)", lrows)
     all_rows = rows + lrows

@@ -210,10 +210,15 @@ class EngineMeasurer:
             eng = self._engine(int(size))
             cache1 = self.bundle.empty_cache(
                 1, self.cache_len, self.bundle.cfg.jnp_dtype())
+            if eng._recurrent_chunk:
+                # the recurrent-state chunk op additionally takes the
+                # chunk's true token count as a traced scalar
+                args = (self.params, cache1, toks, jnp.int32(0),
+                        jnp.int32(int(size)))
+            else:
+                args = (self.params, cache1, toks, jnp.int32(0))
             return measure_compile_and_step(
-                lambda: eng._prefill_chunk(
-                    (self.params, cache1, toks, jnp.int32(0))),
-                iters=self.iters)
+                lambda: eng._prefill_chunk(args), iters=self.iters)
         if kind == "decode":
             # one fused decode dispatch at `size` concurrent slots —
             # half-full caches so masking work is representative
@@ -714,13 +719,16 @@ def calibrate(bundle: Any, params: Any,
         raise ValueError("prompt_lengths contains no multi-token "
                          "prompt — nothing to calibrate")
     # lazy import: serving sits above core; by call time both exist
-    from repro.serving.engine import BUCKETED_FAMILIES
-    if bundle.cfg.family not in BUCKETED_FAMILIES:
-        raise ValueError(
-            f"bucket/chunk calibration applies to the bucketed "
-            f"prefill families {BUCKETED_FAMILIES}, not "
-            f"{bundle.cfg.family!r} (their prefill must stay "
-            f"exact-length — see docs/SCHEDULING.md)")
+    from repro.serving.engine import (BUCKETED_FAMILIES,
+                                      CHUNKED_FAMILIES)
+    from repro.serving.errors import UnsupportedFamilyError
+    calibratable = tuple(dict.fromkeys(BUCKETED_FAMILIES
+                                       + CHUNKED_FAMILIES))
+    if bundle.cfg.family not in calibratable:
+        raise UnsupportedFamilyError(
+            bundle.cfg.family, "bucket/chunk calibration (no bucketed "
+            "or chunked prefill fast path to size)",
+            supported=calibratable)
     if measure is None:
         measure = EngineMeasurer(bundle, params, cache_len, seed=seed,
                                  iters=iters)

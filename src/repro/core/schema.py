@@ -138,6 +138,11 @@ class OpCode:
     # per-slot block tables instead of contiguous per-slot cache rows
     SERVING_DECODE_PAGED = 44
     SERVING_PREFILL_CHUNK_PAGED = 45
+    # recurrent-state chunked prefill: the SSM/hybrid variant of
+    # SERVING_PREFILL_CHUNK — a chunk boundary is a recurrent-state
+    # checkpoint, so the carried (conv, ssd) state is a traced argument
+    # alongside the chunk tokens and the true (unpadded) chunk length
+    SERVING_PREFILL_CHUNK_STATE = 46
 
 
 # Pod-scale macro-ops: resolvable through the tag chain but never part
@@ -147,7 +152,8 @@ SERVING_OPCODES = frozenset({OpCode.SERVING_PREFILL,
                              OpCode.SERVING_DECODE,
                              OpCode.SERVING_PREFILL_CHUNK,
                              OpCode.SERVING_DECODE_PAGED,
-                             OpCode.SERVING_PREFILL_CHUNK_PAGED})
+                             OpCode.SERVING_PREFILL_CHUNK_PAGED,
+                             OpCode.SERVING_PREFILL_CHUNK_STATE})
 
 
 OP_NAMES = {v: k for k, v in vars(OpCode).items() if not k.startswith("_")}

@@ -242,11 +242,14 @@ class PallasServingDecodePaged:
     @staticmethod
     def prepare(ctx, op):
         import math as _math
+        # imported lazily: kernels layers beneath the serving package
+        from repro.serving.errors import UnsupportedFamilyError
         cfg = ctx.bundle.cfg
         if cfg.family not in ("dense", "moe", "vlm"):
-            raise ValueError(
-                f"paged KV requires a dense (KH, C, dh) cache layout; "
-                f"family {cfg.family!r} is not supported")
+            raise UnsupportedFamilyError(
+                cfg.family, "paged KV (requires a dense (KH, C, dh) "
+                            "cache layout)",
+                supported=("dense", "moe", "vlm"))
         scale = _math.sqrt(cfg.d_model) if cfg.family == "vlm" else None
         use_kernel = cfg.family in ("dense", "moe")
         return PrepareResult(output_specs=[],

@@ -196,6 +196,105 @@ def hybrid_prefill(params, cfg: ModelConfig, tokens,
                     "attn_k": ks_, "attn_v": vs_}
 
 
+def hybrid_prefill_chunk(params, cfg: ModelConfig, cache, tokens, start,
+                         n_real, *, window: Optional[int] = None, **_):
+    """Advance a batch=1 hybrid cache by one right-padded chunk (the
+    SERVING_PREFILL_CHUNK_STATE body for zamba2-style models).
+
+    Mamba layers carry (conv, state) through ``mamba_chunk_block``
+    with ``n_real`` masking the padded tail to exact no-ops; the
+    shared attention block mirrors ``lm_prefill_chunk``'s traced-start
+    chunk attention — the chunk's K/V land at absolute positions
+    ``start..start+S`` and queries attend causally over the cache.
+    Padded positions do write garbage K/V rows past the true prompt
+    length, exactly like the final padded chunk on the dense path:
+    the length-masked decode never attends them before the ring
+    overwrites them (docs/PREEMPTION.md §4).  Both ``start`` and
+    ``n_real`` are TRACED scalars, so one compiled program serves
+    every chunk of every prompt.  Requires ``start + S <= cache_len``
+    (no ring wrap) — the engine falls back to one-shot exact prefill
+    past that.
+    """
+    import math as _math
+
+    from .lm import _proj_qkv
+    from .ssm import mamba_chunk_block
+    b, s = tokens.shape
+    n_groups, every, tail = _group_split(cfg)
+    head_n = n_groups * every
+    x = embed_tokens(params, cfg, tokens)
+    head = jax.tree.map(
+        lambda a: a[:head_n].reshape(n_groups, every, *a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[head_n:], params["blocks"])
+    conv_h = cache["conv"][:head_n].reshape(
+        n_groups, every, *cache["conv"].shape[1:])
+    state_h = cache["state"][:head_n].reshape(
+        n_groups, every, *cache["state"].shape[1:])
+    sh = params["shared"]
+    positions = start + jnp.arange(s)
+    g_rep = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / _math.sqrt(cfg.dh)
+
+    def mamba_step(h, layer_in):
+        p_l, conv, state = layer_in
+        h, conv, state = mamba_chunk_block(p_l, cfg, h, conv, state,
+                                           n_real)
+        return h, (conv, state)
+
+    def attend_chunk(xin, ck, cv):
+        # ck/cv (B,KH,C,dh): write the chunk's K/V at its absolute
+        # positions, attend the chunk's queries over the cache
+        c = ck.shape[2]
+        q, kk, vv = _proj_qkv(sh["attn"], cfg, xin, positions)
+        ck = jax.lax.dynamic_update_slice(
+            ck, kk.transpose(0, 2, 1, 3).astype(ck.dtype),
+            (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, vv.transpose(0, 2, 1, 3).astype(cv.dtype),
+            (0, 0, start, 0))
+        ks_ = ck.transpose(0, 2, 1, 3)                # (B,C,KH,dh)
+        vs_ = cv.transpose(0, 2, 1, 3)
+        kx = jnp.repeat(ks_, g_rep, axis=2) if g_rep > 1 else ks_
+        vx = jnp.repeat(vs_, g_rep, axis=2) if g_rep > 1 else vs_
+        kpos = jnp.arange(c)
+        logits = jnp.einsum("bqhd,bshd->bhqs", q, kx,
+                            preferred_element_type=jnp.float32) * scale
+        mask = kpos[None, :] <= positions[:, None]
+        if window is not None:
+            mask = mask & (kpos[None, :] > positions[:, None] - window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(vx.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", w, vx)
+        y = jnp.einsum("bqhk,hkd->bqd", out, sh["attn"]["wo"])
+        return y, ck, cv
+
+    def group(h, gin):
+        p_group, conv_g, state_g, ck, cv = gin
+        h, (conv_g, state_g) = jax.lax.scan(mamba_step, h,
+                                            (p_group, conv_g, state_g))
+        xin = rms_norm(h, sh["ln1"], cfg.norm_eps)
+        att, ck, cv = attend_chunk(xin, ck, cv)
+        h2 = h + att
+        h2 = h2 + mlp_block(sh["mlp"], cfg,
+                            rms_norm(h2, sh["ln2"], cfg.norm_eps))
+        return h2, (conv_g, state_g, ck, cv)
+
+    x, (conv_g, state_g, ks_, vs_) = jax.lax.scan(
+        group, x, (head, conv_h, state_h, cache["attn_k"],
+                   cache["attn_v"]))
+    convs = conv_g.reshape(-1, *conv_g.shape[2:])
+    states = state_g.reshape(-1, *state_g.shape[2:])
+    if tail:
+        x, (ct, st) = jax.lax.scan(
+            mamba_step, x, (tail_p, cache["conv"][head_n:],
+                            cache["state"][head_n:]))
+        convs = jnp.concatenate([convs, ct])
+        states = jnp.concatenate([states, st])
+    return {"conv": convs, "state": states,
+            "attn_k": ks_, "attn_v": vs_}
+
+
 def hybrid_decode(params, cfg: ModelConfig, cache, tokens, lengths, *,
                   window: Optional[int] = None, **_):
     n_groups, every, tail = _group_split(cfg)

@@ -453,9 +453,21 @@ def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
     return max(4, -(-c // 4) * 4)          # >=4, multiple of 4
 
 
-def moe_dispatch(router_logits, cfg: ModelConfig, capacity: int):
+def moe_dispatch(router_logits, cfg: ModelConfig, capacity: int,
+                 n_valid=None, eff_capacity=None):
     """router_logits (G,T,E) -> (dispatch_idx (G,E*C) int32 token ids
-    [T = dropped], combine (G,E*C) weights, aux_loss scalar)."""
+    [T = dropped], combine (G,E*C) weights, aux_loss scalar).
+
+    Capacity-stable masked mode (bucketed MoE prefill): when
+    ``n_valid`` / ``eff_capacity`` are given (TRACED scalars), T is a
+    right-PADDED token count and ``capacity`` the bucket's python-int
+    capacity — the compiled shape.  Tokens at flat positions >=
+    ``n_valid`` are dropped outright and real tokens keep only queue
+    positions < ``eff_capacity`` (the true length's capacity), so the
+    kept set — and, because right-padding appends to the END of the
+    cumsum order, every kept token's queue position — is exactly what
+    the unpadded dispatch at the true length computes.  One compile
+    per bucket, bit-identical expert routing per true length."""
     g, t, e = router_logits.shape
     probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
     top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)          # (G,T,K)
@@ -473,10 +485,14 @@ def moe_dispatch(router_logits, cfg: ModelConfig, capacity: int):
     pos_in_e = jnp.cumsum(onehot, axis=1) - 1                 # (G,TK,E)
     pos = jnp.take_along_axis(pos_in_e, flat_ids[..., None],
                               axis=-1)[..., 0]                # (G,TK)
-    keep = pos < capacity
+    token_of = jnp.arange(t * cfg.top_k) // cfg.top_k         # (TK,)
+    if n_valid is not None:
+        cap_eff = capacity if eff_capacity is None else eff_capacity
+        keep = (pos < cap_eff) & (token_of[None, :] < n_valid)
+    else:
+        keep = pos < capacity
     slot = flat_ids * capacity + pos                          # (G,TK)
     slot = jnp.where(keep, slot, e * capacity)                # overflow bin
-    token_of = jnp.arange(t * cfg.top_k) // cfg.top_k         # (TK,)
     # scatter token ids into slots; default T = dummy token
     dispatch = jnp.full((g, e * capacity + 1), t, jnp.int32)
     combine = jnp.zeros((g, e * capacity + 1), jnp.float32)
@@ -489,23 +505,37 @@ def moe_dispatch(router_logits, cfg: ModelConfig, capacity: int):
 
 
 def moe_block(p: Params, cfg: ModelConfig, x,
-              data_shards: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+              data_shards: int = 16, n_valid=None,
+              eff_capacity=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x (B,S,D) -> (y, aux_loss).  Expert-parallel capacity dispatch.
 
     When an activation-sharding context is active and shapes divide,
     delegates to the shard_map all-to-all implementation (§Perf C4) —
-    explicit EP collectives instead of GSPMD-inferred ones."""
+    explicit EP collectives instead of GSPMD-inferred ones.
+
+    ``n_valid`` / ``eff_capacity`` (TRACED scalars) switch
+    ``moe_dispatch`` into its capacity-stable masked mode for
+    bucketed-prefill serving: S is a right-padded bucket length and
+    expert capacity a function of the BUCKET (the compiled shape)
+    while the dispatch masks to the true length's capacity — see
+    ``moe_dispatch``.  Masked mode keeps the single-group layout
+    (token positions across groups would not survive padding)."""
     b, s, d = x.shape
     from .moe_ep import ep_applicable, moe_block_ep
-    if ep_applicable(cfg, b, s):
+    if n_valid is None and ep_applicable(cfg, b, s):
         return moe_block_ep(p, cfg, x)
     t_all = b * s
     g = moe_groups(t_all, data_shards)
+    if n_valid is not None and g != 1:
+        raise ValueError("capacity-stable masked dispatch requires the "
+                         "single-group layout (got %d groups)" % g)
     t = t_all // g
     xg = shard_group(x.reshape(g, t, d))
     cap = moe_capacity(cfg, t)
     logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
-    dispatch, combine, aux = moe_dispatch(logits, cfg, cap)
+    dispatch, combine, aux = moe_dispatch(logits, cfg, cap,
+                                          n_valid=n_valid,
+                                          eff_capacity=eff_capacity)
     # pad a zero token row for dropped/dummy slots
     xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
     xe = jnp.take_along_axis(xpad, dispatch[..., None], axis=1)  # (G,EC,D)
@@ -624,12 +654,19 @@ def lm_prefill(params: Params, cfg: ModelConfig, tokens,
                window: Optional[int] = None,
                prefix_len: int = 0, data_shards: int = 16,
                prefix_embed: Optional[jnp.ndarray] = None,
-               embed_scale: Optional[float] = None):
+               embed_scale: Optional[float] = None,
+               n_valid=None, moe_cap=None):
     """tokens (B,S) -> (last-token logits (B,V), cache dict).
 
     cache layout: k/v (L, B, KH, C, dh) ring-indexed by absolute pos.
     ``prefix_embed`` (B,P,D) prepends already-embedded tokens (VLM
     vision prefix); combined with ``prefix_len`` for prefix-LM masking.
+    ``n_valid`` / ``moe_cap`` (TRACED scalars) are the capacity-stable
+    bucketed-MoE mode: S is a right-padded bucket length, ``n_valid``
+    the true token count and ``moe_cap`` the true length's expert
+    capacity — threaded into every ``moe_block`` so expert capacity is
+    a function of the bucket shape, not the true length (one compile
+    per bucket; see ``moe_dispatch``).
     """
     x = embed_tokens(params, cfg, tokens)
     if embed_scale is not None:
@@ -649,7 +686,8 @@ def lm_prefill(params: Params, cfg: ModelConfig, tokens,
         h = x + jnp.einsum("bqhk,hkd->bqd", out, p_l["attn"]["wo"])
         hin = rms_norm(h, p_l["ln2"], cfg.norm_eps)
         if "moe" in p_l:
-            y, _ = moe_block(p_l["moe"], cfg, hin, data_shards)
+            y, _ = moe_block(p_l["moe"], cfg, hin, data_shards,
+                             n_valid=n_valid, eff_capacity=moe_cap)
         else:
             y = mlp_block(p_l["mlp"], cfg, hin)
         return h + y, (k, v)

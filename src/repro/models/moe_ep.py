@@ -89,8 +89,21 @@ def _local_dispatch(cfg: ModelConfig, x, router):
 
 
 def moe_block_ep(p: Dict[str, Any], cfg: ModelConfig,
-                 x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Drop-in replacement for lm.moe_block when ep_applicable()."""
+                 x: jnp.ndarray, n_valid=None,
+                 eff_capacity=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in replacement for lm.moe_block when ep_applicable().
+
+    The capacity-stable masked dispatch (``n_valid``/``eff_capacity``,
+    serving's bucketed-MoE prefill — see ``lm.moe_dispatch``) is NOT
+    supported here: ``_local_dispatch`` computes per-shard queue
+    positions over locally contiguous token ranges, and a right-padded
+    bucket would scatter real tokens across shards differently than
+    the unpadded run.  ``lm.moe_block`` therefore keeps masked calls
+    on the single-device path; this guard is the backstop."""
+    if n_valid is not None or eff_capacity is not None:
+        raise NotImplementedError(
+            "capacity-stable masked MoE dispatch is single-device only "
+            "(lm.moe_block routes it off the EP path)")
     ctx = _act_ctx()
     mesh = ctx.mesh
     msz = mesh.shape["model"]

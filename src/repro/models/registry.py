@@ -71,8 +71,13 @@ def _tok_shapes(cfg, mode, batch, seq):
 def _dense_bundle(cfg: ModelConfig) -> ModelBundle:
     def prefill(params, batch, cache_len=None, window=None,
                 data_shards=16):
+        # n_valid/moe_cap: capacity-stable bucketed-MoE scalars the
+        # serving engine puts in the batch (traced values, see
+        # lm.moe_dispatch); absent for exact-length/non-moe prefill
         return lm.lm_prefill(params, cfg, batch["tokens"], cache_len,
-                             window=window, data_shards=data_shards)
+                             window=window, data_shards=data_shards,
+                             n_valid=batch.get("n_valid"),
+                             moe_cap=batch.get("moe_cap"))
 
     def decode(params, cache, tokens, lengths, window=None,
                data_shards=16):

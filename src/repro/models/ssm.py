@@ -300,6 +300,76 @@ def ssm_prefill(params, cfg: ModelConfig, tokens,
     return logits, {"conv": convs, "state": states}
 
 
+def mamba_chunk_block(p_l: Params, cfg: ModelConfig, h, conv, state,
+                      n_real) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray]:
+    """One mamba2 layer over a right-padded chunk with CARRIED state.
+
+    ``conv`` (B,K-1,C) is the pre-activation conv window after the
+    tokens integrated so far; ``state`` (B,G,gh,P,N) the SSD state;
+    ``n_real`` a TRACED scalar — the number of real tokens in this
+    chunk (the rest is right-padding).  Padded positions are exact
+    state no-ops: their dt is masked to 0.0, so inside ``ssd_chunked``
+    the decay ``exp(dt*A)`` is exactly 1 and the input contribution
+    ``B*dt*x`` exactly 0, and the carried conv window is sliced to
+    end at the last REAL token.  Returns ``(h_out, conv, state)``
+    advanced by exactly ``n_real`` tokens.
+    """
+    bb, ss, _ = h.shape
+    k = cfg.ssm_conv
+    pos = jnp.arange(ss)
+    xin = rms_norm(h, p_l["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p_l["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # depthwise causal conv continued from the carried window: the
+    # pre-activation window replaces _causal_conv's zero left-pad
+    full = jnp.concatenate([conv, xBC], axis=1)           # (B,K-1+S,C)
+    new_conv = jax.lax.dynamic_slice(
+        full, (0, n_real, 0), (bb, k - 1, full.shape[2]))
+    out = sum(full[:, i:i + ss] * p_l["conv_w"][i][None, None]
+              for i in range(k))
+    xBC = jax.nn.silu(out + p_l["conv_b"][None, None])
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    hh, ph = cfg.ssm_heads, cfg.ssm_head_dim
+    xs = xBC[..., :di].reshape(bb, ss, hh, ph)
+    Bm = xBC[..., di:di + g * n].reshape(bb, ss, g, n)
+    Cm = xBC[..., di + g * n:].reshape(bb, ss, g, n)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p_l["dt_bias"])
+    dtf = jnp.where(pos[None, :, None] < n_real, dtf, 0.0)
+    A = -jnp.exp(p_l["A_log"])
+    y, state = ssd_chunked(xs, dtf, A, Bm, Cm, init_state=state)
+    y = y + xs * p_l["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bb, ss, di)
+    y = rms_norm(y * jax.nn.silu(z), p_l["norm"], cfg.norm_eps)
+    h_out = h + jnp.einsum("bse,ed->bsd", y, p_l["out_proj"])
+    return h_out, new_conv, state
+
+
+def ssm_prefill_chunk(params, cfg: ModelConfig, cache, tokens, n_real,
+                      **_):
+    """Advance a batch=1 recurrent cache by one right-padded chunk of
+    prompt tokens (the SERVING_PREFILL_CHUNK_STATE body).
+
+    A chunk boundary is just a state checkpoint: the carried
+    (conv, state) cache is a traced argument and ``n_real`` (the true
+    chunk length) a traced scalar, so ONE compiled program serves
+    every chunk of every prompt — start offsets do not exist for a
+    recurrent model.  See ``mamba_chunk_block`` for the exactness
+    argument on the padded tail.
+    """
+    x = embed_tokens(params, cfg, tokens)
+
+    def body(h, layer_in):
+        p_l, conv, state = layer_in
+        h, conv, state = mamba_chunk_block(p_l, cfg, h, conv, state,
+                                           n_real)
+        return h, (conv, state)
+
+    _, (convs, states) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["state"]))
+    return {"conv": convs, "state": states}
+
+
 def ssm_decode(params, cfg: ModelConfig, cache, tokens, lengths, **_):
     x = embed_tokens(params, cfg, tokens)
 

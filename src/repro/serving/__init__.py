@@ -5,18 +5,21 @@ admission policies, and preemptive scheduling over checkpointable
 slots/lanes (scheduling, docs/PREEMPTION.md)."""
 
 from . import ops  # registers the reference serving macro-kernels
-from .engine import (BUCKETED_FAMILIES, DEFAULT_TAGS, Request,
+from .engine import (BUCKETED_FAMILIES, CHUNKED_FAMILIES, DEFAULT_TAGS,
+                     PAGED_FAMILIES, RECURRENT_FAMILIES, Request,
                      RequestResult, ServingEngine, SlotCheckpoint,
                      default_clock)
+from .errors import UnsupportedFamilyError
 from .host import MicroRequest, MicroRequestResult, MultiTenantHost
 from .scheduling import (EDFDisplacePolicy, EDFPolicy, FIFOPolicy,
                          PreemptionPolicy, PriorityPolicy,
                          SchedulingPolicy, WFQDisplacePolicy, WFQPolicy,
                          get_policy, get_preemption)
 
-__all__ = ["BUCKETED_FAMILIES", "DEFAULT_TAGS", "Request",
+__all__ = ["BUCKETED_FAMILIES", "CHUNKED_FAMILIES", "DEFAULT_TAGS",
+           "PAGED_FAMILIES", "RECURRENT_FAMILIES", "Request",
            "RequestResult", "ServingEngine", "SlotCheckpoint",
-           "default_clock",
+           "UnsupportedFamilyError", "default_clock",
            "MicroRequest", "MicroRequestResult", "MultiTenantHost",
            "EDFDisplacePolicy", "EDFPolicy", "FIFOPolicy",
            "PreemptionPolicy", "PriorityPolicy", "SchedulingPolicy",

@@ -21,7 +21,7 @@ Compile-once invariants (what callers may rely on):
   * **traced once** — the decode step is jitted at engine construction
     with the resolved registration's eval, context, and OpDef bound;
     the prefill step is jitted once per prompt-length *bucket* when
-    bucketing is active (the default for dense/vlm) and once per
+    bucketing is active (the default for dense/vlm/moe) and once per
     distinct prompt length otherwise.  Model family, cache layout,
     slot count, and window are baked in then.
   * **donated** — nothing in this engine: the KV cache and sampling
@@ -49,17 +49,27 @@ docs/PREEMPTION.md):
     length AND whose prefill math is per-position (dense/vlm): padded
     rows are positionally masked to -1e30 before softmax, so decoded
     tokens are bit-identical to the exact-length path (asserted in
-    tests/test_scheduling.py).  SSM and hybrid families keep
-    exact-length prefill — their recurrent state integrates every
-    input position, masked or not — and so does MoE, whose expert
-    capacity is a function of the token count (padding could retain a
-    token the exact-length run's capacity would drop).
+    tests/test_scheduling.py).  MoE buckets too, via capacity-stable
+    masked dispatch: expert capacity is computed from the BUCKET shape
+    while traced ``n_valid``/``moe_cap`` scalars mask routing to
+    exactly what the true length dispatches (``lm.moe_dispatch``) —
+    one compile per bucket, bit-identical expert routing.  SSM and
+    hybrid keep exact-length (or CHUNKED, below) prefill: their
+    recurrent state integrates every input position, masked or not,
+    so forcing a bucket table onto them raises
+    ``UnsupportedFamilyError``.
   * **chunked prefill** (``prefill_chunk=``) — a long prompt advances
-    ONE fixed-size chunk per engine step (``SERVING_PREFILL_CHUNK``,
-    start offset a traced scalar → one compiled chunk program total)
-    instead of running its whole prefill inside the admission path, so
-    prefill no longer monopolizes the engine between decode steps.
-    Gated to dense/vlm by the same bit-safety argument as bucketing.
+    ONE fixed-size chunk per engine step instead of running its whole
+    prefill inside the admission path, so prefill no longer
+    monopolizes the engine between decode steps.  Dense/vlm chunk
+    through ``SERVING_PREFILL_CHUNK`` (start offset a traced scalar →
+    one compiled chunk program total); ssm/hybrid chunk through
+    ``SERVING_PREFILL_CHUNK_STATE``, which carries the recurrent
+    (conv, SSD) state — plus hybrid's shared-attn KV — as a traced
+    argument: a chunk boundary is just a state checkpoint, and the
+    padded tail of the final chunk is an exact state no-op
+    (dt masked to zero).  MoE cannot chunk (expert capacity depends
+    on the token count integrated so far) and raises the typed error.
   * **preemption** (``preempt=``) — when every slot is busy and the
     queue holds a tighter request, a ``PreemptionPolicy`` picks a
     running victim; its continuation state (KV rows + slot
@@ -110,17 +120,31 @@ from repro.models.common import ModelConfig
 from repro.models.registry import ModelBundle
 
 from . import ops as serving_ops  # registers tag="reference" serving ops
+from .errors import UnsupportedFamilyError
 from .scheduling import (PreemptionPolicy, SchedulingPolicy,
                          get_policy, get_preemption)
 
 DEFAULT_TAGS = ("pallas", "reference")
 
-# families whose decode masks the KV cache by per-slot length, making
-# right-padded (bucketed) prefill bit-identical to exact-length
-# prefill.  NOT "moe": expert capacity is computed from the token
-# count, so padding could keep a token the exact-length run drops.
-# NOT "ssm"/"hybrid": recurrent state integrates every position.
-BUCKETED_FAMILIES = ("dense", "vlm")
+# families each fast path supports — the per-family safety arguments
+# live in docs/SCHEDULING.md §2 and docs/PREEMPTION.md §4.
+#
+# BUCKETED: decode masks the KV cache by per-slot length, so
+# right-padded (bucketed) prefill is bit-identical to exact-length
+# prefill.  "moe" qualifies via capacity-stable masked dispatch
+# (lm.moe_dispatch: capacity from the bucket SHAPE, routing masked to
+# the true length's).  NOT "ssm"/"hybrid": recurrent state integrates
+# every position, masked or not.
+BUCKETED_FAMILIES = ("dense", "vlm", "moe")
+# CHUNKED: dense/vlm via the KV-offset chunk op; ssm/hybrid via the
+# recurrent-state chunk op (carried state is a traced argument).  NOT
+# "moe": expert capacity depends on the token count integrated so
+# far, so per-chunk dispatch diverges from the one-shot run.
+CHUNKED_FAMILIES = ("dense", "vlm", "ssm", "hybrid")
+# chunk through SERVING_PREFILL_CHUNK_STATE (carried recurrent state)
+RECURRENT_FAMILIES = ("ssm", "hybrid")
+# PAGED: needs the dense (KH, C, dh) ring layout
+PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
 def default_clock() -> int:
@@ -244,23 +268,27 @@ class ServingEngine:
                     f"prefill_buckets must be a BucketTable, True, "
                     f"False, or None, got {prefill_buckets!r}")
             if self.cfg.family not in BUCKETED_FAMILIES:
-                raise ValueError(
-                    f"bucketed prefill is only bit-safe for "
-                    f"{BUCKETED_FAMILIES} families, not "
-                    f"{self.cfg.family!r}")
+                raise UnsupportedFamilyError(
+                    self.cfg.family, "bucketed prefill",
+                    supported=BUCKETED_FAMILIES)
             self.bucket_table = prefill_buckets
+        # capacity-stable MoE bucketing: every bucketed-moe prefill
+        # batch carries traced n_valid/moe_cap scalars (lm.moe_dispatch)
+        self._moe_masked = (self.cfg.family == "moe"
+                            and self.bucket_table is not None)
         # prefill_chunk: None/False/0 = off, True = auto size (the
         # bucket table's min bucket, 8 when bucketing is off), int =
-        # that many tokens per chunk.  Same family gate as bucketing:
-        # chunking relies on the length-masked decode to hide the
-        # padded tail of the last chunk.
+        # that many tokens per chunk.  dense/vlm chunk at a traced KV
+        # offset; ssm/hybrid chunk through the recurrent-state op;
+        # moe cannot chunk (capacity depends on tokens integrated).
         self.chunk_tokens = 0
+        self._recurrent_chunk = False
         if prefill_chunk:
-            if self.cfg.family not in BUCKETED_FAMILIES:
-                raise ValueError(
-                    f"chunked prefill is only bit-safe for "
-                    f"{BUCKETED_FAMILIES} families, not "
-                    f"{self.cfg.family!r}")
+            if self.cfg.family not in CHUNKED_FAMILIES:
+                raise UnsupportedFamilyError(
+                    self.cfg.family, "chunked prefill",
+                    supported=CHUNKED_FAMILIES)
+            self._recurrent_chunk = self.cfg.family in RECURRENT_FAMILIES
             if prefill_chunk is True:
                 self.chunk_tokens = (self.bucket_table.min_bucket
                                      if self.bucket_table else 8)
@@ -278,11 +306,11 @@ class ServingEngine:
         self.kv_block = int(kv_block) if kv_block else 0
         self.paged = bool(self.kv_block)
         if self.paged:
-            if self.cfg.family not in ("dense", "moe", "vlm"):
-                raise ValueError(
-                    f"paged KV requires a dense (KH, C, dh) cache "
-                    f"layout; family {self.cfg.family!r} is not "
-                    f"supported")
+            if self.cfg.family not in PAGED_FAMILIES:
+                raise UnsupportedFamilyError(
+                    self.cfg.family,
+                    "paged KV (requires a dense (KH, C, dh) cache "
+                    "layout)", supported=PAGED_FAMILIES)
             if cache_len % self.kv_block:
                 raise ValueError(
                     f"kv_block must divide cache_len, got "
@@ -340,8 +368,12 @@ class ServingEngine:
         # traced step is a pure function of (params, cache, tokens, ...).
         decode_code = (OpCode.SERVING_DECODE_PAGED if self.paged
                        else OpCode.SERVING_DECODE)
-        chunk_code = (OpCode.SERVING_PREFILL_CHUNK_PAGED if self.paged
-                      else OpCode.SERVING_PREFILL_CHUNK)
+        if self.paged:
+            chunk_code = OpCode.SERVING_PREFILL_CHUNK_PAGED
+        elif self._recurrent_chunk:
+            chunk_code = OpCode.SERVING_PREFILL_CHUNK_STATE
+        else:
+            chunk_code = OpCode.SERVING_PREFILL_CHUNK
         opcodes = [OpCode.SERVING_PREFILL, decode_code]
         if self.chunk_tokens:
             opcodes.append(chunk_code)
@@ -363,8 +395,10 @@ class ServingEngine:
             decode_reg.eval, decode_ctx, self._decode_op))
         # prefill jits once per prompt-length BUCKET when bucket_table
         # is set (BUCKETED_FAMILIES only: decode masks KV by length,
-        # so padding is invisible); exact-length otherwise — see the
-        # BUCKETED_FAMILIES comment for why moe/ssm/hybrid are out
+        # so padding is invisible, and moe additionally carries the
+        # capacity-stable n_valid/moe_cap scalars); exact-length
+        # otherwise — see the BUCKETED_FAMILIES comment for why
+        # ssm/hybrid are out
         self._prefill = jax.jit(functools.partial(
             prefill_reg.eval, prefill_ctx, self._prefill_op))
         # the chunk step: fixed (1, chunk_tokens) token shape, start
@@ -431,10 +465,15 @@ class ServingEngine:
                 f"{profile.meta.get('backend')!r}, but this process "
                 f"runs on {jax.default_backend()!r} — costs are "
                 f"hardware facts; re-calibrate on this backend")
-        kw.setdefault("prefill_buckets", profile.bucket_table())
-        kw.setdefault("prefill_chunk", profile.prefill_chunk or None)
+        # each solved knob applies only where the family supports the
+        # fast path it drives (a profile calibrated on a bucketing
+        # family must not force buckets onto an ssm engine)
+        if bundle.cfg.family in BUCKETED_FAMILIES:
+            kw.setdefault("prefill_buckets", profile.bucket_table())
+        if bundle.cfg.family in CHUNKED_FAMILIES:
+            kw.setdefault("prefill_chunk", profile.prefill_chunk or None)
         if getattr(profile, "kv_block", 0) \
-                and bundle.cfg.family in ("dense", "moe", "vlm"):
+                and bundle.cfg.family in PAGED_FAMILIES:
             kw.setdefault("kv_block", profile.kv_block)
         return cls(bundle, params, **kw)
 
@@ -461,8 +500,15 @@ class ServingEngine:
         self.results[req.uid] = RequestResult(uid=req.uid,
                                               prompt_len=len(req.tokens))
 
-    def _insert_cache(self, slot: int, new_cache: Any) -> None:
-        """Place a prefilled (batch=1) cache into slot ``slot``."""
+    def insert_slot_state(self, slot: int, new_cache: Any) -> None:
+        """Place a prefilled (batch=1) state pytree into slot ``slot``
+        — the pod-engine state-INSERTION hook, inverse of
+        ``extract_slot_state``.  Pytree-generic: for dense/vlm/moe the
+        leaves are KV rings, for ssm/hybrid they are the recurrent
+        conv window + SSD state (plus the hybrid shared-attn KV), all
+        with batch on axis 1 — so a checkpointed request restores into
+        ANY slot, any family, without retracing (the slot index is a
+        host-side dynamic_update_slice start, never a shape)."""
         def ins(full, one):
             # batch dim differs per leaf family; find the axis whose size
             # is max_slots and the matching axis of size 1 in `one`
@@ -596,7 +642,7 @@ class ServingEngine:
             if self.paged:
                 self._scatter_slot_cache(slot, cache1)
             else:
-                self._insert_cache(slot, cache1)
+                self.insert_slot_state(slot, cache1)
         self.slot_req[slot] = self.results[req.uid]
         self.slot_meta[slot] = req
         self.slot_budget[slot] = (req.max_new_tokens if budget is None
@@ -614,10 +660,22 @@ class ServingEngine:
         t0 = time.perf_counter()
         n = len(req.tokens)
         if n >= 2:
+            m = n - 1
             prompt = np.asarray(req.tokens[:-1])
             if self.bucket_table is not None:
                 prompt = self._padded_prompt(prompt)
             batch = {"tokens": jnp.asarray(prompt[None])}
+            if self._moe_masked:
+                # capacity-stable bucketed-MoE scalars: capacity is a
+                # function of the BUCKET shape inside the trace, while
+                # these traced values mask dispatch to exactly what the
+                # true length m routes (lm.moe_dispatch).  Emitted even
+                # on the over-cap exact-length fallback (where they
+                # degenerate to unmasked semantics) so every prefill of
+                # a given shape shares one trace signature.
+                from repro.models.lm import moe_capacity
+                batch["n_valid"] = jnp.int32(m)
+                batch["moe_cap"] = jnp.int32(moe_capacity(self.cfg, m))
             if req.extras:
                 for k, v in req.extras.items():
                     batch[k] = jnp.asarray(v[None])
@@ -650,7 +708,21 @@ class ServingEngine:
         FIRST chunk through the ordinary prefill step (fixed
         (1, chunk_tokens) shape — for vlm this is also what integrates
         the vision prefix), park the batch=1 cache in a ``_ChunkState``,
-        and let subsequent ``step()`` calls advance one chunk each."""
+        and let subsequent ``step()`` calls advance one chunk each.
+
+        Recurrent families (ssm/hybrid) skip the one-shot prefill step
+        entirely: the carried-state chunk op is seeded with an EMPTY
+        cache (zero conv window ≡ the zero left-padding ``_causal_conv``
+        assumes, zero SSD state ≡ no history) and EVERY chunk — the
+        first included — goes through the single compiled
+        SERVING_PREFILL_CHUNK_STATE program, so a chunked ssm/hybrid
+        engine traces zero prefill programs."""
+        if self._recurrent_chunk:
+            cache1 = self.bundle.empty_cache(1, self.cache_len,
+                                             self.cfg.jnp_dtype())
+            self._chunking[slot] = _ChunkState(req, cache1, 0)
+            self._advance_chunk(slot)
+            return
         t0 = time.perf_counter()
         first = np.asarray(req.tokens[:self.chunk_tokens])
         batch = {"tokens": jnp.asarray(first[None])}
@@ -695,6 +767,14 @@ class ServingEngine:
             self.kv_pool = self._prefill_chunk(
                 (self.params, self.kv_pool, self._table_row(slot),
                  jnp.asarray(tok[None]), jnp.int32(start)))
+        elif self._recurrent_chunk:
+            # carried-state dispatch: the chunk's true token count rides
+            # along as a traced scalar — the padded tail of the final
+            # chunk is an exact state no-op (dt masked to zero), so one
+            # compiled program serves full and partial chunks alike
+            cs.cache1 = self._prefill_chunk(
+                (self.params, cs.cache1, jnp.asarray(tok[None]),
+                 jnp.int32(start), jnp.int32(real)))
         else:
             cs.cache1 = self._prefill_chunk(
                 (self.params, cs.cache1, jnp.asarray(tok[None]),
@@ -709,9 +789,14 @@ class ServingEngine:
 
     # -- preemption: slot checkpoint / evict / restore ------------------
 
-    def _extract_cache(self, slot: int) -> Any:
-        """Slot ``slot``'s cache rows as a batch=1 pytree of np copies
-        — the inverse of ``_insert_cache``, host-side."""
+    def extract_slot_state(self, slot: int) -> Any:
+        """Slot ``slot``'s model state as a batch=1 pytree of np copies
+        — the pod-engine state-EXTRACTION hook ``SlotCheckpoint`` (and
+        the host's ``LaneCheckpoint``) carry.  Pytree-generic over the
+        family's cache: KV rings for dense/vlm/moe, the recurrent conv
+        window + SSD state (f32, exactly as the decode step left them)
+        for ssm/hybrid — so restoring via ``insert_slot_state`` resumes
+        bit-identically for every family."""
         def ext(full):
             axes = [ax for ax in range(full.ndim)
                     if full.shape[ax] == self.max_slots]
@@ -752,7 +837,7 @@ class ServingEngine:
                 blocks=list(self._slot_blocks[slot]),
                 reserved=self._slot_reserved[slot])
         return SlotCheckpoint(
-            phase="decode", cache=self._extract_cache(slot),
+            phase="decode", cache=self.extract_slot_state(slot),
             length=int(self.lengths[slot]),
             cur_token=int(self.cur_tokens[slot, 0]),
             budget=int(self.slot_budget[slot]))
@@ -811,8 +896,8 @@ class ServingEngine:
             self._chunking[slot] = _ChunkState(req, cache1,
                                                ckpt.done_tokens)
         else:
-            self._insert_cache(slot, jax.tree.map(jnp.asarray,
-                                                  ckpt.cache))
+            self.insert_slot_state(slot, jax.tree.map(jnp.asarray,
+                                                      ckpt.cache))
             self._activate_slot(req, slot, None, length=ckpt.length,
                                 cur_token=ckpt.cur_token,
                                 budget=ckpt.budget)

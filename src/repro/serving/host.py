@@ -76,8 +76,8 @@ from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import MicroModel
 from repro.models.registry import ModelBundle
 
-from .engine import (BUCKETED_FAMILIES, Request, RequestResult,
-                     ServingEngine, default_clock)
+from .engine import (BUCKETED_FAMILIES, CHUNKED_FAMILIES, Request,
+                     RequestResult, ServingEngine, default_clock)
 from .scheduling import (PreemptionPolicy, SchedulingPolicy, get_policy,
                          get_preemption)
 
@@ -162,9 +162,10 @@ class MultiTenantHost:
         prefill lengths through the host's shared prompt table (when
         its family supports bucketing)."""
         bucketable = bundle.cfg.family in BUCKETED_FAMILIES
+        chunkable = bundle.cfg.family in CHUNKED_FAMILIES
         buckets = self.prompt_buckets if bucketable else False
         chunk = (self.profile.prefill_chunk or None
-                 if self.profile is not None and bucketable else None)
+                 if self.profile is not None and chunkable else None)
         eng = ServingEngine(bundle, params, max_slots=max_slots,
                             cache_len=cache_len, arena=self.arena,
                             policy=self.policy, clock=self.clock,

@@ -33,6 +33,15 @@ from typing import Any, Optional
 from repro.core.op_resolver import PrepareResult, register_op
 from repro.core.schema import OpCode
 
+from .errors import UnsupportedFamilyError
+
+# families each fast path supports (the engine mirrors these; see
+# docs/SCHEDULING.md §2 and docs/PREEMPTION.md §4 for the safety
+# arguments per family)
+CHUNKED_FAMILIES = ("dense", "vlm", "ssm", "hybrid")
+RECURRENT_FAMILIES = ("ssm", "hybrid")
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
 
 class ServingContext:
     """Pod-scale Prepare/EvalContext analogue: hands the kernel the model
@@ -87,10 +96,12 @@ class RefServingPrefillChunk:
     prepare() bakes the family decision into ``op_data``: dense runs
     the plain backbone, vlm adds Gemma's sqrt(d_model) embedding scale
     (its vision prefix was integrated by the FIRST chunk, which goes
-    through the ordinary SERVING_PREFILL path).  Families whose state
-    integrates every position (ssm/hybrid) or whose routing depends on
-    the token count (moe) cannot chunk bit-safely, so prepare() raises
-    — the same guard bucketed prefill applies (docs/PREEMPTION.md §4)."""
+    through the ordinary SERVING_PREFILL path).  Recurrent families
+    (ssm/hybrid) chunk through SERVING_PREFILL_CHUNK_STATE instead —
+    this KV-offset variant assumes a dense ring cache — and MoE
+    cannot chunk at all (expert capacity depends on the token count
+    integrated so far), so prepare() raises the typed
+    ``UnsupportedFamilyError`` for both (docs/PREEMPTION.md §4)."""
 
     @staticmethod
     def prepare(ctx: ServingContext, op) -> PrepareResult:
@@ -102,9 +113,10 @@ class RefServingPrefillChunk:
         elif family == "dense":
             scale = None
         else:
-            raise ValueError(
-                f"chunked prefill is only bit-safe for dense/vlm "
-                f"families, not {family!r}")
+            raise UnsupportedFamilyError(
+                family, "KV-offset chunked prefill "
+                        "(SERVING_PREFILL_CHUNK)",
+                supported=("dense", "vlm"))
         return PrepareResult(output_specs=[], op_data={"scale": scale})
 
     @staticmethod
@@ -126,9 +138,9 @@ def _paged_family_scale(cfg) -> Optional[float]:
         return math.sqrt(cfg.d_model)
     if cfg.family in ("dense", "moe"):
         return None
-    raise ValueError(
-        f"paged KV requires a dense (KH, C, dh) cache layout; "
-        f"family {cfg.family!r} is not supported")
+    raise UnsupportedFamilyError(
+        cfg.family, "paged KV (requires a dense (KH, C, dh) cache "
+                    "layout)", supported=PAGED_FAMILIES)
 
 
 @register_op(OpCode.SERVING_DECODE_PAGED, tag="reference")
@@ -170,9 +182,10 @@ class RefServingPrefillChunkPaged:
     def prepare(ctx: ServingContext, op) -> PrepareResult:
         family = ctx.bundle.cfg.family
         if family not in ("dense", "vlm"):
-            raise ValueError(
-                f"chunked prefill is only bit-safe for dense/vlm "
-                f"families, not {family!r}")
+            raise UnsupportedFamilyError(
+                family, "paged chunked prefill "
+                        "(SERVING_PREFILL_CHUNK_PAGED)",
+                supported=("dense", "vlm"))
         return PrepareResult(
             output_specs=[],
             op_data={"scale": _paged_family_scale(ctx.bundle.cfg)})
@@ -186,3 +199,43 @@ class RefServingPrefillChunkPaged:
             params, ctx.bundle.cfg, pool, table_row, tokens, start,
             window=op.params.get("window"),
             embed_scale=ctx.op_data["scale"])
+
+
+@register_op(OpCode.SERVING_PREFILL_CHUNK_STATE, tag="reference")
+class RefServingPrefillChunkState:
+    """Reference recurrent-state chunked-prefill macro-kernel: one
+    right-padded prompt chunk through ``ssm_prefill_chunk`` /
+    ``hybrid_prefill_chunk``, carrying the batch=1 recurrent cache
+    (conv window + SSD state, plus shared-attn KV for hybrid) as a
+    traced argument — a chunk boundary is just a state checkpoint.
+
+    Inputs are ``(params, cache, tokens, start, n_real)`` with
+    ``start`` (the chunk's absolute position, used only by hybrid's
+    shared attention) and ``n_real`` (the chunk's true token count;
+    the padded tail is an exact state no-op) both TRACED scalars, so
+    one compiled program serves every chunk of every prompt.  Only the
+    recurrent families resolve here; everything else keeps the
+    KV-offset SERVING_PREFILL_CHUNK op."""
+
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        family = ctx.bundle.cfg.family
+        if family not in RECURRENT_FAMILIES:
+            raise UnsupportedFamilyError(
+                family, "recurrent-state chunked prefill "
+                        "(SERVING_PREFILL_CHUNK_STATE)",
+                supported=RECURRENT_FAMILIES)
+        return PrepareResult(output_specs=[], op_data={"family": family})
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        from repro.models.hybrid import hybrid_prefill_chunk
+        from repro.models.ssm import ssm_prefill_chunk
+
+        params, cache, tokens, start, n_real = inputs
+        cfg = ctx.bundle.cfg
+        if ctx.op_data["family"] == "hybrid":
+            return hybrid_prefill_chunk(params, cfg, cache, tokens,
+                                        start, n_real,
+                                        window=op.params.get("window"))
+        return ssm_prefill_chunk(params, cfg, cache, tokens, n_real)

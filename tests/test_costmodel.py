@@ -148,7 +148,13 @@ def test_profile_version_guard(tmp_path):
         CalibrationProfile.from_json(bad)
 
 
-def test_calibrate_rejects_unbucketable_families():
+def test_calibrate_family_gate():
+    """Calibration now covers every family with a bucketed OR chunked
+    fast path to size (ssm/hybrid gained chunked prefill), so an ssm
+    bundle calibrates fine; a family with neither (audio) refuses with
+    the typed UnsupportedFamilyError."""
+    from repro.serving.errors import UnsupportedFamilyError
+
     class SsmCfg:
         family = "ssm"
         arch_id = "s"
@@ -157,8 +163,20 @@ def test_calibrate_rejects_unbucketable_families():
     class SsmBundle:
         cfg = SsmCfg()
 
-    with pytest.raises(ValueError, match="exact-length"):
-        calibrate(SsmBundle(), None, LENGTHS, cache_len=64,
+    prof = calibrate(SsmBundle(), None, LENGTHS, cache_len=64,
+                     measure=synthetic_measure())
+    assert prof.bucket_levels
+
+    class AudioCfg:
+        family = "audio"
+        arch_id = "a"
+        vocab = 8
+
+    class AudioBundle:
+        cfg = AudioCfg()
+
+    with pytest.raises(UnsupportedFamilyError, match="audio"):
+        calibrate(AudioBundle(), None, LENGTHS, cache_len=64,
                   measure=synthetic_measure())
 
 

@@ -62,6 +62,78 @@ def test_dispatch_invariants(seed, e, k, t):
     assert np.isfinite(float(aux)) and float(aux) > 0
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]), st.sampled_from([16, 32]),
+       st.data())
+def test_capacity_stable_padding_never_leaks(seed, e, k, bucket, data):
+    """Capacity-stable bucketed dispatch (serving's bucketed-MoE
+    prefill): for a random true length m within a bucket, the masked
+    dispatch over the PADDED tokens (capacity from the bucket shape,
+    ``n_valid``/``eff_capacity`` from m) must (a) never dispatch a
+    padded token to any expert and (b) dispatch exactly the same
+    (expert, queue-position, token, weight) set as the unpadded run —
+    so the downstream expert FFN + combine is bit-identical."""
+    m = data.draw(st.integers(2, bucket - 1))
+    cfg = _cfg(e, k, 1.25)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(0, 1, (1, bucket, e)), jnp.float32)
+    cap_pad = moe_capacity(cfg, bucket)
+    cap_m = moe_capacity(cfg, m)
+    d_pad, c_pad, _ = jax.jit(lambda l: moe_dispatch(
+        l, cfg, cap_pad, n_valid=jnp.int32(m),
+        eff_capacity=jnp.int32(cap_m)))(logits)
+    d_ref, c_ref, _ = jax.jit(lambda l: moe_dispatch(
+        l, cfg, cap_m))(logits[:, :m])
+    d_pad = np.asarray(d_pad)[0].reshape(e, cap_pad)
+    c_pad = np.asarray(c_pad)[0].reshape(e, cap_pad)
+    d_ref = np.asarray(d_ref)[0].reshape(e, cap_m)
+    c_ref = np.asarray(c_ref)[0].reshape(e, cap_m)
+    # (a) padded tokens never leak into any expert queue (dummy slots
+    # carry the out-of-range sentinel: `bucket` here, `m` in the ref)
+    kept = d_pad[d_pad < bucket]
+    assert (kept < m).all(), kept
+    # beyond the effective capacity every slot is a dummy
+    assert (d_pad[:, cap_m:] == bucket).all()
+    assert (c_pad[:, cap_m:] == 0).all()
+    # (b) the kept prefix of each expert queue matches the unpadded
+    # dispatch slot for slot — token ids and combine weights
+    ref_tok = np.where(d_ref < m, d_ref, -1)
+    pad_tok = np.where(d_pad[:, :cap_m] < bucket, d_pad[:, :cap_m], -1)
+    np.testing.assert_array_equal(pad_tok, ref_tok)
+    np.testing.assert_array_equal(c_pad[:, :cap_m], c_ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.data())
+def test_capacity_stable_block_output_bit_identical(seed, data):
+    """End to end through moe_block: the masked run over padded tokens
+    emits BIT-IDENTICAL outputs for the real rows — same expert set,
+    same queue positions, same expert-major combine order, so even the
+    float summation order is preserved."""
+    from repro.models.lm import moe_block
+    m = data.draw(st.integers(2, 15))
+    bucket = 16
+    cfg = _cfg(4, 2, 1.25)
+    key = jax.random.PRNGKey(seed % (2**31 - 1))
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    p = {"router": jax.random.normal(key, (d, e), jnp.float32) * 0.1,
+         "experts": {
+             "wi": jax.random.normal(key, (e, d, f)) * 0.05,
+             "wg": jax.random.normal(jax.random.fold_in(key, 1),
+                                     (e, d, f)) * 0.05,
+             "wo": jax.random.normal(jax.random.fold_in(key, 2),
+                                     (e, f, d)) * 0.05}}
+    x = jax.random.normal(jax.random.fold_in(key, 3), (1, bucket, d))
+    y_pad, _ = jax.jit(lambda p, x: moe_block(
+        p, cfg, x, data_shards=1, n_valid=jnp.int32(m),
+        eff_capacity=jnp.int32(moe_capacity(cfg, m))))(p, x)
+    y_ref, _ = jax.jit(lambda p, x: moe_block(
+        p, cfg, x, data_shards=1))(p, x[:, :m])
+    np.testing.assert_array_equal(np.asarray(y_pad)[:, :m],
+                                  np.asarray(y_ref))
+
+
 def test_dropless_matches_dense_mixture():
     """capacity_factor high enough -> block output == explicit dense
     top-k mixture computed with plain numpy-style einsums."""

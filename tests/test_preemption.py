@@ -5,7 +5,8 @@ run (including restore into a DIFFERENT lane), the no-recompile
 assertion across preempt/resume cycles (jit_cache_size), EDF-displace
 semantics through the real host and engine schedulers, WFQ share
 convergence under saturation, chunked-prefill token bit-identity for
-dense and vlm with exactly ONE chunk compile, the ssm/hybrid guard,
+dense and vlm with exactly ONE chunk compile, the typed moe chunk
+guard (ssm/hybrid parity lives in tests/test_family_parity.py),
 and the slot-placement invariance the preemption machinery relies on
 (the apply_rope head-axis fix)."""
 
@@ -370,22 +371,34 @@ def test_chunked_prefill_token_bit_identity_vlm():
     assert outs["oneshot"] == outs["chunked"]
 
 
-def test_chunked_prefill_guarded_for_state_polluting_families():
-    """SSM and hybrid recurrent state integrates every input position,
-    so the engine must refuse chunked prefill for them — same guard
-    (and same reason) as bucketed prefill."""
+def test_chunked_prefill_family_gate():
+    """ssm/hybrid now CHUNK (through the recurrent-state op, asserted
+    for parity in tests/test_family_parity.py), so constructing a
+    chunked engine for them must succeed; MoE remains out — expert
+    capacity depends on the token count integrated so far, so per-chunk
+    dispatch diverges from the one-shot run — and the refusal is the
+    TYPED error naming family and feature."""
     import jax
 
     from repro.configs import get_config
     from repro.models import get_model
+    from repro.serving.errors import UnsupportedFamilyError
 
     for name in ("mamba2-780m", "zamba2-1.2b"):
         cfg = get_config(name, reduced=True)
         m = get_model(cfg)
         params = m.init(jax.random.PRNGKey(0))
-        with pytest.raises(ValueError):
-            ServingEngine(m, params, max_slots=1, cache_len=32,
-                          prefill_chunk=8)
+        eng = ServingEngine(m, params, max_slots=1, cache_len=32,
+                            prefill_chunk=8)
+        assert eng.chunk_tokens == 8 and eng._recurrent_chunk
+
+    cfg = get_config("deepseek-moe-16b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(UnsupportedFamilyError) as ei:
+        ServingEngine(m, params, max_slots=1, cache_len=32,
+                      prefill_chunk=8)
+    assert "moe" in str(ei.value) and "chunked prefill" in str(ei.value)
 
 
 def test_prefill_chunk_argument_validation(pod_setup):

@@ -47,6 +47,13 @@ REQUIRED_ROW_KEYS = {
     "BENCH_paged_kv.json": ("mode", "hbm_bytes", "kv_block",
                             "max_slots", "peak_concurrent",
                             "occupancy_gain", "tokens_match"),
+    # family parity (PR 7): every preemption / autotune row is tagged
+    # with the model family it was measured on, so readers can slice
+    # the full family matrix and a family can never silently drop out
+    "BENCH_preemption.json": ("mode", "family", "deadline_p50_us",
+                              "deadline_p99_us", "deadline_slo_pct",
+                              "mono_p99_us"),
+    "BENCH_autotune.json": ("section", "mode", "family"),
 }
 
 Violation = Tuple[str, str]
