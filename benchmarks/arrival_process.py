@@ -50,6 +50,23 @@ bounded by HBM) and a paged engine given the SAME HBM budget as a
 shared block pool — admissible concurrency is bounded by blocks
 actually needed, not worst-case slabs, and the decoded tokens must
 stay bit-identical.  How to read those rows: docs/ARCHITECTURE.md §8.
+
+``--replicas`` runs the REPLICA-ROUTING sweep (registered as
+``replica_sweep`` → ``BENCH_replica_sweep.json``): the PR-4 engine
+arrival mix (short deadline class + long monopolizers) served by 1, 2
+and 4 ``ServingEngine`` replicas behind a ``ReplicaRouter``, swept
+over a routing-policy LADDER: load-blind round-robin and load-aware
+least-loaded route at admission time only, while locality adds the
+router's stickiness-aware work-stealing rebalancer (the rebalancer is
+the locality mechanism — it moves only checkpoint-free work, so it
+needs ``home_of`` bookkeeping to be safe).  Dispatches are real; the
+virtual clock advances by the MAX of the
+replicas' per-tick measured costs (replicas run in parallel on
+disjoint device sets), so throughput and p99 vs replica count are
+deterministic given the seed — and every config's decoded tokens must
+be bit-identical to the single-replica baseline (routing is
+placement, never semantics).  How to read those rows:
+docs/ARCHITECTURE.md §9.
 """
 
 from __future__ import annotations
@@ -365,15 +382,20 @@ def _preempt_row(mode: str, wl, sim: Dict, dispatch_us: float) -> Dict:
 # ---------------------------------------------------------------------------
 
 def _engine_workload(rng: np.random.Generator, n: int, vocab: int,
-                     decode_us: float, prefill_short_us: float) -> Dict:
+                     decode_us: float, prefill_short_us: float,
+                     arrival_scale: float = 1.0) -> Dict:
     """80% short deadline-class requests (5-token prompt, 4 new
     tokens), 20% long best-effort monopolizers (41-token prompt, 16 new
-    tokens) whose one-shot prefill stalls every other slot."""
+    tokens) whose one-shot prefill stalls every other slot.
+    ``arrival_scale`` scales the mean inter-arrival gap (1.0 = the
+    single-engine intensity; the replica sweep halves it so the
+    offered load still exercises a multi-replica pod)."""
     mono = rng.random(n) < 0.2
     plens = np.where(mono, 41, 5)
     budgets = np.where(mono, 16, 4)
     service = prefill_short_us + 4 * decode_us   # deadline-class cost
-    arrivals = np.cumsum(rng.exponential(3.0 * decode_us, n))
+    arrivals = np.cumsum(
+        rng.exponential(arrival_scale * 3.0 * decode_us, n))
     deadlines = np.where(mono, np.inf, arrivals + 4.0 * service)
     prompts = [rng.integers(0, vocab - 2, L).astype(np.int32)
                for L in plens]
@@ -707,6 +729,149 @@ def run_paged(tiny: bool = False) -> List[Dict]:
 
 
 # ---------------------------------------------------------------------------
+# section 6 (--replicas): data-parallel replica routing sweep
+# ---------------------------------------------------------------------------
+
+REPLICA_COUNTS = (1, 2, 4)
+REPLICA_POLICIES = ("round-robin", "least-loaded", "locality")
+
+
+def _sim_replicas(bundle, params, wl, n_replicas: int, routing: str,
+                  costs: Dict) -> Dict:
+    """Serve the engine arrival mix through ``n_replicas`` REAL engine
+    replicas behind a ``ReplicaRouter``: per tick the router routes
+    arrivals, every replica advances one engine step, and the virtual
+    clock moves by the MAX of the replicas' measured step costs
+    (replicas run in parallel — the tick is as long as the slowest
+    replica's dispatch).  The policies form a ladder: round-robin and
+    least-loaded are admission-time-only placement, while locality
+    additionally runs the router's stickiness-aware rebalancer each
+    tick (``rebalance=True``) — work stealing that never touches
+    checkpointed requests.  Returns completion times, total decoded
+    tokens, makespan, and per-uid outputs for the bit-identity
+    check."""
+    from repro.serving import ReplicaRouter, Request, ServingEngine
+
+    clock = VirtualClock()
+    engs = [ServingEngine(bundle, params, max_slots=2, cache_len=64,
+                          policy="edf", clock=clock)
+            for _ in range(n_replicas)]
+    router = ReplicaRouter(engs, routing=routing,
+                           rebalance=(routing == "locality"))
+    n = len(wl["arrivals"])
+    done_at = np.full(n, np.nan)
+    nxt = 0
+    while True:
+        while nxt < n and wl["arrivals"][nxt] <= clock.now_us:
+            d = wl["deadlines"][nxt]
+            router.submit(Request(
+                uid=nxt, tokens=wl["prompts"][nxt],
+                max_new_tokens=int(wl["budgets"][nxt]),
+                deadline_us=None if np.isinf(d) else int(d),
+                arrival_us=int(wl["arrivals"][nxt])))
+            nxt += 1
+        if router.rebalance and len(engs) > 1:
+            router._rebalance()
+        more = False
+        dt = 0.0
+        for eng in engs:
+            if eng.step():
+                more = True
+            ev = eng.last_step
+            d_r = 0.0
+            if ev["decoded"]:
+                d_r += costs["decode"]
+            for L in ev["prefill_tokens"]:
+                cost = costs.get(("prefill", L))
+                if cost is None:
+                    cost = costs[("prefill", 64)] * (L / 64.0)
+                d_r += cost
+            dt = max(dt, d_r)
+        clock.now_us += max(dt, 1.0)
+        for uid, res in router.results.items():
+            if res.done and np.isnan(done_at[uid]):
+                done_at[uid] = clock.now_us
+        if not more:
+            if nxt >= n:
+                break
+            clock.now_us = max(clock.now_us, wl["arrivals"][nxt])
+    outs = {u: list(r.output) for u, r in router.results.items()}
+    tokens = sum(len(o) for o in outs.values())
+    return {"done_at": done_at, "outputs": outs, "tokens": tokens,
+            "makespan_us": clock.now_us}
+
+
+def _replica_row(replicas: int, policy: str, wl, sim: Dict,
+                 base_outputs: Dict) -> Dict:
+    """One sweep row.  The latency percentiles are over the DEADLINE
+    class only (like BENCH_preemption's deadline_p50/p99): the
+    monopolizers are best-effort and their completion latency is
+    dominated by their own 16-token service time, which no routing
+    policy can change — folding them in would bury the queueing delay
+    routing actually controls."""
+    lat = sim["done_at"] - wl["arrivals"]
+    assert not np.isnan(lat).any(), \
+        f"replicas={replicas}/{policy}: unfinished requests"
+    dl = ~wl["mono"]
+    slo = float((sim["done_at"][dl] <= wl["deadlines"][dl]).mean())
+    return {
+        "replicas": replicas,
+        "policy": policy,
+        "n_requests": len(lat),
+        "throughput": round(
+            sim["tokens"] / (sim["makespan_us"] * 1e-6), 1),
+        "p50_us": round(float(np.percentile(lat[dl], 50)), 1),
+        "p99_us": round(float(np.percentile(lat[dl], 99)), 1),
+        "slo": round(100 * slo, 1),
+        "tokens_match": sim["outputs"] == base_outputs,
+    }
+
+
+def run_replicas(tiny: bool = False) -> List[Dict]:
+    """The --replicas benchmark: replica count × routing policy over
+    the PR-4 engine arrival mix.  Emits ``BENCH_replica_sweep.json``
+    unless ``tiny``."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen3-32b", reduced=True)
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    costs = _measure_engine_costs(bundle, params, chunk=0)
+    n = 16 if tiny else 60
+    # half the single-engine inter-arrival gap: the sweep provisions
+    # up to 4 replicas, and an arrival process a single engine can
+    # absorb leaves a 4-replica pod idle enough that every routing
+    # policy looks the same — the composition (80/20 mix, budgets,
+    # deadlines) is untouched
+    wl = _engine_workload(np.random.default_rng(SEED + 5), n,
+                          cfg.vocab, costs["decode"],
+                          costs[("prefill", 8)], arrival_scale=0.5)
+    counts = (1, 2) if tiny else REPLICA_COUNTS
+    # the single-replica round-robin run IS the exact baseline every
+    # other config's tokens are checked against
+    base = _sim_replicas(bundle, params, wl, 1, "round-robin", costs)
+    rows = [_replica_row(1, "round-robin", wl, base, base["outputs"])]
+    for r in counts:
+        for policy in REPLICA_POLICIES:
+            if r == 1 and policy == "round-robin":
+                continue            # already the baseline row
+            sim = _sim_replicas(bundle, params, wl, r, policy, costs)
+            rows.append(_replica_row(r, policy, wl, sim,
+                                     base["outputs"]))
+    assert all(row["tokens_match"] for row in rows), \
+        "routing changed decoded tokens — placement must never " \
+        "change semantics"
+    print_table("Replica routing sweep (PR-4 arrival mix, "
+                "replicas × policy)", rows)
+    if not tiny:
+        save_result("BENCH_replica_sweep", rows, seed=SEED)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 
 def run(tiny: bool = False) -> List[Dict]:
     lanes = 4 if tiny else LANES
@@ -748,5 +913,7 @@ if __name__ == "__main__":
         run_preempt(tiny="--tiny" in sys.argv[1:])
     elif "--paged" in sys.argv[1:]:
         run_paged(tiny="--tiny" in sys.argv[1:])
+    elif "--replicas" in sys.argv[1:]:
+        run_replicas(tiny="--tiny" in sys.argv[1:])
     else:
         run(tiny="--tiny" in sys.argv[1:])

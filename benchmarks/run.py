@@ -13,6 +13,9 @@
   paged_kv               paged KV pool vs contiguous slabs at the same
                          HBM budget: peak occupancy + token
                          bit-identity (docs/ARCHITECTURE.md §8)
+  replica_sweep          replica count × routing policy over the PR-4
+                         arrival mix: throughput, p99, SLO + token
+                         bit-identity (docs/ARCHITECTURE.md §9)
   autotune               calibration-driven bucket/chunk config vs the
                          hand-picked defaults: compile counts + p95
                          arrival-process latency (docs/SCHEDULING.md)
@@ -53,6 +56,7 @@ def main(argv=None) -> None:
         "arrival_process": arrival_process.run,
         "preemption": arrival_process.run_preempt,
         "paged_kv": arrival_process.run_paged,
+        "replica_sweep": arrival_process.run_replicas,
         "autotune": autotune.run,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,

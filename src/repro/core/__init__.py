@@ -6,10 +6,12 @@ from . import quantize  # keep the module visible as repro.core.quantize
 from .arena import ArenaOverflowError, TwoStackArena
 from .costmodel import (BlockCost, BlockSolveResult, BucketCost,
                         CalibrationProfile, ChunkCost, DecodeCost,
-                        EngineMeasurer, SolveResult, calibrate,
-                        load_cached_profile, profile_cache_path,
-                        profile_model_key, save_cached_profile, solve,
-                        solve_block_size)
+                        EngineMeasurer, LaneCost, LaneSolveResult,
+                        MicroMeasurer, ReplicaCost, ReplicaSolveResult,
+                        SolveResult, calibrate, load_cached_profile,
+                        profile_cache_path, profile_model_key,
+                        save_cached_profile, solve, solve_block_size,
+                        solve_lanes, solve_replicas)
 from .exporter import export, fold_constants, strip_training_ops
 from .exporter import quantize as quantize_graph
 from .executor import (AllocationPlan, ArenaPool, BucketTable,
@@ -44,6 +46,8 @@ __all__ = [
     "BucketCost", "CalibrationProfile", "ChunkCost", "EngineMeasurer",
     "SolveResult", "calibrate", "profile_model_key", "solve",
     "BlockCost", "BlockSolveResult", "DecodeCost", "solve_block_size",
+    "LaneCost", "LaneSolveResult", "MicroMeasurer", "ReplicaCost",
+    "ReplicaSolveResult", "solve_lanes", "solve_replicas",
     "load_cached_profile", "profile_cache_path", "save_cached_profile",
     "CompileStepTiming", "measure_compile_and_step",
 ]

@@ -149,6 +149,43 @@ class BlockCost:
         return max(self.compile_us - self.step_us, 0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class LaneCost:
+    """Measured cost of one BATCHED micro dispatch at ``lanes``
+    concurrent lanes (``InterpreterPool.invoke`` advances every lane
+    for one jitted dispatch): ``step_us`` the warm dispatch,
+    ``compile_us`` the cold first one — paid once per lane count,
+    since the batch axis is a shape."""
+
+    lanes: int
+    compile_us: float
+    step_us: float
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """The pooled dispatch program's one-time trace cost."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaCost:
+    """Modeled serving capacity of ``replicas`` engine replicas,
+    priced from ONE measured fused decode dispatch: each replica
+    advances ``slots`` tokens per ``step_us`` warm dispatch, and
+    replicas run on DISJOINT device sets (data-parallel axis,
+    serving/router.py), so capacity adds linearly while the per-tick
+    latency floor stays a single dispatch."""
+
+    replicas: int
+    slots: int
+    step_us: float
+
+    @property
+    def tokens_per_us(self) -> float:
+        """Aggregate decode throughput of the replica set."""
+        return self.replicas * self.slots / self.step_us
+
+
 class EngineMeasurer:
     """The default ``measure`` hook: times the REAL compiled serving
     steps of a fresh engine — ``("prefill", L)`` runs the one-shot
@@ -262,6 +299,38 @@ class EngineMeasurer:
                     kv_block=size)
             self._aux_engines[(kind, size)] = eng
         return eng
+
+
+class MicroMeasurer:
+    """The ``measure`` hook for the multi-lane micro path: ``("micro",
+    B)`` times one REAL pooled dispatch (``InterpreterPool.invoke``)
+    at B lanes, cold then warm — the cost landscape ``solve_lanes``
+    picks the host's micro batch width from.  Lane inputs are seeded
+    random frames (values cannot affect timing, only determinism of
+    the recorded workload); ``invoke`` blocks on its arena buffer, so
+    async dispatch cannot leak device time out of the measurement."""
+
+    def __init__(self, model: Any, resolver: Any, *, seed: int = 0,
+                 iters: int = 5):
+        self.model = model
+        self.resolver = resolver
+        self.iters = int(iters)
+        self.rng = np.random.default_rng(seed)
+
+    def __call__(self, kind: str, size: int) -> CompileStepTiming:
+        if kind != "micro":
+            raise ValueError(
+                f"MicroMeasurer prices batched micro dispatches only, "
+                f"not {kind!r}")
+        from .executor import InterpreterPool
+        pool = InterpreterPool(self.model, self.resolver,
+                               batch=int(size))
+        for lane in range(pool.batch):
+            for pos, tid in enumerate(pool.alloc.model.inputs):
+                spec = pool.alloc.specs[tid]
+                pool.set_input(lane, pos, self.rng.normal(
+                    0, 1, spec.shape).astype(np.float32))
+        return measure_compile_and_step(pool.invoke, iters=self.iters)
 
 
 # ---------------------------------------------------------------------------
@@ -501,6 +570,101 @@ def solve_block_size(prompt_lengths: Sequence[int],
     return best
 
 
+@dataclasses.dataclass(frozen=True)
+class LaneSolveResult:
+    """What the lane solver decided and why: the chosen pooled batch
+    width ``lanes``, the expected total dispatch time over the demand
+    trace (``expected_us``, trace overhead included), the worst single
+    dispatch (``max_dispatch_us``), and whether the head-of-line bound
+    was met (``feasible``; without a bound, always True)."""
+
+    lanes: int
+    expected_us: float
+    max_dispatch_us: float
+    feasible: bool
+
+
+def solve_lanes(demand: Sequence[int],
+                lane_costs: Sequence[LaneCost], *,
+                max_dispatch_us: Optional[float] = None
+                ) -> LaneSolveResult:
+    """Choose the micro pool's batch width from measured dispatch
+    costs: a tick with ``d`` concurrent micro jobs needs ceil(d/B)
+    pooled dispatches at width B, so wide lanes amortize fixed
+    dispatch overhead while narrow lanes waste less on padding ticks
+    (idle lanes still run on zeros — the dispatch is one program).
+    Each width's trace overhead is charged once.  Among widths meeting
+    the head-of-line bound (one dispatch <= ``max_dispatch_us``), the
+    cheapest expected total wins; when none meets it, the least-bad
+    worst dispatch wins, flagged ``feasible=False``."""
+    ds = np.array([int(d) for d in demand], dtype=np.int64)
+    ds = ds[ds >= 1]
+    if len(ds) == 0:
+        raise ValueError("demand contains no tick with micro jobs — "
+                         "nothing to solve lane width for")
+    if not lane_costs:
+        raise ValueError("solve_lanes needs at least one measured "
+                         "LaneCost candidate")
+    results = []
+    for c in sorted(lane_costs, key=lambda c: c.lanes):
+        dispatches = -(-ds // int(c.lanes))
+        cost = float(dispatches.sum()) * c.step_us + c.trace_overhead_us
+        feasible = (max_dispatch_us is None
+                    or c.step_us <= max_dispatch_us)
+        results.append(LaneSolveResult(
+            lanes=int(c.lanes), expected_us=round(cost, 3),
+            max_dispatch_us=round(c.step_us, 3), feasible=feasible))
+    feas = [r for r in results if r.feasible]
+    if feas:
+        return min(feas, key=lambda r: (r.expected_us, r.lanes))
+    return min(results, key=lambda r: (r.max_dispatch_us, r.expected_us))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSolveResult:
+    """What the replica solver decided and why: the smallest replica
+    count whose modeled aggregate decode throughput
+    (``tokens_per_us``) meets ``target_tokens_per_us`` — or the
+    largest candidate, flagged ``feasible=False``, when none does."""
+
+    replicas: int
+    slots: int
+    step_us: float
+    tokens_per_us: float
+    target_tokens_per_us: float
+    feasible: bool
+
+
+def solve_replicas(target_tokens_per_us: float, decode: DecodeCost, *,
+                   candidates: Sequence[int] = (1, 2, 4, 8)
+                   ) -> ReplicaSolveResult:
+    """Size the data-parallel replica set from one measured decode
+    dispatch: each replica sustains ``slots/step_us`` tokens/µs and
+    replicas add linearly (disjoint devices), so the smallest
+    candidate count meeting the throughput target wins — replicas
+    beyond it buy tail latency, not feasibility, and the replica-sweep
+    benchmark (benchmarks/arrival_process.py) measures that tail."""
+    cands = sorted({int(r) for r in candidates if int(r) >= 1})
+    if not cands:
+        raise ValueError("candidates must contain a positive count")
+    if target_tokens_per_us <= 0:
+        raise ValueError("target_tokens_per_us must be positive")
+    best = None
+    for r in cands:
+        rc = ReplicaCost(replicas=r, slots=decode.slots,
+                         step_us=decode.step_us)
+        if rc.tokens_per_us >= target_tokens_per_us:
+            best = (rc, True)
+            break
+        best = (rc, False)
+    rc, feasible = best
+    return ReplicaSolveResult(
+        replicas=rc.replicas, slots=rc.slots, step_us=rc.step_us,
+        tokens_per_us=round(rc.tokens_per_us, 6),
+        target_tokens_per_us=float(target_tokens_per_us),
+        feasible=feasible)
+
+
 # ---------------------------------------------------------------------------
 # the profile (versioned JSON; measurements in, wall clock out)
 # ---------------------------------------------------------------------------
@@ -539,6 +703,15 @@ class CalibrationProfile:
     decode_costs: List[DecodeCost] = dataclasses.field(
         default_factory=list)
     block_costs: List[BlockCost] = dataclasses.field(
+        default_factory=list)
+    # batched-dispatch extension (defaulted, same load-compat rule):
+    # micro_lanes 0 = lane width not calibrated, replicas 0 = replica
+    # count not solved
+    micro_lanes: int = 0
+    lane_costs: List[LaneCost] = dataclasses.field(
+        default_factory=list)
+    replicas: int = 0
+    replica_costs: List[ReplicaCost] = dataclasses.field(
         default_factory=list)
     version: int = PROFILE_VERSION
 
@@ -588,6 +761,12 @@ class CalibrationProfile:
                              for c in d.get("decode_costs", [])]
         d["block_costs"] = [BlockCost(**c)
                             for c in d.get("block_costs", [])]
+        d.setdefault("micro_lanes", 0)
+        d.setdefault("replicas", 0)
+        d["lane_costs"] = [LaneCost(**c)
+                           for c in d.get("lane_costs", [])]
+        d["replica_costs"] = [ReplicaCost(**c)
+                              for c in d.get("replica_costs", [])]
         return cls(**d)
 
     def save(self, path: str) -> str:
@@ -684,6 +863,11 @@ def calibrate(bundle: Any, params: Any,
               decode_slots: Sequence[int] = (),
               block_candidates: Sequence[int] = (),
               new_tokens: int = 16,
+              lane_candidates: Sequence[int] = (),
+              lane_demand: Sequence[int] = (),
+              micro: Optional[Tuple[Any, Any]] = None,
+              replica_candidates: Sequence[int] = (),
+              target_tokens_per_us: Optional[float] = None,
               measure: Optional[Callable[[str, int],
                                          CompileStepTiming]] = None
               ) -> CalibrationProfile:
@@ -711,7 +895,20 @@ def calibrate(bundle: Any, params: Any,
     concurrent slots at a reference HBM budget (``solve_block_size``
     with ``new_tokens`` reserved per request) — the solved size lands
     in ``profile.kv_block`` and ``ServingEngine.from_profile`` turns
-    it on."""
+    it on.
+
+    Batched-dispatch calibration is opt-in the same way:
+    ``lane_candidates`` prices the host's pooled micro dispatch at
+    each lane count (``("micro", B)`` — supply ``micro=(model,
+    resolver)`` so the default measurer can build real
+    ``InterpreterPool``s, or inject ``measure``) and ``solve_lanes``
+    over ``lane_demand`` (per-tick concurrent micro job counts;
+    defaults to steady full demand at the widest candidate) lands in
+    ``profile.micro_lanes``; ``replica_candidates`` models per-replica
+    decode capacity from the measured fused decode step (requires
+    ``decode_slots``) and, when ``target_tokens_per_us`` is given,
+    ``solve_replicas`` lands the smallest sufficient replica count in
+    ``profile.replicas``."""
     plens = np.array([max(int(l) - 1, 0) for l in prompt_lengths],
                      dtype=np.int64)
     plens = plens[plens >= 1]
@@ -729,6 +926,12 @@ def calibrate(bundle: Any, params: Any,
             bundle.cfg.family, "bucket/chunk calibration (no bucketed "
             "or chunked prefill fast path to size)",
             supported=calibratable)
+    injected = measure is not None
+    if lane_candidates and not injected and micro is None:
+        raise ValueError(
+            "lane_candidates needs micro=(model, resolver) so the "
+            "default measurer can build real InterpreterPools (or "
+            "inject measure=)")
     if measure is None:
         measure = EngineMeasurer(bundle, params, cache_len, seed=seed,
                                  iters=iters)
@@ -781,6 +984,41 @@ def calibrate(bundle: Any, params: Any,
             prompt_lengths, block_costs, cache_len=cache_len,
             slots=ref_slots, new_tokens=new_tokens,
             vis_tokens=vis).block
+    lane_costs: List[LaneCost] = []
+    micro_lanes = 0
+    lane_cands = sorted({int(b) for b in lane_candidates
+                         if int(b) >= 1})
+    if lane_cands:
+        lane_measure = measure
+        if not injected:
+            # validated up front: micro is a (model, resolver) pair
+            lane_measure = MicroMeasurer(*micro, seed=seed,
+                                         iters=iters)
+        for B in lane_cands:
+            t = lane_measure("micro", B)
+            lane_costs.append(LaneCost(lanes=B, compile_us=t.compile_us,
+                                       step_us=t.step_us))
+        demand = [int(d) for d in lane_demand] or [max(lane_cands)]
+        micro_lanes = solve_lanes(
+            demand, lane_costs,
+            max_dispatch_us=max_dispatch_us).lanes
+    replicas = 0
+    replica_costs: List[ReplicaCost] = []
+    rep_cands = sorted({int(r) for r in replica_candidates
+                        if int(r) >= 1})
+    if rep_cands:
+        if not decode_costs:
+            raise ValueError(
+                "replica_candidates requires decode_slots — the "
+                "per-replica tick is priced from the measured fused "
+                "decode step")
+        base = max(decode_costs, key=lambda c: c.slots)
+        replica_costs = [ReplicaCost(replicas=r, slots=base.slots,
+                                     step_us=base.step_us)
+                         for r in rep_cands]
+        if target_tokens_per_us is not None:
+            replicas = solve_replicas(target_tokens_per_us, base,
+                                      candidates=rep_cands).replicas
     solver_costs = [c for c in bucket_costs if c.length in set(cands)]
     best = solve(prompt_lengths, solver_costs, chunk_costs,
                  cache_len=cache_len, max_dispatch_us=max_dispatch_us,
@@ -836,4 +1074,6 @@ def calibrate(bundle: Any, params: Any,
         meta={"jax": jax.__version__,
               "backend": jax.default_backend()},
         kv_block=int(kv_block),
-        decode_costs=decode_costs, block_costs=block_costs)
+        decode_costs=decode_costs, block_costs=block_costs,
+        micro_lanes=int(micro_lanes), lane_costs=lane_costs,
+        replicas=int(replicas), replica_costs=replica_costs)

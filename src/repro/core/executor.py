@@ -345,6 +345,24 @@ def jit_cache_size(fn) -> int:
     return fn._cache_size()
 
 
+def pin_tree(tree, shardings):
+    """Re-commit ``tree`` to ``shardings`` (a matching NamedSharding
+    pytree, or one sharding for every leaf) — the placement leg of the
+    compile-once contract on a mesh.
+
+    The jit cache keys on input SHARDINGS as well as shapes: an
+    eagerly-updated operand (a host-side ``.at[].set`` on a KV cache,
+    a block-table row write) whose placement drifts from what the
+    compiled step saw would silently retrace it.  Pinning after every
+    eager mutation makes placement an init-time constant like shapes
+    are — ``jax.device_put`` onto the sharding an array already has is
+    a no-op, so the steady state pays nothing.  ``shardings=None`` is
+    the single-device engine: identity."""
+    if shardings is None:
+        return tree
+    return jax.device_put(tree, shardings)
+
+
 # ---------------------------------------------------------------------------
 # contexts handed to kernel prepare()/eval() (the TFLM C-API analogue)
 # ---------------------------------------------------------------------------

@@ -316,3 +316,50 @@ def cache_sharding(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf)),
         cache_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """The fully-replicated NamedSharding on ``mesh`` — what every
+    traced bookkeeping value (block tables, active lengths, current
+    tokens) is pinned to on a sharded engine: their VALUES change every
+    step, but their placement never does, so the jit cache sees one
+    stable signature."""
+    return NamedSharding(mesh, P())
+
+
+def engine_shardings(cfg: ModelConfig, mesh: Mesh, params_tree: Any,
+                     cache_tree: Any, *, global_batch: int,
+                     cache1_tree: Any = None) -> Dict[str, Any]:
+    """NamedSharding trees for a ``ServingEngine``'s traced state on
+    ``mesh`` — the single entry point the serving layer shards through
+    (docs/ARCHITECTURE.md §9).
+
+    Returns a dict with:
+
+      * ``"params"`` — the Megatron-style weight shardings
+        (``param_sharding``), FSDP off: a serving mesh replicates
+        weights over ``data`` (replicas are separate engines) and
+        shards heads / FFN / experts / vocab over ``model``;
+      * ``"cache"`` — the KV arena sharding (``cache_sharding``).  For
+        a contiguous engine ``cache_tree`` is the ``(L, max_slots, …)``
+        ring tree; for a PAGED engine it is the ``PagedKVPool`` leaf
+        tree ``(L, n_blocks, KH, bs, dh)``, which shards through the
+        same per-leaf rules (the block axis sits where batch does and
+        replicates on a data=1 serving mesh, kv-heads shard on
+        ``model`` when divisible);
+      * ``"cache1"`` (when ``cache1_tree`` is given) — the batch=1
+        chunked-prefill cache sharding, so a chunk state keeps one
+        placement from first chunk to activation;
+      * ``"repl"`` — the fully-replicated sharding for traced
+        bookkeeping (block tables, lengths, current tokens).
+
+    Shapes may be ``jax.ShapeDtypeStruct`` leaves (``jax.eval_shape``)
+    — only ``.shape``/``.ndim`` are read."""
+    out = {
+        "params": param_sharding(cfg, mesh, params_tree, fsdp=False),
+        "cache": cache_sharding(cfg, mesh, cache_tree, global_batch),
+        "repl": replicated(mesh),
+    }
+    if cache1_tree is not None:
+        out["cache1"] = cache_sharding(cfg, mesh, cache1_tree, 1)
+    return out

@@ -24,6 +24,29 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(model: int = 1):
+    """A ``(data=1, model=N)`` mesh for ONE sharded serving engine:
+    tensor/expert parallelism over ``model``, no data axis — replica
+    data-parallelism lives ABOVE the engine in ``ReplicaRouter``
+    (docs/ARCHITECTURE.md §9), so each replica gets its own serving
+    mesh rather than a slice of a shared data axis.
+
+    Benchmarkable on CPU: set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes and ``make_serving_mesh(N)`` builds an N-way model
+    mesh from the forced host devices — the same GSPMD programs that
+    run on an N-chip pod."""
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if model > len(jax.devices()):
+        raise ValueError(
+            f"make_serving_mesh({model}): only {len(jax.devices())} "
+            f"devices visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={model} before "
+            f"jax initializes to emulate a CPU mesh")
+    return jax.make_mesh((1, model), ("data", "model"))
+
+
 # TPU v5e hardware constants (per chip) for the roofline model
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

@@ -1,27 +1,34 @@
 """Serving substrate: batched prefill/decode engine with KV arenas
 planned by the TFLM memory planner, multitenant hosting,
 registry-resolved serving kernels (ops), pluggable latency-aware
-admission policies, and preemptive scheduling over checkpointable
-slots/lanes (scheduling, docs/PREEMPTION.md)."""
+admission policies, preemptive scheduling over checkpointable
+slots/lanes (scheduling, docs/PREEMPTION.md), and data-parallel
+replica routing above mesh-sharded engines (router,
+docs/ARCHITECTURE.md §9)."""
 
 from . import ops  # registers the reference serving macro-kernels
 from .engine import (BUCKETED_FAMILIES, CHUNKED_FAMILIES, DEFAULT_TAGS,
-                     PAGED_FAMILIES, RECURRENT_FAMILIES, Request,
-                     RequestResult, ServingEngine, SlotCheckpoint,
-                     default_clock)
+                     PAGED_FAMILIES, RECURRENT_FAMILIES,
+                     SHARDED_FAMILIES, Request, RequestResult,
+                     ServingEngine, SlotCheckpoint, default_clock)
 from .errors import UnsupportedFamilyError
 from .host import MicroRequest, MicroRequestResult, MultiTenantHost
+from .router import ReplicaRouter
 from .scheduling import (EDFDisplacePolicy, EDFPolicy, FIFOPolicy,
-                         PreemptionPolicy, PriorityPolicy,
+                         LeastLoadedRouting, LocalityRouting,
+                         PreemptionPolicy, PriorityPolicy, ReplicaLoad,
+                         RoundRobinRouting, RoutingPolicy,
                          SchedulingPolicy, WFQDisplacePolicy, WFQPolicy,
-                         get_policy, get_preemption)
+                         get_policy, get_preemption, get_routing)
 
 __all__ = ["BUCKETED_FAMILIES", "CHUNKED_FAMILIES", "DEFAULT_TAGS",
-           "PAGED_FAMILIES", "RECURRENT_FAMILIES", "Request",
-           "RequestResult", "ServingEngine", "SlotCheckpoint",
-           "UnsupportedFamilyError", "default_clock",
+           "PAGED_FAMILIES", "RECURRENT_FAMILIES", "SHARDED_FAMILIES",
+           "Request", "RequestResult", "ServingEngine",
+           "SlotCheckpoint", "UnsupportedFamilyError", "default_clock",
            "MicroRequest", "MicroRequestResult", "MultiTenantHost",
-           "EDFDisplacePolicy", "EDFPolicy", "FIFOPolicy",
-           "PreemptionPolicy", "PriorityPolicy", "SchedulingPolicy",
+           "ReplicaRouter", "EDFDisplacePolicy", "EDFPolicy",
+           "FIFOPolicy", "LeastLoadedRouting", "LocalityRouting",
+           "PreemptionPolicy", "PriorityPolicy", "ReplicaLoad",
+           "RoundRobinRouting", "RoutingPolicy", "SchedulingPolicy",
            "WFQDisplacePolicy", "WFQPolicy", "get_policy",
-           "get_preemption", "ops"]
+           "get_preemption", "get_routing", "ops"]

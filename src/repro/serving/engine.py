@@ -112,7 +112,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
-from repro.core.executor import BucketTable, PagedKVPool
+from repro.core.executor import BucketTable, PagedKVPool, pin_tree
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import OpCode, OpDef
 from repro.kernels import ops as _vendor_kernels  # registers tag="pallas"
@@ -145,6 +145,12 @@ CHUNKED_FAMILIES = ("dense", "vlm", "ssm", "hybrid")
 RECURRENT_FAMILIES = ("ssm", "hybrid")
 # PAGED: needs the dense (KH, C, dh) ring layout
 PAGED_FAMILIES = ("dense", "moe", "vlm")
+# SHARDED: families whose param/cache trees the sharding policy
+# (distributed/sharding.py) partitions over a serving mesh's ``model``
+# axis — heads/FFN/experts for attention families, the SSD head dim
+# for recurrent ones.  NOT "audio": the encoder-decoder serving path
+# (cross-KV staging at admission) has not been partition-qualified.
+SHARDED_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
 
 
 def default_clock() -> int:
@@ -245,7 +251,8 @@ class ServingEngine:
                  prefill_buckets: Any = None,
                  prefill_chunk: Any = None, preempt: Any = None,
                  kv_block: Any = None,
-                 kv_pool_blocks: Optional[int] = None):
+                 kv_pool_blocks: Optional[int] = None,
+                 mesh: Any = None):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
@@ -342,12 +349,48 @@ class ServingEngine:
         self.kv_offset = arena.allocate_persistent(kv_bytes, tag="kv_cache")
         self.cache = cache
 
+        # --- mesh sharding (tensor/expert parallel in the engine) -----
+        # mesh: None = single-device (the default); a jax Mesh with a
+        # ``model`` axis shards the weights and the KV arena (the
+        # contiguous rings OR the paged pool) through the repo-wide
+        # sharding policy (distributed/sharding.py), while every traced
+        # bookkeeping value — block tables, lengths, current tokens —
+        # pins fully-replicated.  Values still change every step;
+        # PLACEMENTS never do (``pin_tree`` after each eager update),
+        # so admit/preempt/restore keep the compile-once contract on a
+        # mesh exactly as on one device (docs/ARCHITECTURE.md §9).
+        self.mesh = mesh
+        self._shard = None
+        if mesh is not None:
+            if self.cfg.family not in SHARDED_FAMILIES:
+                raise UnsupportedFamilyError(
+                    self.cfg.family, "mesh-sharded serving",
+                    supported=SHARDED_FAMILIES)
+            from repro.distributed.sharding import engine_shardings
+            c1_shape = jax.eval_shape(
+                lambda: bundle.empty_cache(1, cache_len, dtype))
+            self._shard = engine_shardings(
+                self.cfg, mesh, params,
+                self.kv_pool if self.paged else self.cache,
+                global_batch=(self.pool.n_blocks if self.paged
+                              else max_slots),
+                cache1_tree=c1_shape)
+            self.params = jax.device_put(params, self._shard["params"])
+            if self.paged:
+                self.kv_pool = jax.device_put(self.kv_pool,
+                                              self._shard["cache"])
+                self.block_tables = self._pin_repl(self.block_tables)
+            else:
+                self.cache = jax.device_put(self.cache,
+                                            self._shard["cache"])
+
         # --- slot bookkeeping (host side, fixed size) -----------------
         self.slot_req: List[Optional[RequestResult]] = [None] * max_slots
         self.slot_meta: List[Optional[Request]] = [None] * max_slots
         self.slot_budget = np.zeros(max_slots, np.int64)
-        self.lengths = jnp.zeros((max_slots,), jnp.int32)
-        self.cur_tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self.lengths = self._pin_repl(jnp.zeros((max_slots,), jnp.int32))
+        self.cur_tokens = self._pin_repl(
+            jnp.zeros((max_slots, 1), jnp.int32))
         self.active = np.zeros(max_slots, bool)
         self.rng = np.random.default_rng(seed)
         self.queue: List[Request] = []
@@ -492,6 +535,28 @@ class ServingEngine:
         return (jit_cache_size(self._prefill_chunk)
                 if self._prefill_chunk is not None else 0)
 
+    # -- mesh placement pins (compile-once on a mesh) -------------------
+
+    def _pin_repl(self, x: Any) -> Any:
+        """Pin a traced bookkeeping array (block table, lengths,
+        current tokens) fully-replicated on the engine's mesh —
+        identity on a single-device engine.  See ``pin_tree``."""
+        return pin_tree(x, self._shard["repl"] if self._shard else None)
+
+    def _pin_kv(self, tree: Any) -> Any:
+        """Pin the slot KV arena (contiguous cache or paged pool) back
+        onto its init-time mesh sharding after an eager host-side
+        update, so the jitted decode step sees one placement forever."""
+        return pin_tree(tree, self._shard["cache"] if self._shard
+                        else None)
+
+    def _pin_c1(self, tree: Any) -> Any:
+        """Pin a batch=1 prefill/chunk cache to its mesh sharding so a
+        chunk state keeps one placement from first chunk through
+        activation (one chunk program total, sharded or not)."""
+        return pin_tree(tree, self._shard["cache1"] if self._shard
+                        else None)
+
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if req.arrival_us is None:
@@ -521,7 +586,8 @@ class ServingEngine:
                     return jax.lax.dynamic_update_slice(
                         full, one.astype(full.dtype), tuple(start))
             raise ValueError((full.shape, one.shape))
-        self.cache = jax.tree.map(ins, self.cache, new_cache)
+        self.cache = self._pin_kv(jax.tree.map(ins, self.cache,
+                                               new_cache))
 
     def _padded_prompt(self, tokens: np.ndarray) -> np.ndarray:
         """Right-pad the prefill prompt to its power-of-two bucket so
@@ -592,8 +658,8 @@ class ServingEngine:
         inactive or mid-chunked-prefill keeps its decode row pointed at
         the garbage block (its chunk dispatches carry ``_table_row``
         directly) or stale decode writes would corrupt its blocks."""
-        self.block_tables = self.block_tables.at[slot].set(
-            self._table_row(slot))
+        self.block_tables = self._pin_repl(
+            self.block_tables.at[slot].set(self._table_row(slot)))
 
     def _scatter_slot_cache(self, slot: int, cache1: Any) -> None:
         """Scatter a contiguous batch=1 cache into the slot's mapped
@@ -609,7 +675,8 @@ class ServingEngine:
                 0, 2, 1, 3, 4)
             return pool.at[:, row].set(jnp.asarray(src, pool.dtype))
 
-        self.kv_pool = jax.tree.map(sc, self.kv_pool, cache1)
+        self.kv_pool = self._pin_kv(jax.tree.map(sc, self.kv_pool,
+                                                 cache1))
 
     def _release_slot_blocks(self, slot: int) -> None:
         """Return a finished slot's blocks + unspent reservation to the
@@ -618,7 +685,8 @@ class ServingEngine:
                           reserved=max(self._slot_reserved[slot], 0))
         self._slot_blocks[slot] = []
         self._slot_reserved[slot] = 0
-        self.block_tables = self.block_tables.at[slot].set(0)
+        self.block_tables = self._pin_repl(
+            self.block_tables.at[slot].set(0))
 
     def _activate_slot(self, req: Request, slot: int,
                        cache1: Any = None, *,
@@ -718,8 +786,8 @@ class ServingEngine:
         SERVING_PREFILL_CHUNK_STATE program, so a chunked ssm/hybrid
         engine traces zero prefill programs."""
         if self._recurrent_chunk:
-            cache1 = self.bundle.empty_cache(1, self.cache_len,
-                                             self.cfg.jnp_dtype())
+            cache1 = self._pin_c1(self.bundle.empty_cache(
+                1, self.cache_len, self.cfg.jnp_dtype()))
             self._chunking[slot] = _ChunkState(req, cache1, 0)
             self._advance_chunk(slot)
             return
@@ -740,6 +808,8 @@ class ServingEngine:
                           self.cache_len - 1))
             self._scatter_slot_cache(slot, cache1)
             cache1 = None
+        else:
+            cache1 = self._pin_c1(cache1)
         self._chunking[slot] = _ChunkState(req, cache1, len(first))
         self.results[req.uid].prefill_s += time.perf_counter() - t0
 
@@ -764,21 +834,21 @@ class ServingEngine:
             self._ensure_blocks(
                 slot, min(start + self.chunk_tokens - 1,
                           self.cache_len - 1))
-            self.kv_pool = self._prefill_chunk(
+            self.kv_pool = self._pin_kv(self._prefill_chunk(
                 (self.params, self.kv_pool, self._table_row(slot),
-                 jnp.asarray(tok[None]), jnp.int32(start)))
+                 jnp.asarray(tok[None]), jnp.int32(start))))
         elif self._recurrent_chunk:
             # carried-state dispatch: the chunk's true token count rides
             # along as a traced scalar — the padded tail of the final
             # chunk is an exact state no-op (dt masked to zero), so one
             # compiled program serves full and partial chunks alike
-            cs.cache1 = self._prefill_chunk(
+            cs.cache1 = self._pin_c1(self._prefill_chunk(
                 (self.params, cs.cache1, jnp.asarray(tok[None]),
-                 jnp.int32(start), jnp.int32(real)))
+                 jnp.int32(start), jnp.int32(real))))
         else:
-            cs.cache1 = self._prefill_chunk(
+            cs.cache1 = self._pin_c1(self._prefill_chunk(
                 (self.params, cs.cache1, jnp.asarray(tok[None]),
-                 jnp.int32(start)))
+                 jnp.int32(start))))
         cs.done += real
         self.last_step["chunks"] += 1
         self.policy.charge(cs.req.tenant, 1.0)
@@ -862,7 +932,8 @@ class ServingEngine:
             # (table row back to the garbage block) without releasing
             self._slot_blocks[slot] = []
             self._slot_reserved[slot] = 0
-            self.block_tables = self.block_tables.at[slot].set(0)
+            self.block_tables = self._pin_repl(
+                self.block_tables.at[slot].set(0))
         self._ckpt[req.uid] = ckpt
         self.results[req.uid].preemptions += 1
         self.queue.append(req)
@@ -892,7 +963,7 @@ class ServingEngine:
                                     budget=ckpt.budget)
             return
         if ckpt.phase == "prefill":
-            cache1 = jax.tree.map(jnp.asarray, ckpt.cache)
+            cache1 = self._pin_c1(jax.tree.map(jnp.asarray, ckpt.cache))
             self._chunking[slot] = _ChunkState(req, cache1,
                                                ckpt.done_tokens)
         else:
@@ -994,12 +1065,14 @@ class ServingEngine:
             return bool(self.queue or self._chunking)
         t0 = time.perf_counter()
         if self.paged:
-            logits, self.kv_pool = self._decode(
+            logits, kv_pool = self._decode(
                 (self.params, self.kv_pool, self.block_tables,
                  self.cur_tokens, self.lengths))
+            self.kv_pool = self._pin_kv(kv_pool)
         else:
-            logits, self.cache = self._decode(
+            logits, cache = self._decode(
                 (self.params, self.cache, self.cur_tokens, self.lengths))
+            self.cache = self._pin_kv(cache)
         dt = time.perf_counter() - t0
         self.last_step["decoded"] = True
         toks = self._sample(logits, 0.0)
@@ -1032,7 +1105,7 @@ class ServingEngine:
                     slot, int(lens_host[slot]) % self.cache_len)
                 if len(self._slot_blocks[slot]) != before:
                     self._sync_table_row(slot)
-        self.cur_tokens = jnp.asarray(new_cur)
+        self.cur_tokens = self._pin_repl(jnp.asarray(new_cur))
         return bool(self.active.any() or self.queue or self._chunking)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, RequestResult]:

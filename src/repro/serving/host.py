@@ -78,6 +78,7 @@ from repro.models.registry import ModelBundle
 
 from .engine import (BUCKETED_FAMILIES, CHUNKED_FAMILIES, Request,
                      RequestResult, ServingEngine, default_clock)
+from .router import ReplicaRouter
 from .scheduling import (PreemptionPolicy, SchedulingPolicy, get_policy,
                          get_preemption)
 
@@ -127,6 +128,7 @@ class MultiTenantHost:
                  clock=None, preempt: Any = None, profile: Any = None):
         self.arena = TwoStackArena(arena_bytes)
         self.engines: Dict[str, ServingEngine] = {}
+        self.routers: Dict[str, ReplicaRouter] = {}
         self.micro: Dict[str, InterpreterPool] = {}
         self._micro_pool = ArenaPool()
         self.ragged = RaggedInterpreterPool(pool=self._micro_pool)
@@ -153,14 +155,14 @@ class MultiTenantHost:
                                               max_bucket=4096)
         self.lane_buckets = BucketTable(min_bucket=2, max_bucket=1024)
 
-    def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
-                  max_slots: int = 2, cache_len: int = 128,
-                  max_prompt: int = 64) -> ServingEngine:
-        """Admit a tenant: its KV cache stacks persistently; the shared
-        nonpersistent (head) section grows to the max requirement.  The
-        engine admits through the host's policy/clock and buckets its
-        prefill lengths through the host's shared prompt table (when
-        its family supports bucketing)."""
+    def _make_engine(self, bundle: ModelBundle, params: Any, *,
+                     max_slots: int, cache_len: int, max_prompt: int,
+                     mesh: Any = None) -> ServingEngine:
+        """Build one tenant engine wired to the host's shared arena,
+        policy, clock, preemption, profile, and prompt-bucket table
+        (family permitting), growing the shared scratch reservation to
+        the new maximum — the construction path ``add_model`` and every
+        ``add_replicated_model`` replica go through."""
         bucketable = bundle.cfg.family in BUCKETED_FAMILIES
         chunkable = bundle.cfg.family in CHUNKED_FAMILIES
         buckets = self.prompt_buckets if bucketable else False
@@ -171,15 +173,60 @@ class MultiTenantHost:
                             policy=self.policy, clock=self.clock,
                             prefill_buckets=buckets,
                             prefill_chunk=chunk,
-                            preempt=self.preempt)
+                            preempt=self.preempt, mesh=mesh)
         scratch = _scratch_bytes(bundle, max_prompt)
         if scratch > self._scratch_high:
             # grow the shared head-section reservation to the new max
             self.arena.allocate_temp(scratch - self._scratch_high)
             self.arena.reset_temp()
             self._scratch_high = scratch
+        return eng
+
+    def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
+                  max_slots: int = 2, cache_len: int = 128,
+                  max_prompt: int = 64, mesh: Any = None
+                  ) -> ServingEngine:
+        """Admit a tenant: its KV cache stacks persistently; the shared
+        nonpersistent (head) section grows to the max requirement.  The
+        engine admits through the host's policy/clock and buckets its
+        prefill lengths through the host's shared prompt table (when
+        its family supports bucketing).  ``mesh`` shards the tenant's
+        weights and KV arena over the mesh's ``model`` axis
+        (docs/ARCHITECTURE.md §9)."""
+        if name in self.engines or name in self.routers:
+            raise ValueError(f"tenant {name!r} already exists")
+        eng = self._make_engine(bundle, params, max_slots=max_slots,
+                                cache_len=cache_len,
+                                max_prompt=max_prompt, mesh=mesh)
         self.engines[name] = eng
         return eng
+
+    def add_replicated_model(self, name: str, bundle: ModelBundle,
+                             params: Any, *, replicas: int = 2,
+                             routing: Any = None, max_slots: int = 2,
+                             cache_len: int = 128, max_prompt: int = 64,
+                             mesh: Any = None) -> ReplicaRouter:
+        """Admit a tenant served by ``replicas`` engine replicas behind
+        a ``ReplicaRouter`` — the data-parallel axis of ROADMAP item 2.
+        Each replica is a full engine tenant of the shared arena (its
+        KV stacks persistently like any other tenant's) sharing the
+        host's policy/clock/preemption, and arrivals submitted via
+        ``submit(name, …)`` are load-balanced across them by the
+        ``routing`` policy (round-robin / least-loaded / locality).
+        ``mesh`` shards EVERY replica over its own ``model`` axis —
+        replica data-parallelism and in-engine tensor/expert
+        parallelism compose."""
+        if name in self.engines or name in self.routers:
+            raise ValueError(f"tenant {name!r} already exists")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        engs = [self._make_engine(bundle, params, max_slots=max_slots,
+                                  cache_len=cache_len,
+                                  max_prompt=max_prompt, mesh=mesh)
+                for _ in range(replicas)]
+        router = ReplicaRouter(engs, routing=routing)
+        self.routers[name] = router
+        return router
 
     def add_micro_model(self, name: str, model: MicroModel,
                         resolver: MicroMutableOpResolver, *,
@@ -348,7 +395,13 @@ class MultiTenantHost:
         return out
 
     def submit(self, name: str, req: Request) -> None:
-        self.engines[name].submit(req)
+        """Queue ``req`` for pod tenant ``name`` — directly on its
+        engine, or through its ``ReplicaRouter`` when the tenant was
+        admitted with ``add_replicated_model``."""
+        if name in self.routers:
+            self.routers[name].submit(req)
+        else:
+            self.engines[name].submit(req)
 
     def run_all(self) -> Dict[str, Dict[int, RequestResult]]:
         """THE scheduler: round-robin every tenant — pod engines AND
@@ -369,10 +422,15 @@ class MultiTenantHost:
             for name, eng in self.engines.items():
                 if eng.step():
                     pending = True
+            for name, router in self.routers.items():
+                if router.step():
+                    pending = True
             if self._micro_queue and self.micro_step():
                 pending = True
         for name, eng in self.engines.items():
             out[name] = eng.results
+        for name, router in self.routers.items():
+            out[name] = router.results
         return out
 
     def usage(self):

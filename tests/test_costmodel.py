@@ -10,8 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core import (BucketCost, BucketTable, CalibrationProfile,
-                        ChunkCost, CompileStepTiming, calibrate,
-                        profile_model_key, solve)
+                        ChunkCost, CompileStepTiming, DecodeCost,
+                        LaneCost, calibrate, profile_model_key, solve,
+                        solve_lanes, solve_replicas)
 
 
 class _Cfg:
@@ -353,6 +354,148 @@ def test_single_token_prompts_need_no_calibration():
     with pytest.raises(ValueError, match="multi-token"):
         calibrate(_Bundle(), None, [1, 1], cache_len=64,
                   measure=synthetic_measure())
+
+
+# ---------------------------------------------------------------------------
+# batched-dispatch calibration: lane widths and replica counts
+# ---------------------------------------------------------------------------
+
+def lane_measure(fixed_us=80.0, per_lane_us=10.0, compile_us=3000.0):
+    """Deterministic pooled-dispatch cost stand-in: every dispatch
+    pays a fixed overhead plus a per-lane term (sublinear batching —
+    what makes widening lanes worthwhile)."""
+    def measure(kind, size):
+        assert kind == "micro", kind
+        step = fixed_us + per_lane_us * size
+        return CompileStepTiming(compile_us=compile_us + step,
+                                 step_us=step, iters=5)
+    return measure
+
+
+def test_lane_solver_amortizes_fixed_dispatch_overhead():
+    """Steady demand of 8 concurrent jobs: one 8-wide dispatch (160µs)
+    beats eight 1-wide ones (8×90µs) — the fixed overhead dominates —
+    while a head-of-line bound under the wide step forces narrow."""
+    costs = [LaneCost(lanes=B, compile_us=0.0, step_us=80.0 + 10.0 * B)
+             for B in (1, 2, 4, 8)]
+    wide = solve_lanes([8] * 10, costs)
+    assert wide.lanes == 8 and wide.feasible
+    bound = solve_lanes([8] * 10, costs, max_dispatch_us=110.0)
+    assert bound.lanes == 2 and bound.feasible
+    assert bound.max_dispatch_us <= 110.0
+    # a bound under every candidate: least-bad, flagged infeasible
+    hopeless = solve_lanes([8] * 10, costs, max_dispatch_us=10.0)
+    assert not hopeless.feasible and hopeless.lanes == 1
+
+
+def test_lane_solver_counts_padding_waste():
+    """Demand of 1 job per tick: an 8-wide pool pays the full wide
+    dispatch for one job every tick, so width 1 wins even though it
+    is worse per-lane at full occupancy."""
+    costs = [LaneCost(lanes=B, compile_us=0.0, step_us=80.0 + 10.0 * B)
+             for B in (1, 8)]
+    r = solve_lanes([1] * 20, costs)
+    assert r.lanes == 1
+
+
+def test_lane_solver_rejects_empty_inputs():
+    costs = [LaneCost(lanes=1, compile_us=0.0, step_us=1.0)]
+    with pytest.raises(ValueError, match="micro jobs"):
+        solve_lanes([0, 0], costs)
+    with pytest.raises(ValueError, match="LaneCost"):
+        solve_lanes([1], [])
+
+
+def test_replica_solver_sizes_for_throughput_target():
+    """One measured decode dispatch sizes the replica set: 2 slots per
+    100µs = 0.02 tok/µs per replica, so a 0.05 tok/µs target needs 4
+    replicas from a (1,2,4,8) ladder; an unreachable target returns
+    the largest candidate flagged infeasible."""
+    d = DecodeCost(slots=2, compile_us=5000.0, step_us=100.0)
+    r = solve_replicas(0.05, d)
+    assert r.replicas == 4 and r.feasible
+    assert r.tokens_per_us == pytest.approx(0.08)
+    bad = solve_replicas(1.0, d, candidates=(1, 2))
+    assert bad.replicas == 2 and not bad.feasible
+    with pytest.raises(ValueError, match="positive"):
+        solve_replicas(0.0, d)
+    with pytest.raises(ValueError, match="positive count"):
+        solve_replicas(0.1, d, candidates=())
+
+
+def test_lane_and_replica_calibration_deterministic_round_trip(tmp_path):
+    """The batched-dispatch extension keeps the profile contract: same
+    seed + same measurements → byte-identical profiles, and the lane/
+    replica fields survive save → load bit-exactly."""
+    def measure(kind, size):
+        if kind == "micro":
+            return lane_measure()(kind, size)
+        return synthetic_measure()(kind, size)
+    kw = dict(cache_len=64, seed=7, measure=measure,
+              lane_candidates=(1, 2, 4), lane_demand=[4, 4, 1],
+              decode_slots=(2,), replica_candidates=(1, 2, 4),
+              target_tokens_per_us=0.01)
+    a = calibrate(_Bundle(), None, LENGTHS, **kw)
+    b = calibrate(_Bundle(), None, LENGTHS, **kw)
+    assert a.to_json() == b.to_json()
+    assert a.micro_lanes in (1, 2, 4) and a.micro_lanes > 0
+    assert len(a.lane_costs) == 3
+    assert a.replicas >= 1 and len(a.replica_costs) == 3
+    q = CalibrationProfile.load(a.save(str(tmp_path / "p.json")))
+    assert q.to_json() == a.to_json()
+    assert q.lane_costs == a.lane_costs
+    assert q.replica_costs == a.replica_costs
+    assert q.micro_lanes == a.micro_lanes
+    assert q.replicas == a.replicas
+
+
+def test_profile_without_batched_dispatch_fields_still_loads():
+    """Profiles written before the batched-dispatch extension (no
+    lane/replica keys) load unchanged with the not-calibrated
+    defaults — the same rule the paged extension follows."""
+    import json
+    p = calibrate(_Bundle(), None, LENGTHS, cache_len=64,
+                  measure=synthetic_measure())
+    d = json.loads(p.to_json())
+    for k in ("micro_lanes", "lane_costs", "replicas",
+              "replica_costs"):
+        del d[k]
+    q = CalibrationProfile.from_json(json.dumps(d))
+    assert q.micro_lanes == 0 and q.lane_costs == []
+    assert q.replicas == 0 and q.replica_costs == []
+    assert q.bucket_levels == p.bucket_levels
+
+
+def test_lane_calibration_requires_micro_or_injected_measure():
+    """The default EngineMeasurer cannot price micro dispatches, so
+    asking for lanes without a (model, resolver) pair or an injected
+    measure must fail loudly, not KeyError later."""
+    with pytest.raises(ValueError, match="micro="):
+        calibrate(_Bundle(), None, LENGTHS, cache_len=64,
+                  lane_candidates=(1, 2))
+
+
+def test_replica_calibration_requires_measured_decode():
+    with pytest.raises(ValueError, match="decode_slots"):
+        calibrate(_Bundle(), None, LENGTHS, cache_len=64,
+                  measure=synthetic_measure(),
+                  replica_candidates=(1, 2))
+
+
+def test_micro_measurer_prices_real_pooled_dispatch():
+    """MicroMeasurer times a REAL InterpreterPool.invoke at each lane
+    width: timings are positive and the batch axis is the shape the
+    width is keyed on."""
+    from repro.apps import build_conv_reference
+    from repro.core import (AllOpsResolver, MicroMeasurer, MicroModel,
+                            export)
+    model = MicroModel(export(build_conv_reference()))
+    m = MicroMeasurer(model, AllOpsResolver(), seed=0, iters=1)
+    for lanes in (1, 2):
+        t = m("micro", lanes)
+        assert t.compile_us > 0 and t.step_us > 0
+    with pytest.raises(ValueError, match="micro"):
+        m("prefill", 8)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,362 @@
+"""ReplicaRouter invariants (serving/router.py, docs/ARCHITECTURE.md §9).
+
+Four router guarantees, property-tested:
+
+  * **no request lost or duplicated** — under arbitrary submit/step
+    churn every uid finishes with exactly one ``RequestResult`` held
+    at exactly one replica, and ``routed`` always agrees with where
+    the result actually lives.
+  * **locality stickiness** — a uid whose continuation state (slot
+    checkpoint) is parked at a replica is routed home by
+    ``LocalityRouting`` and is NEVER migrated off by the rebalancer,
+    regardless of load imbalance.
+  * **work conservation** — after rebalancing, no replica has
+    admission capacity it cannot fill while another queues movable
+    (checkpoint-free) surplus.
+  * **policy swaps never retrace** — swapping the routing policy
+    mid-serve leaves every replica's jit cache frozen (real engines).
+
+The structural properties run against a lightweight fake replica that
+mirrors exactly the engine surface the router touches (queue, results,
+active, _chunking, _ckpt, max_slots, submit, step) so churn sweeps are
+cheap; token-parity and retrace checks run against real reduced-config
+engines.  Hypothesis-driven sweeps engage when ``hypothesis`` is
+installed and skip cleanly when it is not — a seeded deterministic
+churn sweep covers the same invariants either way.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.executor import jit_cache_size
+from repro.models import get_model
+from repro.serving import (LocalityRouting, ReplicaLoad, ReplicaRouter,
+                           Request, RequestResult, ServingEngine,
+                           get_routing)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="hypothesis not installed")
+
+
+# ---------------------------------------------------------------------
+# fake replica: the exact engine surface ReplicaRouter touches
+# ---------------------------------------------------------------------
+
+class FakeReplica:
+    """Engine stand-in with the router-facing surface of ServingEngine:
+    FIFO admission into ``max_slots`` slots, one token per active slot
+    per step.  ``output`` records which replica emitted each token so
+    stickiness violations show up as mixed-provenance outputs."""
+
+    def __init__(self, rid, max_slots=2):
+        self.rid = rid
+        self.max_slots = max_slots
+        self.queue = []
+        self.results = {}
+        self.active = np.zeros((max_slots,), bool)
+        self.slot_budget = np.zeros((max_slots,), np.int64)
+        self._chunking = {}
+        self._ckpt = {}
+        self._slot = {}          # slot -> [uid, tokens_remaining]
+
+    def submit(self, req):
+        """Mirror ServingEngine.submit: queue + results entry."""
+        self.queue.append(req)
+        self.results[req.uid] = RequestResult(uid=req.uid,
+                                              prompt_len=len(req.tokens))
+
+    def step(self):
+        """Admit FIFO into free slots, emit one token per active slot,
+        retire exhausted budgets.  Returns True while work remains."""
+        for s in range(self.max_slots):
+            if not self.active[s] and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = True
+                self._slot[s] = [req.uid, req.max_new_tokens]
+                self.slot_budget[s] = req.max_new_tokens
+        for s, ent in list(self._slot.items()):
+            uid, rem = ent
+            self.results[uid].output.append(self.rid)
+            ent[1] -= 1
+            self.slot_budget[s] = ent[1]
+            if ent[1] == 0:
+                self.results[uid].done = True
+                self.active[s] = False
+                del self._slot[s]
+        return bool(self.queue) or bool(self._slot)
+
+
+def _req(uid, n_new=3):
+    return Request(uid=uid, tokens=np.zeros((4,), np.int32),
+                   max_new_tokens=n_new)
+
+
+def _churn(n_replicas, ops):
+    """Drive a router through a submit/step op sequence, drain it, and
+    assert the no-loss/no-duplication and bookkeeping invariants."""
+    router = ReplicaRouter([FakeReplica(i) for i in range(n_replicas)],
+                           routing="least-loaded")
+    uid = 0
+    submitted = set()
+    for op in ops:
+        if op == 0:
+            router.step()
+        else:
+            for _ in range(op):
+                router.submit(_req(uid))
+                submitted.add(uid)
+                uid += 1
+    router.run()
+    res = router.results
+    # every uid finished exactly once, nowhere twice
+    assert set(res) == submitted
+    assert all(res[u].done for u in submitted)
+    total = sum(len(r.results) for r in router.replicas)
+    assert total == len(submitted), "a uid is duplicated across replicas"
+    # routed agrees with where each result actually lives
+    for u in submitted:
+        i = router.routed[u]
+        assert u in router.replicas[i].results
+    # stickiness of emission: once a request starts at a replica, every
+    # token it ever emits comes from that replica
+    for u in submitted:
+        assert len(set(res[u].output)) == 1, (u, res[u].output)
+    return router
+
+
+def test_no_request_lost_or_duplicated_deterministic():
+    """Seeded churn sweep: bursty submits interleaved with steps across
+    1–4 replicas never lose or duplicate a request."""
+    rng = np.random.default_rng(11)
+    for n in (1, 2, 3, 4):
+        for _ in range(5):
+            ops = rng.integers(0, 4, rng.integers(3, 20)).tolist()
+            router = _churn(n, ops)
+            assert router.migrations >= 0
+
+
+if HAS_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(n=st.integers(1, 4),
+           ops=st.lists(st.integers(0, 4), min_size=1, max_size=25))
+    def test_no_request_lost_or_duplicated_hypothesis(n, ops):
+        """Hypothesis sweep of the same churn invariants."""
+        _churn(n, ops)
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(queues=st.lists(st.integers(0, 6), min_size=2, max_size=5),
+           busy=st.lists(st.integers(0, 2), min_size=2, max_size=5))
+    def test_work_conservation_hypothesis(queues, busy):
+        """After rebalance, no replica has unfillable capacity while
+        another queues movable surplus — for arbitrary load shapes."""
+        n = min(len(queues), len(busy))
+        reps = [FakeReplica(i) for i in range(n)]
+        uid = 0
+        for i, r in enumerate(reps):
+            for s in range(min(busy[i], r.max_slots)):
+                r.submit(_req(uid)); uid += 1
+            r.step()                     # admit the busy ones
+            for _ in range(queues[i]):
+                r.submit(_req(uid)); uid += 1
+        router = ReplicaRouter(reps)
+        for r in reps:                   # adopt pre-submitted uids
+            for q in list(r.results):
+                router.routed[q] = r.rid
+        router._rebalance()
+        _assert_conserved(router)
+
+
+def _assert_conserved(router):
+    """No replica needs work while another has movable surplus."""
+    loads = router.loads()
+    free = [max(0, l.slots - l.active) for l in loads]
+    need = [max(0, f - l.queued) for f, l in zip(free, loads)]
+    surplus = []
+    for i, (f, l) in enumerate(zip(free, loads)):
+        movable = sum(1 for q in router.replicas[i].queue
+                      if q.uid not in router.replicas[i]._ckpt)
+        surplus.append(max(0, min(l.queued, movable) - f))
+    assert not (any(need) and any(surplus)), (need, surplus)
+
+
+def test_work_conservation_deterministic():
+    """An idle replica steals queued work from a loaded one before the
+    next tick; the starved replica never sits empty while its peer
+    queues checkpoint-free surplus."""
+    a, b = FakeReplica(0), FakeReplica(1)
+    router = ReplicaRouter([a, b], routing="round-robin")
+    # force-load replica 0: 6 requests all submitted directly
+    for uid in range(6):
+        a.submit(_req(uid))
+        router.routed[uid] = 0
+    router.step()
+    _assert_conserved(router)
+    assert router.migrations >= 1
+    assert len(b.results) >= 1
+    res = router.run()
+    assert set(res) == set(range(6))
+    assert all(r.done for r in res.values())
+    # no duplication after the steal
+    assert sum(len(r.results) for r in router.replicas) == 6
+
+
+def test_locality_routing_sends_continuations_home():
+    """LocalityRouting overrides load: a uid with a parked checkpoint
+    at replica 1 routes there even when replica 0 is idle."""
+    a, b = FakeReplica(0), FakeReplica(1)
+    router = ReplicaRouter([a, b], routing="locality")
+    b._ckpt[7] = object()            # continuation state parked at 1
+    # replica 1 is also the BUSIER one — locality must still win
+    for uid in range(4):
+        b.submit(_req(uid))
+        router.routed[uid] = 1
+    assert router.submit(_req(7)) == 1
+    # stateless uids still load-balance to the idle replica
+    assert router.submit(_req(8)) == 0
+
+
+def test_rebalancer_never_migrates_checkpointed_work():
+    """Stickiness is a ROUTER guarantee: even under maximal imbalance
+    the rebalancer moves only checkpoint-free requests."""
+    a, b = FakeReplica(0), FakeReplica(1)
+    router = ReplicaRouter([a, b])
+    for uid in range(5):
+        a.submit(_req(uid))
+        router.routed[uid] = 0
+    a._ckpt[3] = object()            # uid 3 has state at replica 0
+    a._ckpt[4] = object()
+    router._rebalance()
+    assert 3 in a.results and 4 in a.results
+    assert router.routed[3] == 0 and router.routed[4] == 0
+    # movable uids DID migrate (the imbalance was real)
+    assert router.migrations >= 1
+
+
+def test_routing_registry_and_errors():
+    """get_routing: None → round-robin default, instances pass through,
+    unknown names fail loudly listing the registry."""
+    assert get_routing(None).name == "round-robin"
+    pol = LocalityRouting()
+    assert get_routing(pol) is pol
+    assert get_routing("least-loaded").name == "least-loaded"
+    with pytest.raises(ValueError, match="least-loaded"):
+        get_routing("nope")
+    with pytest.raises(ValueError):
+        ReplicaRouter([])
+    # duplicate in-flight submit refused
+    router = ReplicaRouter([FakeReplica(0)])
+    router.submit(_req(1))
+    with pytest.raises(ValueError, match="already routed"):
+        router.submit(_req(1))
+
+
+def test_replica_load_snapshot_shape():
+    """ReplicaLoad reports exactly the host bookkeeping the policies
+    key on: depth sums queued+active and backlog sums the remaining
+    token budgets (queued requests at full budget, active slots at
+    their slot_budget remainder)."""
+    a = FakeReplica(0)
+    for uid in range(3):
+        a.submit(_req(uid))     # 3 tokens each
+    a.step()                    # 2 admitted, each emitted 1 of 3
+    (load,) = ReplicaRouter([a]).loads()
+    assert load.slots == 2 and load.active == 2 and load.queued == 1
+    assert load.depth == 3
+    assert load.backlog == 3 + 2 + 2
+
+
+def test_least_loaded_routes_by_token_backlog_not_count():
+    """A replica holding one 16-token monopolizer is MORE loaded than
+    one holding two 3-token requests: least-loaded must key on backlog,
+    where count-based join-the-shortest-queue would pick wrong."""
+    a, b = FakeReplica(0), FakeReplica(1)
+    router = ReplicaRouter([a, b], routing="least-loaded")
+    a.submit(_req(0, n_new=16))          # depth 1, backlog 16
+    b.submit(_req(1))
+    b.submit(_req(2))                    # depth 2, backlog 6
+    router.routed.update({0: 0, 1: 1, 2: 1})
+    assert router.submit(_req(3)) == 1
+
+
+# ---------------------------------------------------------------------
+# real engines: token parity across policies, swap never retraces
+# ---------------------------------------------------------------------
+
+def _real_setup():
+    cfg = get_config("qwen3-32b", reduced=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab - 2,
+                                        5 + (i % 3) * 7).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(6)]
+    return m, params, reqs
+
+
+@pytest.mark.slow
+def test_routed_tokens_match_single_engine_every_policy():
+    """Routing is placement, not semantics: every policy decodes the
+    same tokens as one unrouted engine, with one decode program per
+    replica, and a mid-serve policy swap traces nothing new."""
+    m, params, reqs = _real_setup()
+    e0 = ServingEngine(m, params, max_slots=2, cache_len=64,
+                       prefill_buckets=False)
+    for r in reqs:
+        e0.submit(r)
+    base = {u: tuple(res.output) for u, res in e0.run().items()}
+    for routing in ("round-robin", "least-loaded", "locality"):
+        engs = [ServingEngine(m, params, max_slots=2, cache_len=64,
+                              prefill_buckets=False) for _ in range(2)]
+        router = ReplicaRouter(engs, routing=routing)
+        for r in reqs:
+            router.submit(r)
+        res = router.run()
+        assert {u: tuple(x.output) for u, x in res.items()} == base, \
+            routing
+        for e in engs:
+            assert jit_cache_size(e._decode) == 1, routing
+
+
+@pytest.mark.slow
+def test_policy_swap_mid_serve_never_retraces():
+    """Swap round-robin → least-loaded → locality while requests are in
+    flight: every replica's decode cache stays frozen at one program
+    and the merged results still match the unrouted baseline."""
+    m, params, reqs = _real_setup()
+    e0 = ServingEngine(m, params, max_slots=2, cache_len=64,
+                       prefill_buckets=False)
+    for r in reqs:
+        e0.submit(r)
+    base = {u: tuple(res.output) for u, res in e0.run().items()}
+    engs = [ServingEngine(m, params, max_slots=2, cache_len=64,
+                          prefill_buckets=False) for _ in range(2)]
+    router = ReplicaRouter(engs, routing="round-robin")
+    for r in reqs[:3]:
+        router.submit(r)
+    for _ in range(2):
+        router.step()
+    before = [jit_cache_size(e._decode) for e in engs]
+    router.set_routing("least-loaded")
+    for r in reqs[3:5]:
+        router.submit(r)
+    for _ in range(2):
+        router.step()
+    router.set_routing(LocalityRouting())
+    router.submit(reqs[5])
+    res = router.run()
+    after = [jit_cache_size(e._decode) for e in engs]
+    assert before == after == [1, 1]
+    assert {u: tuple(x.output) for u, x in res.items()} == base

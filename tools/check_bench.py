@@ -54,6 +54,11 @@ REQUIRED_ROW_KEYS = {
                               "deadline_p99_us", "deadline_slo_pct",
                               "mono_p99_us"),
     "BENCH_autotune.json": ("section", "mode", "family"),
+    # replica routing (PR 8): every sweep row pins the replica count
+    # and policy it was measured at, the latency/throughput columns
+    # the regression gate reads, and the token bit-identity flag
+    "BENCH_replica_sweep.json": ("replicas", "policy", "throughput",
+                                 "p99_us", "slo", "tokens_match"),
 }
 
 Violation = Tuple[str, str]
