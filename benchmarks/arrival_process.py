@@ -67,6 +67,22 @@ deterministic given the seed — and every config's decoded tokens must
 be bit-identical to the single-replica baseline (routing is
 placement, never semantics).  How to read those rows:
 docs/ARCHITECTURE.md §9.
+
+``--stream`` runs the STREAMING benchmark (registered as ``streaming``
+→ ``BENCH_streaming.json``): time-to-first-token and
+inter-token-latency percentiles from per-token ``StreamEvent``
+timestamps, synchronous vs OVERLAPPED decode (``overlap=True``:
+readback deferred one step, docs/STREAMING.md), swept over the family
+matrix on the virtual clock — a sync tick costs ``decode + host``
+(the device step, then the blocking readback + sampling), an overlap
+tick ``max(decode, host)`` (the host settles step i-1 while step i
+computes) — plus a WALL-CLOCK section on the dense flagship that
+serves the same saturated workload on real time and reports the
+observed ITL ratio next to the cost model's prediction, validating
+the virtual model against real dispatch overlap.  Tokens must stay
+bit-identical between the modes in every row (asserted, and again by
+the family-parity ``streaming`` column).  How to read those rows:
+docs/STREAMING.md.
 """
 
 from __future__ import annotations
@@ -873,6 +889,224 @@ def run_replicas(tiny: bool = False) -> List[Dict]:
 
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# section 7 (--stream): TTFT/ITL percentiles, sync vs overlapped decode
+# ---------------------------------------------------------------------------
+
+STREAM_FAMILIES_SWEEP = (("dense", "qwen3-32b"), ("ssm", "mamba2-780m"),
+                         ("hybrid", "zamba2-1.2b"),
+                         ("moe", "deepseek-moe-16b"))
+STREAM_ARRIVAL_SCALE = 0.5     # pod intensity: keeps both slots busy
+WALL_STREAM_BUDGET = 24        # wall section: tokens per request
+
+
+def _measure_host_us(bundle, params, eng) -> float:
+    """Warm cost of the sync loop's per-tick HOST leg: the blocking
+    logits readback plus greedy sampling — exactly what the overlapped
+    loop hides under the next device step.  Measured on a logits
+    buffer that is already device-ready so the device compute itself
+    (``costs['decode']``) is not double-counted."""
+    import jax
+    import jax.numpy as jnp
+
+    cur = jnp.zeros((2, 1), jnp.int32)
+    lens = jnp.asarray([8, 8], jnp.int32)
+    cache2 = bundle.empty_cache(2, 64, bundle.cfg.jnp_dtype())
+    logits, _ = eng._decode((params, cache2, cur, lens))
+    jax.block_until_ready(logits)
+    return time_call(lambda: eng._sample(logits, 0.0),
+                     warmup=2, iters=20) * 1e6
+
+
+def _sim_stream(bundle, params, wl, overlap: bool,
+                costs: Dict) -> Dict:
+    """Serve ``wl`` on a REAL engine over the virtual clock with
+    per-token StreamEvents collected, sync or overlapped.  The tick
+    costs encode the overlap: a sync tick pays ``decode + host`` in
+    sequence; an overlapped tick pays ``max(decode, host)`` because
+    the host leg (previous step's readback + sampling + emission) runs
+    while the device executes the dispatched step.  Returns the event
+    stream, outputs, and the mean decode-tick occupancy."""
+    from repro.serving import Request, ServingEngine
+
+    events: List = []
+    clock = VirtualClock()
+    eng = ServingEngine(bundle, params, max_slots=2, cache_len=64,
+                        policy="edf", clock=clock,
+                        prefill_buckets=False, overlap=overlap,
+                        on_token=events.append)
+    n = len(wl["arrivals"])
+    nxt = 0
+    occ: List[float] = []
+    while True:
+        while nxt < n and wl["arrivals"][nxt] <= clock.now_us:
+            d = wl["deadlines"][nxt]
+            eng.submit(Request(
+                uid=nxt, tokens=wl["prompts"][nxt],
+                max_new_tokens=int(wl["budgets"][nxt]),
+                deadline_us=None if np.isinf(d) else int(d),
+                arrival_us=int(wl["arrivals"][nxt])))
+            nxt += 1
+        more = eng.step()
+        ev = eng.last_step
+        dec = costs["decode"] if ev["decoded"] else 0.0
+        host = costs["host"] if ev["processed"] else 0.0
+        dt = max(dec, host) if overlap else dec + host
+        for L in ev["prefill_tokens"]:
+            cost = costs.get(("prefill", L))
+            if cost is None:
+                cost = costs[("prefill", 64)] * (L / 64.0)
+            dt += cost
+        clock.now_us += max(dt, 1.0)
+        if ev["decoded"]:
+            occ.append(float(eng.active.sum() + len(eng._chunking))
+                       / eng.max_slots)
+        if not more:
+            if nxt >= n:
+                break
+            clock.now_us = max(clock.now_us, wl["arrivals"][nxt])
+    outs = [list(eng.results[u].output) for u in range(n)]
+    return {"events": events, "outs": outs,
+            "occupancy": float(np.mean(occ)) if occ else 0.0}
+
+
+def _stream_metrics(events, arrivals) -> Dict:
+    """TTFT (first event stamp − arrival) and ITL (gaps between a
+    request's consecutive event stamps) percentiles from one event
+    stream."""
+    per: Dict[int, List] = {}
+    for e in events:
+        per.setdefault(e.uid, []).append(e)
+    ttft = [seq[0].t_us - arrivals[uid] for uid, seq in per.items()]
+    itl = [b.t_us - a.t_us for seq in per.values()
+           for a, b in zip(seq, seq[1:])]
+    t50, t95 = np.percentile(ttft, (50, 95))
+    i50, i95 = np.percentile(itl, (50, 95)) if itl else (0.0, 0.0)
+    return {"ttft_p50_us": round(float(t50), 1),
+            "ttft_p95_us": round(float(t95), 1),
+            "itl_p50_us": round(float(i50), 1),
+            "itl_p95_us": round(float(i95), 1)}
+
+
+def _wall_stream(bundle, params, overlap: bool, n: int) -> Dict:
+    """The wall-clock leg: the same saturated decode workload served
+    on REAL time (the engine's default µs clock), events stamped as
+    the host learns each token.  A warmup request is served first so
+    compile time never pollutes the percentiles; occupancy is sampled
+    per step like the virtual leg."""
+    from repro.serving import Request, ServingEngine
+
+    events: List = []
+    eng = ServingEngine(bundle, params, max_slots=2, cache_len=64,
+                        prefill_buckets=False, overlap=overlap,
+                        on_token=events.append)
+    rng = np.random.default_rng(SEED + 5)
+    prompts = [rng.integers(0, bundle.cfg.vocab - 2, 5).astype(np.int32)
+               for _ in range(n)]
+    eng.submit(Request(uid=10_000, tokens=prompts[0].copy(),
+                       max_new_tokens=4))
+    eng.run()
+    events.clear()                      # warmup over: compiles are paid
+    arr = {}
+    for uid, toks in enumerate(prompts):
+        req = Request(uid=uid, tokens=toks,
+                      max_new_tokens=WALL_STREAM_BUDGET)
+        eng.submit(req)                 # arrival stamped at submit
+        arr[uid] = req.arrival_us
+    occ: List[float] = []
+    while eng.step():
+        if eng.last_step["decoded"]:
+            occ.append(float(eng.active.sum()) / eng.max_slots)
+    eng.drain()
+    outs = [list(eng.results[u].output) for u in range(n)]
+    return {"events": [e for e in events if e.uid < 10_000],
+            "outs": outs, "arrivals": arr,
+            "occupancy": float(np.mean(occ)) if occ else 0.0}
+
+
+def run_stream(tiny: bool = False) -> List[Dict]:
+    """The --stream benchmark: TTFT/ITL percentiles from per-token
+    StreamEvents, sync vs overlapped decode over the family matrix on
+    the virtual clock, plus the dense wall-clock validation leg.
+    Tokens must be bit-identical between modes in every comparison.
+    Emits ``BENCH_streaming.json`` unless ``tiny``."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    rows: List[Dict] = []
+    for family, arch in STREAM_FAMILIES_SWEEP:
+        cfg = get_config(arch, reduced=True)
+        bundle = get_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        costs = _measure_engine_costs(bundle, params, 0)
+        from repro.serving import ServingEngine
+        probe = ServingEngine(bundle, params, max_slots=2,
+                              cache_len=64, prefill_buckets=False)
+        costs["host"] = _measure_host_us(bundle, params, probe)
+        wl = _engine_workload(
+            np.random.default_rng(SEED + 6), 8 if tiny else 32,
+            cfg.vocab, costs["decode"], costs[("prefill", 8)],
+            arrival_scale=STREAM_ARRIVAL_SCALE)
+        sims = {m: _sim_stream(bundle, params, wl, m == "overlap",
+                               costs)
+                for m in ("sync", "overlap")}
+        match = sims["sync"]["outs"] == sims["overlap"]["outs"]
+        assert match, f"{family}: overlapped decode changed tokens"
+        for mode, sim in sims.items():
+            rows.append({
+                "family": family, "mode": mode, "clock": "virtual",
+                "n_requests": len(wl["arrivals"]),
+                "occupancy_pct": round(100 * sim["occupancy"], 1),
+                "decode_us": round(costs["decode"], 1),
+                "host_us": round(costs["host"], 1),
+                **_stream_metrics(sim["events"], wl["arrivals"]),
+                "tokens_match": bool(match)})
+    print_table("Streaming TTFT/ITL, sync vs overlapped decode "
+                "(virtual clock, family matrix)", rows)
+
+    # wall-clock validation: dense flagship, saturated slots, real time
+    cfg = get_config("qwen3-32b", reduced=True)
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    costs = _measure_engine_costs(bundle, params, 0)
+    from repro.serving import ServingEngine
+    probe = ServingEngine(bundle, params, max_slots=2, cache_len=64,
+                          prefill_buckets=False)
+    costs["host"] = _measure_host_us(bundle, params, probe)
+    predicted = (costs["decode"] + costs["host"]) \
+        / max(costs["decode"], costs["host"])
+    n = 4 if tiny else 8
+    walls = {m: _wall_stream(bundle, params, m == "overlap", n)
+             for m in ("sync", "overlap")}
+    match = walls["sync"]["outs"] == walls["overlap"]["outs"]
+    assert match, "wall-clock overlapped decode changed tokens"
+    wmet = {m: _stream_metrics(w["events"], w["arrivals"])
+            for m, w in walls.items()}
+    observed = wmet["sync"]["itl_p50_us"] \
+        / max(wmet["overlap"]["itl_p50_us"], 1e-9)
+    wrows = []
+    for mode, w in walls.items():
+        wrows.append({
+            "family": "dense", "mode": mode, "clock": "wall",
+            "n_requests": n,
+            "occupancy_pct": round(100 * w["occupancy"], 1),
+            "decode_us": round(costs["decode"], 1),
+            "host_us": round(costs["host"], 1),
+            **wmet[mode],
+            "predicted_itl_ratio": round(float(predicted), 3),
+            "observed_itl_ratio": round(float(observed), 3),
+            "tokens_match": bool(match)})
+    print_table("Wall-clock validation (dense, saturated slots): "
+                f"cost model predicts sync/overlap ITL "
+                f"{predicted:.3f}x", wrows)
+    all_rows = rows + wrows
+    if not tiny:
+        save_result("BENCH_streaming", all_rows, seed=SEED)
+    return all_rows
+
+
 def run(tiny: bool = False) -> List[Dict]:
     lanes = 4 if tiny else LANES
     n = 24 if tiny else N_REQUESTS
@@ -915,5 +1149,7 @@ if __name__ == "__main__":
         run_paged(tiny="--tiny" in sys.argv[1:])
     elif "--replicas" in sys.argv[1:]:
         run_replicas(tiny="--tiny" in sys.argv[1:])
+    elif "--stream" in sys.argv[1:]:
+        run_stream(tiny="--tiny" in sys.argv[1:])
     else:
         run(tiny="--tiny" in sys.argv[1:])

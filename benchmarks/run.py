@@ -16,6 +16,10 @@
   replica_sweep          replica count × routing policy over the PR-4
                          arrival mix: throughput, p99, SLO + token
                          bit-identity (docs/ARCHITECTURE.md §9)
+  streaming              TTFT/ITL percentiles from per-token
+                         StreamEvents, sync vs overlapped decode over
+                         the family matrix + wall-clock cost-model
+                         validation (docs/STREAMING.md)
   autotune               calibration-driven bucket/chunk config vs the
                          hand-picked defaults: compile counts + p95
                          arrival-process latency (docs/SCHEDULING.md)
@@ -57,6 +61,7 @@ def main(argv=None) -> None:
         "preemption": arrival_process.run_preempt,
         "paged_kv": arrival_process.run_paged,
         "replica_sweep": arrival_process.run_replicas,
+        "streaming": arrival_process.run_stream,
         "autotune": autotune.run,
         "memory_overhead": memory_overhead.run,
         "planner_bench": planner_bench.run,
@@ -71,6 +76,7 @@ def main(argv=None) -> None:
                          f"have {list(benches)}")
     t0 = time.time()
     failures = []
+    timings = []
     ran = 0
     for name in names:
         fn = benches[name]
@@ -81,13 +87,22 @@ def main(argv=None) -> None:
                 continue
             kw["tiny"] = True
         ran += 1
+        t1 = time.time()
         try:
             fn(**kw)
         except Exception:
             failures.append(name)
             print(f"\nFAILED {name}:\n{traceback.format_exc()}",
                   file=sys.stderr)
+        finally:
+            timings.append((name, time.time() - t1))
     dt = time.time() - t0
+    # per-benchmark wall time, so a smoke-job regression in one
+    # benchmark (e.g. the streaming wall-clock leg) is visible from
+    # the log instead of hiding inside the aggregate
+    for name, t in timings:
+        flag = "  [FAILED]" if name in failures else ""
+        print(f"  {name:22s} {t:7.1f}s{flag}")
     if failures:
         raise SystemExit(
             f"{len(failures)}/{ran} benchmark(s) FAILED "

@@ -363,6 +363,35 @@ def pin_tree(tree, shardings):
     return jax.device_put(tree, shardings)
 
 
+@dataclass
+class InflightStep:
+    """One dispatched-but-unread device step — the deferred-readback
+    record behind the async serving loop (docs/STREAMING.md).
+
+    JAX dispatch is asynchronous: a jitted step returns device arrays
+    that are *futures*, and only a host transfer (``np.asarray``)
+    blocks on them.  An ``InflightStep`` pins everything the host will
+    need to interpret those futures LATER — the token array still on
+    device and a snapshot of which (slot, result, request) triples the
+    step was dispatched for — so the host can dispatch step ``i+1``
+    and then do step ``i``'s bookkeeping while the device computes.
+    The snapshot matters: slot bookkeeping may change between dispatch
+    and readback (a slot retires, a new request is admitted), and the
+    tokens belong to the slots *as they were at dispatch*.
+
+    ``host_fetch`` is the single blocking point: it materializes the
+    tokens on host, at which moment the step is no longer in flight."""
+
+    tokens: Any                 # device int32 tokens, one per slot (future)
+    slots: List[Tuple[int, Any, Any]]   # (slot, result, request) at dispatch
+    dispatch_s: float = 0.0     # host-side dispatch cost (for timings)
+
+    def host_fetch(self) -> np.ndarray:
+        """Block until the step's tokens are on host (the deferred
+        ``jax.block_until_ready``) and return them as an np array."""
+        return np.asarray(self.tokens)
+
+
 # ---------------------------------------------------------------------------
 # contexts handed to kernel prepare()/eval() (the TFLM C-API analogue)
 # ---------------------------------------------------------------------------

@@ -9,8 +9,9 @@ docs/ARCHITECTURE.md §9)."""
 from . import ops  # registers the reference serving macro-kernels
 from .engine import (BUCKETED_FAMILIES, CHUNKED_FAMILIES, DEFAULT_TAGS,
                      PAGED_FAMILIES, RECURRENT_FAMILIES,
-                     SHARDED_FAMILIES, Request, RequestResult,
-                     ServingEngine, SlotCheckpoint, default_clock)
+                     SHARDED_FAMILIES, STREAMING_FAMILIES, Request,
+                     RequestResult, ServingEngine, SlotCheckpoint,
+                     StreamEvent, default_clock)
 from .errors import UnsupportedFamilyError
 from .host import MicroRequest, MicroRequestResult, MultiTenantHost
 from .router import ReplicaRouter
@@ -23,8 +24,9 @@ from .scheduling import (EDFDisplacePolicy, EDFPolicy, FIFOPolicy,
 
 __all__ = ["BUCKETED_FAMILIES", "CHUNKED_FAMILIES", "DEFAULT_TAGS",
            "PAGED_FAMILIES", "RECURRENT_FAMILIES", "SHARDED_FAMILIES",
-           "Request", "RequestResult", "ServingEngine",
-           "SlotCheckpoint", "UnsupportedFamilyError", "default_clock",
+           "STREAMING_FAMILIES", "Request", "RequestResult",
+           "ServingEngine", "SlotCheckpoint", "StreamEvent",
+           "UnsupportedFamilyError", "default_clock",
            "MicroRequest", "MicroRequestResult", "MultiTenantHost",
            "ReplicaRouter", "EDFDisplacePolicy", "EDFPolicy",
            "FIFOPolicy", "LeastLoadedRouting", "LocalityRouting",

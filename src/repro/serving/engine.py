@@ -98,6 +98,20 @@ A fifth degree of freedom changes the KV layout itself
     copied either way, and since the table is a traced argument,
     admit/retire/grow/restore never recompile.  Gated to families
     with the dense (KH, C, dh) ring layout (dense/moe/vlm).
+
+A sixth overlaps the host with the device (docs/STREAMING.md):
+
+  * **overlapped decode** (``overlap=True``) — readback is deferred
+    ONE step: the engine dispatches decode step i+1 (its input token
+    a device future from a tiny jitted argmax) before blocking on
+    step i's tokens, so sampling/bookkeeping for step i runs while
+    step i+1 computes on device.  The decode program itself is the
+    same single traced table entry sync mode runs, and the tokens are
+    bit-identical (asserted per family by the conformance matrix's
+    ``streaming`` column).  Per-token delivery rides on ``on_token``:
+    a ``StreamEvent`` per emitted token, in order and exactly once —
+    across preemption/restore too, because every snapshot path drains
+    the in-flight step first.
 """
 
 from __future__ import annotations
@@ -112,7 +126,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import TwoStackArena, align_up
-from repro.core.executor import BucketTable, PagedKVPool, pin_tree
+from repro.core.executor import (BucketTable, InflightStep, PagedKVPool,
+                                 pin_tree)
 from repro.core.op_resolver import MicroMutableOpResolver
 from repro.core.schema import OpCode, OpDef
 from repro.kernels import ops as _vendor_kernels  # registers tag="pallas"
@@ -151,6 +166,12 @@ PAGED_FAMILIES = ("dense", "moe", "vlm")
 # for recurrent ones.  NOT "audio": the encoder-decoder serving path
 # (cross-KV staging at admission) has not been partition-qualified.
 SHARDED_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
+# STREAMING: families qualified for the overlapped (async) decode loop
+# (``overlap=True``): readback deferred one step, greedy sampling
+# moved onto the device so the next step's tokens are a device future.
+# NOT "audio": the encoder-decoder serving path (cross-KV staged at
+# admission) has not been qualified for deferred readback.
+STREAMING_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
 
 
 def default_clock() -> int:
@@ -182,7 +203,9 @@ class Request:
 class RequestResult:
     """Accumulated outcome of a Request: emitted tokens and timings.
     ``preemptions`` counts how many times the request was evicted from
-    a slot and later resumed (0 = ran uninterrupted)."""
+    a slot and later resumed (0 = ran uninterrupted).
+    ``first_token_us`` is the engine-clock stamp of the first emitted
+    token — ``first_token_us - arrival_us`` is the request's TTFT."""
 
     uid: int
     prompt_len: int
@@ -191,6 +214,27 @@ class RequestResult:
     decode_s: float = 0.0
     done: bool = False
     preemptions: int = 0
+    first_token_us: Optional[int] = None
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One streamed token, delivered through the engine's ``on_token``
+    callback the moment the host learns it (docs/STREAMING.md).
+
+    The ordering contract callers may rely on: per ``uid``, events
+    arrive with ``index`` counting 0, 1, 2, … with no gaps and no
+    repeats — across preemption/restore and replica routing included —
+    and ``token == results[uid].output[index]`` always.  ``final`` is
+    True on exactly the request's last event.  ``t_us`` is the engine
+    clock at emission (virtual µs under a virtual clock, host µs
+    otherwise), so TTFT/ITL fall straight out of the event stream."""
+
+    uid: int
+    index: int      # position in the request's output (0-based)
+    token: int
+    t_us: int       # engine clock at emission
+    final: bool     # True on the request's last token
 
 
 @dataclasses.dataclass
@@ -252,7 +296,8 @@ class ServingEngine:
                  prefill_chunk: Any = None, preempt: Any = None,
                  kv_block: Any = None,
                  kv_pool_blocks: Optional[int] = None,
-                 mesh: Any = None):
+                 mesh: Any = None,
+                 overlap: bool = False, on_token: Any = None):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
@@ -261,6 +306,22 @@ class ServingEngine:
         self.policy: SchedulingPolicy = get_policy(policy)
         self.preempt: Optional[PreemptionPolicy] = get_preemption(preempt)
         self.clock = clock if clock is not None else default_clock
+        # overlap: defer readback one step — dispatch decode i+1 before
+        # blocking on decode i's tokens (docs/STREAMING.md).  Greedy
+        # sampling moves onto the device (a tiny separate jitted argmax,
+        # bit-identical to the host path) so the next step's cur_tokens
+        # is a device future and the host never sits in the dispatch
+        # chain.  on_token: per-token StreamEvent callback, fired in
+        # order and exactly once in BOTH modes (sync engines stream too;
+        # overlap just delivers each token one step later while the
+        # device keeps busy).
+        self.overlap = bool(overlap)
+        if self.overlap and self.cfg.family not in STREAMING_FAMILIES:
+            raise UnsupportedFamilyError(
+                self.cfg.family, "overlapped (async) decode",
+                supported=STREAMING_FAMILIES)
+        self.on_token = on_token
+        self._inflight: Optional[InflightStep] = None
         # prefill_buckets: None/True = auto (on for length-masked-
         # decode families, when the cache can hold at least the
         # smallest bucket), False = off, or a (shared) BucketTable
@@ -392,6 +453,10 @@ class ServingEngine:
         self.cur_tokens = self._pin_repl(
             jnp.zeros((max_slots, 1), jnp.int32))
         self.active = np.zeros(max_slots, bool)
+        # host mirror of `lengths` — the overlap loop grows paged block
+        # tables at DISPATCH time (the device value is still a future
+        # then), and the sync loop keeps it in step for free
+        self._len_host = np.zeros(max_slots, np.int64)
         self.rng = np.random.default_rng(seed)
         self.queue: List[Request] = []
         self.results: Dict[int, RequestResult] = {}
@@ -401,7 +466,8 @@ class ServingEngine:
         # what the last step() did — the benchmark's virtual-clock cost
         # hook: prefill token counts, chunk dispatches, decode dispatch
         self.last_step: Dict[str, Any] = {"prefill_tokens": [],
-                                          "chunks": 0, "decoded": False}
+                                          "chunks": 0, "decoded": False,
+                                          "processed": 0}
 
         # --- compiled steps (init-time, like interpreter prepare) -----
         # Resolve prefill/decode through the op registry tag chain: the
@@ -436,6 +502,16 @@ class ServingEngine:
             bundle, decode_reg.prepare(pctx, self._decode_op).op_data)
         self._decode = jax.jit(functools.partial(
             decode_reg.eval, decode_ctx, self._decode_op))
+        # overlap mode's device-side greedy sampler: its OWN tiny jitted
+        # program (the decode program stays byte-for-byte the one sync
+        # mode runs, so jit_cache_size(self._decode) == 1 holds either
+        # way), replicating the host `_sample(logits, 0.0)` math —
+        # slice to the true vocab, cast to f32, argmax with first-max
+        # tie-break — so streamed tokens are bit-identical to sync.
+        vocab = self.cfg.vocab
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg[:, :vocab].astype(jnp.float32),
+                                  axis=-1).astype(jnp.int32))
         # prefill jits once per prompt-length BUCKET when bucket_table
         # is set (BUCKETED_FAMILIES only: decode masks KV by length,
         # so padding is invisible, and moe additionally carries the
@@ -716,6 +792,7 @@ class ServingEngine:
         self.slot_budget[slot] = (req.max_new_tokens if budget is None
                                   else budget)
         self.active[slot] = True
+        self._len_host[slot] = last_pos
         self.lengths = self.lengths.at[slot].set(last_pos)
         self.cur_tokens = self.cur_tokens.at[slot, 0].set(
             int(req.tokens[-1]) if cur_token is None else cur_token)
@@ -867,6 +944,7 @@ class ServingEngine:
         window + SSD state (f32, exactly as the decode step left them)
         for ssm/hybrid — so restoring via ``insert_slot_state`` resumes
         bit-identically for every family."""
+        self.drain()
         def ext(full):
             axes = [ax for ax in range(full.ndim)
                     if full.shape[ax] == self.max_slots]
@@ -882,7 +960,11 @@ class ServingEngine:
         """Capture a running slot's continuation state host-side: the
         chunked-prefill cache + progress for a PREFILLING slot, the KV
         rows + (length, next token, budget) triple for a DECODING one.
-        The slot itself is untouched — pair with ``_evict``."""
+        The slot itself is untouched — pair with ``_evict``.  On an
+        overlapped engine the in-flight step is drained first, so the
+        captured (length, token, budget) triple is always
+        post-emission-consistent."""
+        self.drain()
         if slot in self._chunking:
             cs = self._chunking[slot]
             if self.paged:
@@ -915,7 +997,10 @@ class ServingEngine:
     def _evict(self, slot: int) -> Request:
         """Preempt the request running in ``slot``: checkpoint it,
         free the slot, and put the request back on the queue (its
-        checkpoint is picked up at re-admission)."""
+        checkpoint is picked up at re-admission).  Drains any in-flight
+        overlapped step first — callers picking a victim must choose
+        AFTER the drain (a pending retirement may have freed it)."""
+        self.drain()
         if slot in self._chunking:
             req = self._chunking[slot].req
             ckpt = self.snapshot_slot(slot)
@@ -1002,6 +1087,118 @@ class ServingEngine:
         p /= p.sum(-1, keepdims=True)
         return np.array([self.rng.choice(len(row), p=row) for row in p])
 
+    # -- streaming + overlapped decode (docs/STREAMING.md) --------------
+
+    def _emit(self, res: RequestResult, tok: int, final: bool) -> None:
+        """Append + stream one token — the single place a token becomes
+        visible, in both modes, so the output list, the TTFT stamp, and
+        the ``on_token`` StreamEvent agree by construction (in order,
+        exactly once; preemption/restore cannot double-emit because
+        every snapshot path drains first and so captures
+        post-emission state)."""
+        res.output.append(tok)
+        self.last_step["processed"] += 1
+        now = self.clock()
+        if res.first_token_us is None:
+            res.first_token_us = now
+        if self.on_token is not None:
+            self.on_token(StreamEvent(uid=res.uid,
+                                      index=len(res.output) - 1,
+                                      token=tok, t_us=now, final=final))
+
+    def drain(self) -> None:
+        """Settle the overlapped loop's in-flight decode step, if any:
+        block on its tokens and run its host bookkeeping (emission,
+        retirement, budget/quota charges).  Public because anything
+        doing checkpoint surgery from outside — tests, the router's
+        work-stealing, a server shutting down — must see consistent
+        slot state first; every internal snapshot/evict path calls it.
+        No-op on a sync engine or when nothing is in flight."""
+        step, self._inflight = self._inflight, None
+        if step is not None:
+            self._finish_inflight(step)
+
+    def _finish_inflight(self, step: InflightStep) -> None:
+        """Host half of a dispatched decode step: fetch its tokens (the
+        deferred ``block_until_ready``) and interpret them against the
+        DISPATCH-TIME slot snapshot.  A slot that retired after the
+        dispatch (eos/budget is learned one step late) is skipped: its
+        extra dispatched decode was wasted device work whose KV writes
+        are invisible — overwritten before the slot's next activation,
+        or absorbed by the paged garbage block — and whose token is
+        dropped here, never emitted."""
+        t0 = time.perf_counter()
+        toks = step.host_fetch()
+        wait = time.perf_counter() - t0
+        eos = self.cfg.vocab - 1
+        for slot, res, req in step.slots:
+            if res.done or self.slot_req[slot] is not res:
+                continue    # retired between dispatch and readback
+            res.decode_s += step.dispatch_s + wait
+            self.policy.charge(req.tenant, 1.0)
+            tok = int(toks[slot])
+            self.slot_budget[slot] -= 1
+            done = self.slot_budget[slot] <= 0 or tok == eos
+            self._emit(res, tok, final=done)
+            if done:
+                res.done = True
+                self.active[slot] = False
+                self.slot_req[slot] = None
+                self.slot_meta[slot] = None
+                if self.paged:
+                    self._release_slot_blocks(slot)
+
+    def _dispatch_overlapped(self) -> None:
+        """Dispatch one fused decode step WITHOUT reading it back, then
+        settle the PREVIOUS step while the device works (PR 4's
+        double-buffered chunk prefill, generalized to decode).  The
+        device-side argmax feeds ``cur_tokens`` as a device future, so
+        step i+1's inputs never pass through the host and the only
+        blocking transfer — the previous step's tokens — overlaps the
+        device executing this one."""
+        pend = {s for s, _, _ in self._inflight.slots} \
+            if self._inflight is not None else set()
+        if self.paged:
+            # grow at DISPATCH time from the host length mirror (the
+            # device lengths are still a future here): map the block
+            # this step's ring write lands in.  Slots whose budget is
+            # spent once the in-flight step lands are skipped — their
+            # write is absorbed by the garbage block, and mapping it
+            # would overdraw the admission-time reservation.
+            for slot in range(self.max_slots):
+                if not self.active[slot]:
+                    continue
+                if self.slot_budget[slot] \
+                        - (1 if slot in pend else 0) <= 0:
+                    continue
+                before = len(self._slot_blocks[slot])
+                self._ensure_blocks(
+                    slot, int(self._len_host[slot]) % self.cache_len)
+                if len(self._slot_blocks[slot]) != before:
+                    self._sync_table_row(slot)
+        t0 = time.perf_counter()
+        if self.paged:
+            logits, kv_pool = self._decode(
+                (self.params, self.kv_pool, self.block_tables,
+                 self.cur_tokens, self.lengths))
+            self.kv_pool = self._pin_kv(kv_pool)
+        else:
+            logits, cache = self._decode(
+                (self.params, self.cache, self.cur_tokens, self.lengths))
+            self.cache = self._pin_kv(cache)
+        toks = self._argmax(logits)
+        self.lengths = self.lengths + 1
+        self._len_host += 1
+        self.cur_tokens = self._pin_repl(toks[:, None])
+        self.last_step["decoded"] = True
+        prev, self._inflight = self._inflight, InflightStep(
+            tokens=toks,
+            slots=[(s, self.slot_req[s], self.slot_meta[s])
+                   for s in range(self.max_slots) if self.active[s]],
+            dispatch_s=time.perf_counter() - t0)
+        if prev is not None:
+            self._finish_inflight(prev)
+
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """One engine tick: advance chunked prefills by ONE chunk each,
@@ -1014,10 +1211,16 @@ class ServingEngine:
         with chunking on, a long prompt's prefill is interleaved
         through these ticks instead of monopolizing the engine."""
         self.last_step = {"prefill_tokens": [], "chunks": 0,
-                          "decoded": False}
+                          "decoded": False, "processed": 0}
         for slot in list(self._chunking):
             self._advance_chunk(slot)
         if self.queue:
+            if self.overlap and self.preempt is not None:
+                # settle the in-flight step before any admission or
+                # displacement decision: a victim's checkpoint must
+                # capture post-emission state, and a retirement still
+                # in flight may free the slot the queue needs
+                self.drain()
             now = self.clock()
             for slot in range(self.max_slots):
                 if self.queue and not self.active[slot] \
@@ -1061,8 +1264,23 @@ class ServingEngine:
                     slot = running[vi][0]
                     self._evict(slot)
                     self._admit(cand, slot)
+        if self.overlap and self.active.any() \
+                and self._inflight is not None:
+            pend = {s for s, _, _ in self._inflight.slots}
+            if all(self.slot_budget[s] - (1 if s in pend else 0) <= 0
+                   for s in range(self.max_slots) if self.active[s]):
+                # every active slot's budget is spent once the
+                # in-flight step lands: drain instead of dispatching
+                # a step whose every token would be dropped
+                self.drain()
         if not self.active.any():
-            return bool(self.queue or self._chunking)
+            self.drain()
+            return bool(self.active.any() or self.queue
+                        or self._chunking)
+        if self.overlap:
+            self._dispatch_overlapped()
+            return bool(self.active.any() or self.queue
+                        or self._chunking or self._inflight is not None)
         t0 = time.perf_counter()
         if self.paged:
             logits, kv_pool = self._decode(
@@ -1077,6 +1295,7 @@ class ServingEngine:
         self.last_step["decoded"] = True
         toks = self._sample(logits, 0.0)
         self.lengths = self.lengths + 1
+        self._len_host += 1
         lens_host = np.asarray(self.lengths)
         new_cur = np.array(self.cur_tokens)    # writable host copy
         eos = self.cfg.vocab - 1
@@ -1087,10 +1306,11 @@ class ServingEngine:
             res.decode_s += dt
             self.policy.charge(self.slot_meta[slot].tenant, 1.0)
             tok = int(toks[slot])
-            res.output.append(tok)
             self.slot_budget[slot] -= 1
             new_cur[slot, 0] = tok
-            if self.slot_budget[slot] <= 0 or tok == eos:
+            done = self.slot_budget[slot] <= 0 or tok == eos
+            self._emit(res, tok, final=done)
+            if done:
                 res.done = True
                 self.active[slot] = False
                 self.slot_req[slot] = None

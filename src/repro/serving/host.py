@@ -125,7 +125,8 @@ class MultiTenantHost:
     """One arena, many models — never running concurrently."""
 
     def __init__(self, arena_bytes: int, *, policy: Any = None,
-                 clock=None, preempt: Any = None, profile: Any = None):
+                 clock=None, preempt: Any = None, profile: Any = None,
+                 on_token: Any = None):
         self.arena = TwoStackArena(arena_bytes)
         self.engines: Dict[str, ServingEngine] = {}
         self.routers: Dict[str, ReplicaRouter] = {}
@@ -140,6 +141,10 @@ class MultiTenantHost:
         self.policy: SchedulingPolicy = get_policy(policy)
         self.preempt: Optional[PreemptionPolicy] = get_preemption(preempt)
         self.clock = clock if clock is not None else default_clock
+        # one host-wide streaming sink: every tenant engine's per-token
+        # StreamEvents (docs/STREAMING.md) funnel through it — uids are
+        # caller-assigned, so a multi-tenant consumer demuxes by uid
+        self.on_token = on_token
         # the shared bucket tables: one for prompt lengths (engines
         # agree on prefill bucket boundaries), one for ragged lane
         # counts (nearby tenants share ArenaPool free lists).  With a
@@ -157,12 +162,14 @@ class MultiTenantHost:
 
     def _make_engine(self, bundle: ModelBundle, params: Any, *,
                      max_slots: int, cache_len: int, max_prompt: int,
-                     mesh: Any = None) -> ServingEngine:
+                     mesh: Any = None, overlap: bool = False
+                     ) -> ServingEngine:
         """Build one tenant engine wired to the host's shared arena,
-        policy, clock, preemption, profile, and prompt-bucket table
-        (family permitting), growing the shared scratch reservation to
-        the new maximum — the construction path ``add_model`` and every
-        ``add_replicated_model`` replica go through."""
+        policy, clock, preemption, profile, streaming sink, and
+        prompt-bucket table (family permitting), growing the shared
+        scratch reservation to the new maximum — the construction path
+        ``add_model`` and every ``add_replicated_model`` replica go
+        through."""
         bucketable = bundle.cfg.family in BUCKETED_FAMILIES
         chunkable = bundle.cfg.family in CHUNKED_FAMILIES
         buckets = self.prompt_buckets if bucketable else False
@@ -173,7 +180,8 @@ class MultiTenantHost:
                             policy=self.policy, clock=self.clock,
                             prefill_buckets=buckets,
                             prefill_chunk=chunk,
-                            preempt=self.preempt, mesh=mesh)
+                            preempt=self.preempt, mesh=mesh,
+                            overlap=overlap, on_token=self.on_token)
         scratch = _scratch_bytes(bundle, max_prompt)
         if scratch > self._scratch_high:
             # grow the shared head-section reservation to the new max
@@ -184,20 +192,23 @@ class MultiTenantHost:
 
     def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
                   max_slots: int = 2, cache_len: int = 128,
-                  max_prompt: int = 64, mesh: Any = None
-                  ) -> ServingEngine:
+                  max_prompt: int = 64, mesh: Any = None,
+                  overlap: bool = False) -> ServingEngine:
         """Admit a tenant: its KV cache stacks persistently; the shared
         nonpersistent (head) section grows to the max requirement.  The
         engine admits through the host's policy/clock and buckets its
         prefill lengths through the host's shared prompt table (when
         its family supports bucketing).  ``mesh`` shards the tenant's
         weights and KV arena over the mesh's ``model`` axis
-        (docs/ARCHITECTURE.md §9)."""
+        (docs/ARCHITECTURE.md §9); ``overlap`` runs the tenant's decode
+        loop with deferred readback (docs/STREAMING.md), streaming
+        per-token events to the host's ``on_token`` sink."""
         if name in self.engines or name in self.routers:
             raise ValueError(f"tenant {name!r} already exists")
         eng = self._make_engine(bundle, params, max_slots=max_slots,
                                 cache_len=cache_len,
-                                max_prompt=max_prompt, mesh=mesh)
+                                max_prompt=max_prompt, mesh=mesh,
+                                overlap=overlap)
         self.engines[name] = eng
         return eng
 
@@ -205,7 +216,8 @@ class MultiTenantHost:
                              params: Any, *, replicas: int = 2,
                              routing: Any = None, max_slots: int = 2,
                              cache_len: int = 128, max_prompt: int = 64,
-                             mesh: Any = None) -> ReplicaRouter:
+                             mesh: Any = None, overlap: bool = False
+                             ) -> ReplicaRouter:
         """Admit a tenant served by ``replicas`` engine replicas behind
         a ``ReplicaRouter`` — the data-parallel axis of ROADMAP item 2.
         Each replica is a full engine tenant of the shared arena (its
@@ -222,7 +234,8 @@ class MultiTenantHost:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
         engs = [self._make_engine(bundle, params, max_slots=max_slots,
                                   cache_len=cache_len,
-                                  max_prompt=max_prompt, mesh=mesh)
+                                  max_prompt=max_prompt, mesh=mesh,
+                                  overlap=overlap)
                 for _ in range(replicas)]
         router = ReplicaRouter(engs, routing=routing)
         self.routers[name] = router

@@ -105,6 +105,25 @@ class ReplicaRouter:
         in tests/test_replica_router.py)."""
         self.routing = get_routing(policy)
 
+    def set_on_token(self, cb) -> None:
+        """Point every replica's per-token streaming callback at one
+        sink (docs/STREAMING.md).  The router's existing invariants
+        already make routed streams exactly-once: a uid lives at one
+        replica, work-stealing moves only UNSTARTED (checkpoint-free,
+        zero-tokens-emitted) requests, and checkpoint stickiness keeps
+        a mid-stream continuation at the replica that holds its
+        emitted prefix — so per-uid event indices stay 0, 1, 2, …
+        whichever replicas the fleet shuffles around it."""
+        for eng in self.replicas:
+            eng.on_token = cb
+
+    def drain(self) -> None:
+        """Settle every replica's in-flight overlapped step (see
+        ``ServingEngine.drain``) — a fleet-wide quiesce point for
+        checkpoint surgery or shutdown."""
+        for eng in self.replicas:
+            eng.drain()
+
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> int:

@@ -3,9 +3,11 @@
 Every seed config family is driven through every serving fast path it
 supports — exact-length, bucketed, chunked, checkpointed (a forced
 mid-run preempt/restore cycle), paged where the cache layout allows,
-and sharded (the same forced preempt/restore cycle on a 2-device
+sharded (the same forced preempt/restore cycle on a 2-device
 ``("data", "model")`` mesh, params and KV partitioned over the
-``model`` axis) — and each run's decoded tokens must be IDENTICAL to
+``model`` axis), and streaming (overlapped decode with per-token
+``StreamEvent`` callbacks, plus the same forced preempt/restore
+cycle) — and each run's decoded tokens must be IDENTICAL to
 that family's exact-length baseline:
 
   * dense/vlm: length-masked decode hides bucket/chunk padding;
@@ -53,14 +55,21 @@ ARCHS = {
 # "checkpointed" is exact + a forced mid-run evict/restore.
 MATRIX = {
     "dense": ("exact", "bucketed", "chunked", "checkpointed", "paged",
-              "sharded"),
-    "moe": ("exact", "bucketed", "checkpointed", "paged", "sharded"),
-    "ssm": ("exact", "chunked", "checkpointed", "sharded"),
-    "hybrid": ("exact", "chunked", "checkpointed", "sharded"),
+              "sharded", "streaming"),
+    "moe": ("exact", "bucketed", "checkpointed", "paged", "sharded",
+            "streaming"),
+    "ssm": ("exact", "chunked", "checkpointed", "sharded", "streaming"),
+    "hybrid": ("exact", "chunked", "checkpointed", "sharded",
+               "streaming"),
     "vlm": ("exact", "bucketed", "chunked", "checkpointed", "paged",
-            "sharded"),
+            "sharded", "streaming"),
     "audio": ("exact", "checkpointed"),
 }
+
+# modes that force a mid-run evict/restore cycle while running;
+# streaming joins so the exactly-once callback contract is proven
+# ACROSS preemption, not just on the happy path
+_EVICT_MODES = ("checkpointed", "sharded", "streaming")
 
 # the sharded column needs a real 2-device mesh; tier-1 runs on one
 # CPU device, so these cells only light up under
@@ -118,6 +127,9 @@ _MODE_KW = {
     "paged": {"prefill_buckets": False, "kv_block": KV_BLOCK},
     # the mesh itself is built lazily in _run (needs >=2 devices)
     "sharded": {"prefill_buckets": False},
+    # overlapped decode + per-token StreamEvent callbacks (the
+    # on_token sink is wired per-run in _run)
+    "streaming": {"prefill_buckets": False, "overlap": True},
 }
 
 
@@ -128,6 +140,9 @@ def _run(family, mode):
     kw = dict(_MODE_KW[mode])
     if mode == "sharded":
         kw["mesh"] = make_serving_mesh(2)
+    events = []
+    if mode == "streaming":
+        kw["on_token"] = events.append
     eng = ServingEngine(m, params, max_slots=2,
                         cache_len=_cache_len(cfg), **kw)
     for uid, toks, extras in reqs:
@@ -139,11 +154,15 @@ def _run(family, mode):
     while eng.step():
         steps += 1
         assert steps < 500, f"{family}/{mode} did not converge"
-        if mode in ("checkpointed", "sharded") and not evicted \
-                and steps >= 3:
+        if mode in _EVICT_MODES and not evicted and steps >= 3:
             # forced preemption: checkpoint whichever slot is busy,
             # re-queue it, and record the trace counts the later
-            # restore must not grow
+            # restore must not grow.  The overlapped engine must be
+            # quiesced first — a pending readback may retire the slot
+            # we are about to pick (the drain-before-surgery contract
+            # every checkpoint path follows internally).
+            if mode == "streaming":
+                eng.drain()
             victim = next((s for s in range(eng.max_slots)
                            if eng.active[s] or s in eng._chunking),
                           None)
@@ -165,7 +184,7 @@ def _run(family, mode):
         hit = {eng.bucket_table.fit(n - 1) for n in PROMPT_LENS}
         assert eng.prefill_compiles() == len(hit), (family, mode)
         assert eng.prefill_compiles() < len(set(PROMPT_LENS))
-    if mode in ("checkpointed", "sharded"):
+    if mode in _EVICT_MODES:
         assert evicted, f"{family}: nothing was running to evict"
         assert eng.results[0].preemptions \
             + sum(eng.results[u].preemptions for u, _, _ in reqs) >= 1
@@ -176,6 +195,23 @@ def _run(family, mode):
         # evict pulls KV to host, restore re-commits it to the cache
         # sharding, and neither placement round-trip retraces.
         assert jit_cache_size(eng._decode) == traced_at_evict[1] == 1
+    if mode == "streaming":
+        # callback ordering contract (docs/STREAMING.md): per request,
+        # indices run 0..n-1 in emission order, the streamed tokens ARE
+        # the accumulated output (each exactly once — across the forced
+        # evict/restore above), exactly the last event is final, and
+        # timestamps never run backwards
+        per = {}
+        for ev in events:
+            per.setdefault(ev.uid, []).append(ev)
+        assert sorted(per) == sorted(outs), (family, sorted(per))
+        for uid, evs in per.items():
+            assert [e.index for e in evs] == list(range(len(evs))), uid
+            assert [e.token for e in evs] == outs[uid], (family, uid)
+            assert [e.final for e in evs] == \
+                [False] * (len(evs) - 1) + [True], (family, uid)
+            ts = [e.t_us for e in evs]
+            assert ts == sorted(ts), (family, uid)
     return outs, eng
 
 
@@ -245,6 +281,9 @@ def test_unsupported_combinations_raise_typed_errors():
         # refusal is asserted even in the single-device tier
         ("audio", {"mesh": make_serving_mesh(1)},
          "mesh-sharded serving"),
+        # audio's encoder-decoder path is not qualified for deferred
+        # readback (see STREAMING_FAMILIES), so overlap refuses typed
+        ("audio", {"overlap": True}, "overlapped (async) decode"),
     ]
     for family, kw, feature in cases:
         cfg, m, params, _ = _setup(family)

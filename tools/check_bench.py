@@ -59,6 +59,12 @@ REQUIRED_ROW_KEYS = {
     # the regression gate reads, and the token bit-identity flag
     "BENCH_replica_sweep.json": ("replicas", "policy", "throughput",
                                  "p99_us", "slo", "tokens_match"),
+    # streaming (PR 9): every row pins the family and decode mode
+    # (sync vs overlap) it was measured at, the TTFT/ITL percentile
+    # columns the regression gate reads, and the bit-identity flag
+    # tying the overlapped stream back to the sync baseline
+    "BENCH_streaming.json": ("family", "mode", "ttft_p95_us",
+                             "itl_p95_us", "tokens_match"),
 }
 
 Violation = Tuple[str, str]
