@@ -186,6 +186,30 @@ class ReplicaCost:
         return self.replicas * self.slots / self.step_us
 
 
+@dataclasses.dataclass(frozen=True)
+class QuantCost:
+    """Measured cost of the QUANTIZED fused decode step at ``slots``
+    concurrent slots under one precision pair (``weight_dtype`` /
+    ``kv_dtype``; ``"fp32"`` = that axis unquantized — the baseline
+    row): ``step_us`` one warm dispatch, ``compile_us`` the cold
+    first, and ``hbm_bytes`` the engine's RESIDENT footprint (the
+    quantized weight tree plus the KV arena — the axis quantization
+    exists to shrink; 0 when the measurement hook could not report
+    it, e.g. an injected synthetic ``measure``)."""
+
+    weight_dtype: str
+    kv_dtype: str
+    slots: int
+    compile_us: float
+    step_us: float
+    hbm_bytes: int = 0
+
+    @property
+    def trace_overhead_us(self) -> float:
+        """The quantized decode program's one-time trace cost."""
+        return max(self.compile_us - self.step_us, 0.0)
+
+
 class EngineMeasurer:
     """The default ``measure`` hook: times the REAL compiled serving
     steps of a fresh engine — ``("prefill", L)`` runs the one-shot
@@ -266,6 +290,18 @@ class EngineMeasurer:
             return measure_compile_and_step(
                 lambda: eng._decode((self.params, eng.cache, cur, lens)),
                 iters=self.iters)
+        if kind.startswith("decode_q:"):
+            # quantized fused decode at `size` slots — the kind string
+            # carries the precision pair ("decode_q:<weight>:<kv>",
+            # "fp32" = that axis unquantized) so injected hooks keep
+            # the flat (kind, size) measurement contract
+            eng = self._aux(kind, int(size))
+            b = int(size)
+            cur = jnp.zeros((b, 1), jnp.int32)
+            lens = jnp.full((b,), self.cache_len // 2, jnp.int32)
+            return measure_compile_and_step(
+                lambda: eng._decode((eng.params, eng.cache, cur, lens)),
+                iters=self.iters)
         if kind == "decode_paged":
             # one paged decode dispatch with `size`-row KV blocks; the
             # engine's freshly-zeroed pool and garbage tables are fine
@@ -292,6 +328,13 @@ class EngineMeasurer:
                 eng = ServingEngine(
                     self.bundle, self.params, max_slots=size,
                     cache_len=self.cache_len, prefill_buckets=False)
+            elif kind.startswith("decode_q:"):
+                _, wd, kd = kind.split(":")
+                eng = ServingEngine(
+                    self.bundle, self.params, max_slots=size,
+                    cache_len=self.cache_len, prefill_buckets=False,
+                    weight_dtype=None if wd == "fp32" else wd,
+                    kv_dtype=None if kd == "fp32" else kd)
             else:
                 eng = ServingEngine(
                     self.bundle, self.params, max_slots=2,
@@ -299,6 +342,13 @@ class EngineMeasurer:
                     kv_block=size)
             self._aux_engines[(kind, size)] = eng
         return eng
+
+    def hbm_bytes(self, kind: str, size: int) -> int:
+        """Resident weight + KV bytes of the engine behind a
+        decode-side measurement — the footprint axis of ``QuantCost``
+        (built on demand if that measurement has not run yet)."""
+        eng = self._aux(kind, int(size))
+        return int(eng.param_bytes + eng.kv_bytes)
 
 
 class MicroMeasurer:
@@ -665,6 +715,32 @@ def solve_replicas(target_tokens_per_us: float, decode: DecodeCost, *,
         feasible=feasible)
 
 
+def solve_precision(candidates: Sequence[QuantCost], *,
+                    max_step_us: Optional[float] = None,
+                    hbm_budget_bytes: Optional[int] = None
+                    ) -> QuantCost:
+    """Pick the serving precision from measured quantized decode
+    steps: among candidates within the latency bound and the HBM
+    budget (each unbounded when None; a candidate with unreported
+    ``hbm_bytes == 0`` never satisfies an explicit budget), the
+    SMALLEST footprint wins, tie-broken by step time — quantization
+    buys occupancy, so footprint is the objective and latency the
+    constraint.  When nothing qualifies, the fastest candidate is
+    returned (the infeasible-but-least-bad answer, mirroring
+    ``solve_replicas``' feasible flag convention)."""
+    cands = list(candidates)
+    if not cands:
+        raise ValueError("candidates must be non-empty")
+    ok = [c for c in cands
+          if (max_step_us is None or c.step_us <= max_step_us)
+          and (hbm_budget_bytes is None
+               or (c.hbm_bytes and c.hbm_bytes <= hbm_budget_bytes))]
+    if not ok:
+        return min(cands, key=lambda c: c.step_us)
+    return min(ok, key=lambda c: (c.hbm_bytes or float("inf"),
+                                  c.step_us))
+
+
 # ---------------------------------------------------------------------------
 # the profile (versioned JSON; measurements in, wall clock out)
 # ---------------------------------------------------------------------------
@@ -712,6 +788,10 @@ class CalibrationProfile:
         default_factory=list)
     replicas: int = 0
     replica_costs: List[ReplicaCost] = dataclasses.field(
+        default_factory=list)
+    # quantized-serving extension (defaulted, same load-compat rule):
+    # empty = precision not calibrated
+    quant_costs: List[QuantCost] = dataclasses.field(
         default_factory=list)
     version: int = PROFILE_VERSION
 
@@ -767,6 +847,8 @@ class CalibrationProfile:
                            for c in d.get("lane_costs", [])]
         d["replica_costs"] = [ReplicaCost(**c)
                               for c in d.get("replica_costs", [])]
+        d["quant_costs"] = [QuantCost(**c)
+                            for c in d.get("quant_costs", [])]
         return cls(**d)
 
     def save(self, path: str) -> str:
@@ -868,6 +950,7 @@ def calibrate(bundle: Any, params: Any,
               micro: Optional[Tuple[Any, Any]] = None,
               replica_candidates: Sequence[int] = (),
               target_tokens_per_us: Optional[float] = None,
+              quant_candidates: Sequence[Tuple[str, str]] = (),
               measure: Optional[Callable[[str, int],
                                          CompileStepTiming]] = None
               ) -> CalibrationProfile:
@@ -908,7 +991,16 @@ def calibrate(bundle: Any, params: Any,
     decode capacity from the measured fused decode step (requires
     ``decode_slots``) and, when ``target_tokens_per_us`` is given,
     ``solve_replicas`` lands the smallest sufficient replica count in
-    ``profile.replicas``."""
+    ``profile.replicas``.
+
+    ``quant_candidates`` prices the QUANTIZED fused decode step for
+    each (weight_dtype, kv_dtype) precision pair — ``"fp32"`` on
+    either axis means unquantized, so ``("fp32", "fp32")`` is the
+    baseline row — at the largest ``decode_slots`` count (2 when
+    unset), landing ``QuantCost`` rows (with the engine's resident
+    HBM footprint, when the measurer can report it) in
+    ``profile.quant_costs``; ``solve_precision`` picks a deployment
+    precision from them."""
     plens = np.array([max(int(l) - 1, 0) for l in prompt_lengths],
                      dtype=np.int64)
     plens = plens[plens >= 1]
@@ -1019,6 +1111,19 @@ def calibrate(bundle: Any, params: Any,
         if target_tokens_per_us is not None:
             replicas = solve_replicas(target_tokens_per_us, base,
                                       candidates=rep_cands).replicas
+    quant_costs: List[QuantCost] = []
+    if quant_candidates:
+        q_slots = max([int(b) for b in decode_slots], default=2)
+        hbm_hook = getattr(measure, "hbm_bytes", None)
+        for wd, kd in dict.fromkeys((str(w), str(k))
+                                    for w, k in quant_candidates):
+            qk = f"decode_q:{wd}:{kd}"
+            t = measure(qk, q_slots)
+            quant_costs.append(QuantCost(
+                weight_dtype=wd, kv_dtype=kd, slots=q_slots,
+                compile_us=t.compile_us, step_us=t.step_us,
+                hbm_bytes=int(hbm_hook(qk, q_slots))
+                if hbm_hook else 0))
     solver_costs = [c for c in bucket_costs if c.length in set(cands)]
     best = solve(prompt_lengths, solver_costs, chunk_costs,
                  cache_len=cache_len, max_dispatch_us=max_dispatch_us,
@@ -1076,4 +1181,5 @@ def calibrate(bundle: Any, params: Any,
         kv_block=int(kv_block),
         decode_costs=decode_costs, block_costs=block_costs,
         micro_lanes=int(micro_lanes), lane_costs=lane_costs,
-        replicas=int(replicas), replica_costs=replica_costs)
+        replicas=int(replicas), replica_costs=replica_costs,
+        quant_costs=quant_costs)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 INT8_MIN, INT8_MAX = -128, 127
+INT4_MIN, INT4_MAX = -8, 7
 INT32_MIN, INT32_MAX = -(2 ** 31), 2 ** 31 - 1
 
 
@@ -214,6 +215,81 @@ def requantize_np(acc: np.ndarray, multiplier: int, shift: int,
     scaled = multiply_by_quantized_multiplier_np(acc, multiplier, shift)
     return np.clip(scaled + output_zero_point, INT8_MIN, INT8_MAX
                    ).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Packed int4 (two nibbles per int8 byte, packed along the LAST axis)
+# ---------------------------------------------------------------------------
+
+def pack_int4(q) -> jnp.ndarray:
+    """Pack signed int4 values (range [-8, 7], held in an int8 array)
+    into bytes, two per byte along the LAST axis: ``byte = (hi << 4) |
+    (lo & 0xF)`` with ``lo = q[..., 2i]`` and ``hi = q[..., 2i+1]``.
+    The last axis must be even — padding is the caller's job, so the
+    unpacked shape stays recoverable without a side channel."""
+    q = jnp.asarray(q, jnp.int8)
+    if q.shape[-1] % 2:
+        raise ValueError(
+            f"pack_int4 needs an even last axis, got {q.shape}")
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return ((hi.astype(jnp.int8) << 4)
+            | (lo.astype(jnp.int8) & jnp.int8(0xF))).astype(jnp.int8)
+
+
+def unpack_int4(packed) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: bytes back to signed int4 values
+    (as int8), doubling the last axis.  Sign extension is arithmetic —
+    ``(b << 4) >> 4`` recovers the low nibble, ``b >> 4`` the high —
+    so the round-trip is exact for every value in [-8, 7]."""
+    b = jnp.asarray(packed, jnp.int8)
+    lo = (b << 4) >> 4                          # arithmetic shifts: int8
+    hi = b >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*b.shape[:-1], b.shape[-1] * 2)
+
+
+def pack_int4_np(q: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`pack_int4` (export-time use)."""
+    q = np.asarray(q, np.int8)
+    if q.shape[-1] % 2:
+        raise ValueError(
+            f"pack_int4 needs an even last axis, got {q.shape}")
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return ((hi.astype(np.int8) << 4)
+            | (lo.astype(np.int8) & np.int8(0xF))).astype(np.int8)
+
+
+def unpack_int4_np(packed: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`unpack_int4`."""
+    b = np.asarray(packed, np.int8)
+    lo = ((b << 4) >> 4).astype(np.int8)
+    hi = (b >> 4).astype(np.int8)
+    out = np.stack([lo, hi], axis=-1)
+    return out.reshape(*b.shape[:-1], b.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric per-head KV quantization (serving KV cache, docs/QUANTIZATION.md)
+# ---------------------------------------------------------------------------
+
+def quantize_kv_heads(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization of a KV vector batch with one scale
+    per head vector: the LAST axis is the head dim, every leading axis
+    (layer, batch/page, head, position) keeps its own scale.  Returns
+    ``(q int8, scales f32)`` with ``scales.shape == x.shape[:-1]``.
+    All-zero vectors get scale 1.0 so dequant is exact (zeros)."""
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scales = jnp.where(amax > 0, amax / INT8_MAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scales[..., None]), INT8_MIN, INT8_MAX)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_kv_heads(q, scales) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv_heads` (up to rounding)."""
+    return q.astype(jnp.float32) * scales[..., None].astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -143,6 +143,12 @@ class OpCode:
     # checkpoint, so the carried (conv, ssd) state is a traced argument
     # alongside the chunk tokens and the true (unpadded) chunk length
     SERVING_PREFILL_CHUNK_STATE = 46
+    # quantized serving: the same prefill/decode macro-ops over an
+    # int8/int4 weight tree (and optionally an int8 KV cache) — the
+    # quantization layout (weight dtype, KV dtype, paged-ness) rides
+    # the OpDef params, so two opcodes cover the whole quantized matrix
+    SERVING_PREFILL_Q = 47
+    SERVING_DECODE_Q = 48
 
 
 # Pod-scale macro-ops: resolvable through the tag chain but never part
@@ -153,7 +159,9 @@ SERVING_OPCODES = frozenset({OpCode.SERVING_PREFILL,
                              OpCode.SERVING_PREFILL_CHUNK,
                              OpCode.SERVING_DECODE_PAGED,
                              OpCode.SERVING_PREFILL_CHUNK_PAGED,
-                             OpCode.SERVING_PREFILL_CHUNK_STATE})
+                             OpCode.SERVING_PREFILL_CHUNK_STATE,
+                             OpCode.SERVING_PREFILL_Q,
+                             OpCode.SERVING_DECODE_Q})
 
 
 OP_NAMES = {v: k for k, v in vars(OpCode).items() if not k.startswith("_")}

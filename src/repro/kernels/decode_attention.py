@@ -179,6 +179,130 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_q_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                           ks_ref, vs_ref, o_ref,
+                           m_ref, l_ref, acc_ref, *,
+                           n_t: int, bs: int, scale: float,
+                           window: Optional[int]):
+    """Int8-KV twin of ``_paged_decode_kernel``: the pool blocks arrive
+    as int8 rows plus one f32 scale per (block row, KV head) vector,
+    and the dequant ``k = q8 * s`` happens HERE, after the HBM→VMEM
+    stream — so the HBM traffic per tile is the int8 payload, not the
+    f32 one.  Everything downstream (masking, online softmax) is the
+    exact float math of the unquantized kernel."""
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[pl.program_id(0)]
+    k_start = it * bs
+    needed = k_start < length
+    if window is not None:
+        needed = jnp.logical_and(needed, k_start + bs > length - window)
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)           # (group, D)
+        ks = ks_ref[0, 0].astype(jnp.float32)         # (BS,)
+        vs = vs_ref[0, 0].astype(jnp.float32)         # (BS,)
+        k = k_ref[0, 0].astype(jnp.float32) * ks[:, None]   # (BS, D)
+        v = v_ref[0, 0].astype(jnp.float32) * vs[:, None]   # (BS, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                  # (group, BS)
+        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        if window is not None:
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_ref[...][:, 0] * alpha + p.sum(axis=1))[:, None]
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(it == n_t - 1)
+    def _finish():
+        l = l_ref[...][:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "interpret"))
+def paged_decode_attention_q_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                    v_pool: jnp.ndarray,
+                                    k_scales: jnp.ndarray,
+                                    v_scales: jnp.ndarray,
+                                    tables: jnp.ndarray,
+                                    lengths: jnp.ndarray,
+                                    *, window: Optional[int] = None,
+                                    scale: Optional[float] = None,
+                                    interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,D) f32, pools (P,KH,BS,D) int8, scales (P,KH,BS) f32,
+    tables (B,T) int32, lengths (B,) int32 -> (B,H,D).
+
+    The int8-KV variant of ``paged_decode_attention_pallas``: same
+    scalar-prefetch block-table indirection, with two extra per-block
+    scale inputs riding the SAME index_maps as K/V so each physical
+    block's scales stream alongside its rows.  Dequantization happens
+    inside the kernel body (see ``_paged_decode_q_kernel``) — the
+    arena stays int8 end to end and HBM reads shrink accordingly."""
+    b, h, d = q.shape
+    _, kh, bs, _ = k_pool.shape
+    t = tables.shape[1]
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kh, group, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda b_, h_, it, tbl_ref, len_ref:
+                         (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, it, tbl_ref, len_ref:
+                         (tbl_ref[b_, it], h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, it, tbl_ref, len_ref:
+                         (tbl_ref[b_, it], h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b_, h_, it, tbl_ref, len_ref:
+                         (tbl_ref[b_, it], h_, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b_, h_, it, tbl_ref, len_ref:
+                         (tbl_ref[b_, it], h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda b_, h_, it, tbl_ref, len_ref:
+                               (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_q_kernel, n_t=t, bs=bs,
+                          scale=scale, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, d), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, qg, k_pool, v_pool, k_scales, v_scales)
+    return out.reshape(b, h, d)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "window", "scale", "interpret"))
 def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,

@@ -1,0 +1,142 @@
+"""Weight-dequant matmul Pallas kernels — the serving-side quantized
+matmul (ROADMAP item 4, docs/QUANTIZATION.md).
+
+The micro path's ``quant_matmul.py`` computes in int8 end to end
+(int8×int8→int32 MXU, requantize to int8) because micro activations are
+themselves quantized.  Pod decode is different: activations stay float
+(the logit tolerance contract is against the fp engine), and the win is
+memory-bound — weights stream HBM→VMEM as int8 or packed int4 and are
+dequantized INSIDE the kernel, tile by tile, so the full-precision
+weight matrix never exists in HBM.  Scales are symmetric per output
+channel, so dequant commutes with the K-accumulation and is applied
+once per output element at the final K step:
+
+    Σ_k x_k · (q_kj · s_j)  ==  s_j · Σ_k x_k · q_kj
+
+The int4 variant unpacks two nibbles per streamed byte in VMEM
+(arithmetic-shift sign extension, same packing as
+``core.quantize.pack_int4``), halving weight HBM traffic again.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-aligned default tile (matches quant_matmul.py)
+DEF_BM, DEF_BK, DEF_BN = 128, 128, 128
+
+
+def _dequant_matmul_kernel(x_ref, w_ref, scale_ref, out_ref, acc_ref,
+                           *, n_k: int):
+    """Grid: (M/bm, N/bn, K/bk) — K innermost, sequential accumulation.
+    ``w_ref`` holds an int8 tile; the cast to f32 happens here, after
+    the HBM→VMEM stream."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        out_ref[...] = (acc_ref[...] * scale_ref[...]).astype(
+            out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn",
+                                             "interpret"))
+def dequant_matmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray,
+                          scale: jnp.ndarray, *,
+                          bm: int = DEF_BM, bk: int = DEF_BK,
+                          bn: int = DEF_BN,
+                          interpret: bool = True) -> jnp.ndarray:
+    """x (M,K) f32 · w_q (K,N) int8, scale (1,N) f32 → f32 (M,N).
+
+    M, K, N must be multiples of (bm, bk, bn) — ops.py pads.
+    """
+    m, k = x.shape
+    _, n = w_q.shape
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_dequant_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), w_q, scale.astype(jnp.float32))
+
+
+def _dequant_matmul_i4_kernel(x_ref, wp_ref, scale_ref, out_ref,
+                              acc_ref, *, n_k: int, bn: int):
+    """int4 twin: ``wp_ref`` is a (bk, bn//2) tile of packed bytes —
+    unpack in VMEM (sign-extending arithmetic shifts, the inverse of
+    ``core.quantize.pack_int4``) then the same f32 MXU accumulation."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wp = wp_ref[...]                               # (bk, bn//2) int8
+    lo = ((wp << 4) >> 4).astype(jnp.float32)
+    hi = (wp >> 4).astype(jnp.float32)
+    w = jnp.stack([lo, hi], axis=-1).reshape(wp.shape[0], bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        out_ref[...] = (acc_ref[...] * scale_ref[...]).astype(
+            out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn",
+                                             "interpret"))
+def dequant_matmul_i4_pallas(x: jnp.ndarray, w_p: jnp.ndarray,
+                             scale: jnp.ndarray, *,
+                             bm: int = DEF_BM, bk: int = DEF_BK,
+                             bn: int = DEF_BN,
+                             interpret: bool = True) -> jnp.ndarray:
+    """x (M,K) f32 · packed-int4 w_p (K,N/2) int8, scale (1,N) f32
+    → f32 (M,N).  Packing is along the output-channel axis (pairs of
+    adjacent columns share a byte), so a (bk, bn//2) byte tile unpacks
+    to exactly one (bk, bn) weight tile.  ``bn`` must be even."""
+    m, k = x.shape
+    _, n_half = w_p.shape
+    n = n_half * 2
+    assert bn % 2 == 0, bn
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_dequant_matmul_i4_kernel, n_k=n_k, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), w_p, scale.astype(jnp.float32))

@@ -27,7 +27,10 @@ from repro.core.op_resolver import PrepareResult, register_op
 from repro.core.schema import OpCode
 
 from .decode_attention import (decode_attention_pallas,
-                               paged_decode_attention_pallas)
+                               paged_decode_attention_pallas,
+                               paged_decode_attention_q_pallas)
+from .dequant_matmul import (dequant_matmul_i4_pallas,
+                             dequant_matmul_pallas)
 from .flash_attention import flash_attention_pallas
 from .quant_matmul import quant_matmul_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -79,6 +82,37 @@ def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray,
     return out[:m, :n]
 
 
+def dequant_matmul(x: jnp.ndarray, wleaf, interpret: bool = INTERPRET
+                   ) -> jnp.ndarray:
+    """f32 (M,K) @ quantized weight leaf (K,N) -> f32 (M,N).
+
+    ``wleaf`` is a ``models.lm_quant`` marker dict — ``{"q8", "qs"}``
+    or packed ``{"q4", "qs"}`` — with per-output-channel scales; the
+    weight streams HBM→VMEM quantized and dequantizes inside the
+    kernel.  Pads (M, K, N) to MXU tiles like ``quant_matmul``."""
+    m, k = x.shape
+    if "q8" in wleaf:
+        w = wleaf["q8"]
+        n = w.shape[-1]
+    else:
+        w = wleaf["q4"]
+        n = w.shape[-1] * 2
+    scale = wleaf["qs"].reshape(1, n)
+    bm, bk, bn = _pick_block(max(m, 8)), _pick_block(k), _pick_block(n)
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    scalep = _pad_to(scale.astype(jnp.float32), 1, bn)
+    if "q8" in wleaf:
+        wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+        out = dequant_matmul_pallas(xp, wp, scalep, bm=bm, bk=bk, bn=bn,
+                                    interpret=interpret)
+    else:
+        assert bn % 2 == 0, bn     # int4 leaves have even channel counts
+        wp = _pad_to(_pad_to(w, 0, bk), 1, bn // 2)
+        out = dequant_matmul_i4_pallas(xp, wp, scalep, bm=bm, bk=bk,
+                                       bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
 # ---------------------------------------------------------------------------
 # attention
 # ---------------------------------------------------------------------------
@@ -115,6 +149,21 @@ def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
     the pool's block size (chosen by the cost-model solver) decides."""
     return paged_decode_attention_pallas(
         q, k_pool, v_pool, jnp.asarray(tables, jnp.int32),
+        jnp.asarray(lengths, jnp.int32), window=window, scale=scale,
+        interpret=interpret)
+
+
+def quant_paged_decode_attention(q, k_pool, v_pool, k_scales, v_scales,
+                                 tables, lengths, *,
+                                 window: Optional[int] = None,
+                                 scale: Optional[float] = None,
+                                 interpret: bool = INTERPRET):
+    """int8-KV block-table decode attention: pools (P,KH,BS,D) int8
+    with per-row scales (P,KH,BS) f32; dequant happens inside the
+    kernel, after the HBM→VMEM stream (docs/QUANTIZATION.md)."""
+    return paged_decode_attention_q_pallas(
+        q, k_pool, v_pool, k_scales.astype(jnp.float32),
+        v_scales.astype(jnp.float32), jnp.asarray(tables, jnp.int32),
         jnp.asarray(lengths, jnp.int32), window=window, scale=scale,
         interpret=interpret)
 
@@ -265,3 +314,59 @@ class PallasServingDecodePaged:
                                   tokens, lengths,
                                   embed_scale=ctx.op_data["embed_scale"],
                                   attn_impl=impl)
+
+
+@register_op(OpCode.SERVING_DECODE_Q, tag="pallas")
+class PallasServingDecodeQ:
+    """Optimized quantized decode step: dense/moe MLP matmuls run on
+    the weight-dequant Pallas kernel (``dequant_matmul`` — int8 or
+    packed-int4 weights stream HBM→VMEM quantized, dequantize in the
+    kernel), and attention runs on the flash-decoding kernels — the
+    int8-KV paged combination uses the block-table kernel that
+    dequantizes INSIDE the kernel body.  vlm keeps reference attention
+    (as on the fp path) but still decodes through the per-layer-dequant
+    quantized model step; recurrent families fall back to the
+    reference quantized decode, the per-kernel fallback the tag chain
+    promises.  There is deliberately no pallas SERVING_PREFILL_Q:
+    prefill is compute-bound, so the tag chain's reference fallback IS
+    the optimized choice there."""
+
+    @staticmethod
+    def prepare(ctx, op):
+        # imported lazily: kernels layers beneath the serving package
+        from repro.serving.ops import _quant_family_gate
+        od = _quant_family_gate(ctx.bundle.cfg, op)
+        od["use_kernel"] = ctx.bundle.cfg.family in ("dense", "moe")
+        # a KV-only engine keeps fp weight leaves — the dequant matmul
+        # would have nothing to dequantize, so the MLP hook stays off
+        od["use_mm"] = (od["use_kernel"]
+                        and od["weight_dtype"] in ("int8", "int4"))
+        return PrepareResult(output_specs=[], op_data=od)
+
+    @staticmethod
+    def eval(ctx, op, inputs):
+        from repro.models.lm_quant import (dequant_params, lm_decode_q,
+                                           lm_decode_paged_q)
+        cfg = ctx.bundle.cfg
+        od = ctx.op_data
+        mm = dequant_matmul if od["use_mm"] else None
+        if od["paged"]:
+            params, pool, tables, tokens, lengths = inputs
+            if od["use_kernel"]:
+                attn = (quant_paged_decode_attention if od["kv_q"]
+                        else paged_decode_attention)
+            else:
+                attn = None
+            return lm_decode_paged_q(
+                params, cfg, pool, tables, tokens, lengths,
+                embed_scale=od["scale"], kv_q=od["kv_q"],
+                attn_impl=attn, mlp_impl=mm)
+        params, cache, tokens, lengths = inputs
+        if od["lm_path"]:
+            attn = decode_attention if od["use_kernel"] else None
+            return lm_decode_q(params, cfg, cache, tokens, lengths,
+                               embed_scale=od["scale"], kv_q=od["kv_q"],
+                               attn_impl=attn, mlp_impl=mm)
+        fp = dequant_params(params, cfg.jnp_dtype())
+        return ctx.bundle.decode(fp, cache, tokens, lengths,
+                                 window=op.params.get("window"))

@@ -1,0 +1,376 @@
+"""Quantized serving twins of the LM decode path (ROADMAP item 4).
+
+Weight quantization is symmetric per-channel int8 or packed int4
+(``core.quantize``): every weight matrix becomes a marker dict
+``{"q8": int8, "qs": f32 scales}`` (or ``{"q4": packed bytes, "qs":
+scales}``) that flows through jit/scan as an ordinary pytree — the
+params resident in HBM are the quantized tree, and dequantization
+happens per layer INSIDE the decode scan body, so at most one layer's
+float weights exist at a time.  Scales reduce over the second-to-last
+axis (the contraction-adjacent axis), which keeps them constant along
+the contraction dim — exactly the invariant the Pallas
+``dequant_matmul`` kernel needs to scale once per output element after
+the int8 K-accumulation.
+
+KV quantization is symmetric int8 with one f32 scale per head VECTOR
+(``quantize_kv_heads``): the cache grows two scale leaves
+(``k_scale``/``v_scale``, shape = cache shape minus the head dim) and
+only the NEW token's K/V are quantized each step — written values are
+never re-quantized, so a cache round-trip (snapshot/restore, paged
+gather/scatter) is bit-exact and the compile-once serving contract
+survives unchanged.
+
+The quantized-vs-fp contract is tolerance-gated on logits
+(docs/QUANTIZATION.md); quantized-vs-quantized across
+admit/preempt/restore stays bit-identical, same as the fp engine.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (INT4_MAX, INT4_MIN, INT8_MAX, INT8_MIN,
+                                 dequantize_kv_heads, pack_int4,
+                                 quantize_kv_heads, unpack_int4)
+from repro.distributed.act_sharding import shard_act, shard_logits
+
+from .common import ModelConfig, rms_norm
+from .lm import (GATED_ACTS, _gate, _proj_qkv, decode_attention_block,
+                 embed_tokens, mlp_block, moe_block,
+                 paged_decode_attention_block)
+
+Params = Dict[str, Any]
+
+# The weight matrices worth quantizing — everything else (norm gains,
+# the f32 MoE router, scalars) stays float: routing decisions are
+# discrete and quantizing the router would flip them, breaking the
+# tolerance contract for no memory win (the router is tiny).
+QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "wi", "wg",
+                        "lm_head", "embed"})
+WEIGHT_DTYPES = ("int8", "int4")
+KV_DTYPES = ("int8",)
+
+
+def is_qleaf(x: Any) -> bool:
+    """Whether ``x`` is a quantized-weight marker dict."""
+    return (isinstance(x, dict) and "qs" in x
+            and ("q8" in x or "q4" in x))
+
+
+def _quantize_leaf(w, bits: int) -> Dict[str, jnp.ndarray]:
+    w = jnp.asarray(w).astype(jnp.float32)
+    axis = max(w.ndim - 2, 0)
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    qmax = INT8_MAX if bits == 8 else INT4_MAX
+    qmin = INT8_MIN if bits == 8 else INT4_MIN
+    scales = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scales), qmin, qmax).astype(jnp.int8)
+    if bits == 4:
+        return {"q4": pack_int4(q), "qs": scales}
+    return {"q8": q, "qs": scales}
+
+
+def quantize_lm_params(params: Params, cfg: ModelConfig,
+                       weight_dtype: str) -> Params:
+    """params -> the same tree with every QUANT_KEYS matrix replaced by
+    its quantized marker dict.  An odd output-channel count falls back
+    to int8 for that leaf (int4 packs channel pairs)."""
+    if weight_dtype not in WEIGHT_DTYPES:
+        raise ValueError(
+            f"weight_dtype {weight_dtype!r} not in {WEIGHT_DTYPES}")
+    bits = 8 if weight_dtype == "int8" else 4
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                if key in QUANT_KEYS and getattr(val, "ndim", 0) >= 2:
+                    b = 8 if (bits == 4 and val.shape[-1] % 2) else bits
+                    out[key] = _quantize_leaf(val, b)
+                else:
+                    out[key] = walk(val)
+            return out
+        return node
+
+    return walk(params)
+
+
+def dequant_leaf(leaf: Dict[str, jnp.ndarray], dtype=jnp.float32):
+    q = leaf["q8"] if "q8" in leaf else unpack_int4(leaf["q4"])
+    return (q.astype(jnp.float32) * leaf["qs"]).astype(dtype)
+
+
+def dequant_params(tree: Any, dtype=jnp.float32) -> Any:
+    """Marker dicts -> float weights; non-quantized leaves unchanged."""
+    return jax.tree.map(
+        lambda x: dequant_leaf(x, dtype) if is_qleaf(x) else x,
+        tree, is_leaf=is_qleaf)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (contiguous ring and paged pool share the layout)
+# ---------------------------------------------------------------------------
+
+def quantize_cache(cache: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """fp {k,v} -> {k, v int8, k_scale, v_scale f32} with one scale per
+    head vector (last axis dropped).  Works on both the contiguous
+    (L,B,KH,C,dh) ring and the paged (L,P,KH,BS,dh) pool; all-zero
+    rows quantize to (0, scale 1.0) so empty caches stay exact."""
+    kq, ks = quantize_kv_heads(cache["k"])
+    vq, vs = quantize_kv_heads(cache["v"])
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+
+def decode_attention_block_q(p: Params, cfg: ModelConfig, x,
+                             ck, cv, cks, cvs, lengths, attn_impl=None):
+    """int8-KV twin of ``decode_attention_block``: only the NEW token's
+    K/V are quantized (scatter into the int8 ring + its scale ring);
+    attention reads dequantize the cache.  ``attn_impl`` keeps the fp
+    contiguous-kernel signature — it receives the dequantized cache.
+    Returns (out, ck, cv, cks, cvs)."""
+    b = x.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    g = h // kh
+    c = ck.shape[2]
+    q, k, v = _proj_qkv(p, cfg, x, lengths[:, None])
+    kq, ks = quantize_kv_heads(k[:, 0])            # (B,KH,dh) / (B,KH)
+    vq, vs = quantize_kv_heads(v[:, 0])
+    slot = (lengths % c).astype(jnp.int32)
+    rows = jnp.arange(b)
+    ck = ck.at[rows, :, slot].set(kq)
+    cv = cv.at[rows, :, slot].set(vq)
+    cks = cks.at[rows, :, slot].set(ks)
+    cvs = cvs.at[rows, :, slot].set(vs)
+    n_valid = jnp.minimum(lengths + 1, c)
+    kc = dequantize_kv_heads(ck, cks)
+    vc = dequantize_kv_heads(cv, cvs)
+    if attn_impl is not None:
+        out = attn_impl(q[:, 0], kc, vc, n_valid).reshape(b, 1, h, dh)
+    else:
+        qg = q[:, 0].reshape(b, kh, g, dh)
+        scale = 1.0 / math.sqrt(dh)
+        logits = jnp.einsum("bkgd,bkcd->bkgc", qg, kc,
+                            preferred_element_type=jnp.float32) * scale
+        pos = jnp.arange(c)[None, None, None, :]
+        valid = pos < n_valid[:, None, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgc,bkcd->bkgd", w,
+                         vc.astype(x.dtype)).reshape(b, 1, h, dh)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+    return y, ck, cv, cks, cvs
+
+
+def paged_decode_attention_block_q(p: Params, cfg: ModelConfig, x,
+                                   pk, pv, pks, pvs, tables, lengths,
+                                   attn_impl=None):
+    """int8-KV twin of ``paged_decode_attention_block``: the pool and
+    its per-row scales stay int8/f32 in HBM; ``attn_impl`` (the
+    quantized block-table kernel) receives the RAW quantized pool —
+    ``attn_impl(q, pk, pv, pks, pvs, tables, n_valid)`` — and
+    dequantizes inside the kernel.  Returns (out, pk, pv, pks, pvs)."""
+    b = x.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    g = h // kh
+    bs = pk.shape[2]
+    t = tables.shape[1]
+    c = t * bs
+    q, k, v = _proj_qkv(p, cfg, x, lengths[:, None])
+    kq, ks = quantize_kv_heads(k[:, 0])
+    vq, vs = quantize_kv_heads(v[:, 0])
+    pos = (lengths % c).astype(jnp.int32)
+    phys = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    pk = pk.at[phys, :, off].set(kq)
+    pv = pv.at[phys, :, off].set(vq)
+    pks = pks.at[phys, :, off].set(ks)
+    pvs = pvs.at[phys, :, off].set(vs)
+    n_valid = jnp.minimum(lengths + 1, c)
+    if attn_impl is not None:
+        out = attn_impl(q[:, 0], pk, pv, pks, pvs, tables,
+                        n_valid).reshape(b, 1, h, dh)
+    else:
+        kc = dequantize_kv_heads(
+            pk[tables].transpose(0, 2, 1, 3, 4).reshape(b, kh, c, dh),
+            pks[tables].transpose(0, 2, 1, 3).reshape(b, kh, c))
+        vc = dequantize_kv_heads(
+            pv[tables].transpose(0, 2, 1, 3, 4).reshape(b, kh, c, dh),
+            pvs[tables].transpose(0, 2, 1, 3).reshape(b, kh, c))
+        qg = q[:, 0].reshape(b, kh, g, dh)
+        scale = 1.0 / math.sqrt(dh)
+        logits = jnp.einsum("bkgd,bkcd->bkgc", qg, kc,
+                            preferred_element_type=jnp.float32) * scale
+        posc = jnp.arange(c)[None, None, None, :]
+        valid = posc < n_valid[:, None, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgc,bkcd->bkgd", w,
+                         vc.astype(x.dtype)).reshape(b, 1, h, dh)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"])
+    return y, pk, pv, pks, pvs
+
+
+# ---------------------------------------------------------------------------
+# quantized decode steps (mirror lm_decode / lm_decode_paged)
+# ---------------------------------------------------------------------------
+
+def embed_tokens_q(params: Params, cfg: ModelConfig, tokens):
+    e = params["embed"]
+    if not is_qleaf(e):
+        return embed_tokens(params, cfg, tokens)
+    if "q8" in e:
+        rows = jnp.take(e["q8"], tokens, axis=0)
+    else:
+        rows = unpack_int4(jnp.take(e["q4"], tokens, axis=0))
+    out = (rows.astype(jnp.float32) * e["qs"]).astype(cfg.jnp_dtype())
+    return shard_act(out)
+
+
+def lm_logits_q(params: Params, cfg: ModelConfig, h) -> jnp.ndarray:
+    hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = dequant_leaf(params["embed"], hn.dtype).T \
+            if is_qleaf(params["embed"]) else params["embed"].T
+    else:
+        head = dequant_leaf(params["lm_head"], hn.dtype) \
+            if is_qleaf(params["lm_head"]) else params["lm_head"]
+    return shard_logits(jnp.einsum("bsd,dv->bsv", hn, head))
+
+
+def mlp_block_q(p: Params, cfg: ModelConfig, x, mm=None) -> jnp.ndarray:
+    """Quantized MLP: ``mm(x2d, qleaf) -> y2d`` is the weight-dequant
+    matmul hook (the Pallas kernel via kernels/ops.py); without it the
+    weights dequantize leaf-wise and the reference einsums run."""
+    if mm is None:
+        return mlp_block(dequant_params(p, x.dtype), cfg, x)
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    hidden = mm(x2, p["wi"])
+    if cfg.act in GATED_ACTS:
+        hidden = _gate(cfg.act, mm(x2, p["wg"])) * hidden
+    else:
+        hidden = jax.nn.gelu(hidden)
+    out = mm(hidden.astype(x.dtype), p["wo"])
+    return out.reshape(b, s, -1).astype(x.dtype)
+
+
+def lm_decode_q(params: Params, cfg: ModelConfig, cache: Dict, tokens,
+                lengths, *, data_shards: int = 16,
+                embed_scale: Optional[float] = None, attn_impl=None,
+                mlp_impl=None, kv_q: bool = False):
+    """Quantized twin of ``lm_decode``: params is the marker-dict tree;
+    per-layer weights dequantize inside the scan body.  When ``kv_q``
+    the cache is the 4-leaf int8 layout of ``quantize_cache`` and
+    ``attn_impl`` takes the fp-contiguous signature over a dequantized
+    cache view."""
+    dt = cfg.jnp_dtype()
+    x = embed_tokens_q(params, cfg, tokens)
+    if embed_scale is not None:
+        x = x * jnp.asarray(embed_scale, x.dtype)
+
+    def attend(p_attn, xin, kv):
+        if kv_q:
+            att, *new_kv = decode_attention_block_q(
+                p_attn, cfg, xin, *kv, lengths, attn_impl=attn_impl)
+        else:
+            att, *new_kv = decode_attention_block(
+                p_attn, cfg, xin, *kv, lengths, attn_impl=attn_impl)
+        return att, tuple(new_kv)
+
+    kv_keys = ("k", "v", "k_scale", "v_scale") if kv_q else ("k", "v")
+    i0 = 0
+    first_kv = None
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        xin = rms_norm(x, fb["ln1"], cfg.norm_eps)
+        att, first_kv = attend(dequant_params(fb["attn"], dt), xin,
+                               tuple(cache[kk][0] for kk in kv_keys))
+        h = x + att
+        hin = rms_norm(h, fb["ln2"], cfg.norm_eps)
+        x = h + mlp_block_q(fb["mlp"], cfg, hin, mm=mlp_impl)
+        i0 = 1
+
+    def body(h, layer_in):
+        p_l = layer_in[0]
+        xin = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+        att, new_kv = attend(dequant_params(p_l["attn"], dt), xin,
+                             layer_in[1:])
+        hh = h + att
+        hin = rms_norm(hh, p_l["ln2"], cfg.norm_eps)
+        if "moe" in p_l:
+            y, _ = moe_block(dequant_params(p_l["moe"], dt), cfg, hin,
+                             data_shards)
+        else:
+            y = mlp_block_q(p_l["mlp"], cfg, hin, mm=mlp_impl)
+        return hh + y, new_kv
+
+    xs = (params["blocks"],) + tuple(cache[kk][i0:] for kk in kv_keys)
+    x, outs = jax.lax.scan(body, x, xs)
+    if i0:
+        outs = tuple(jnp.concatenate([f[None], o])
+                     for f, o in zip(first_kv, outs))
+    logits = lm_logits_q(params, cfg, x)[:, 0]
+    return logits, dict(zip(kv_keys, outs))
+
+
+def lm_decode_paged_q(params: Params, cfg: ModelConfig, pool: Dict,
+                      tables, tokens, lengths, *, data_shards: int = 16,
+                      embed_scale: Optional[float] = None, attn_impl=None,
+                      mlp_impl=None, kv_q: bool = False):
+    """Quantized twin of ``lm_decode_paged``.  With ``kv_q`` the pool
+    is the 4-leaf int8 layout and ``attn_impl`` is the quantized
+    block-table kernel (raw pool + scales, in-kernel dequant)."""
+    dt = cfg.jnp_dtype()
+    x = embed_tokens_q(params, cfg, tokens)
+    if embed_scale is not None:
+        x = x * jnp.asarray(embed_scale, x.dtype)
+
+    def attend(p_attn, xin, kv):
+        if kv_q:
+            att, *new_kv = paged_decode_attention_block_q(
+                p_attn, cfg, xin, *kv, tables, lengths,
+                attn_impl=attn_impl)
+        else:
+            att, *new_kv = paged_decode_attention_block(
+                p_attn, cfg, xin, *kv, tables, lengths,
+                attn_impl=attn_impl)
+        return att, tuple(new_kv)
+
+    kv_keys = ("k", "v", "k_scale", "v_scale") if kv_q else ("k", "v")
+    i0 = 0
+    first_kv = None
+    if "first_block" in params:
+        fb = jax.tree.map(lambda a: a[0], params["first_block"])
+        xin = rms_norm(x, fb["ln1"], cfg.norm_eps)
+        att, first_kv = attend(dequant_params(fb["attn"], dt), xin,
+                               tuple(pool[kk][0] for kk in kv_keys))
+        h = x + att
+        hin = rms_norm(h, fb["ln2"], cfg.norm_eps)
+        x = h + mlp_block_q(fb["mlp"], cfg, hin, mm=mlp_impl)
+        i0 = 1
+
+    def body(h, layer_in):
+        p_l = layer_in[0]
+        xin = rms_norm(h, p_l["ln1"], cfg.norm_eps)
+        att, new_kv = attend(dequant_params(p_l["attn"], dt), xin,
+                             layer_in[1:])
+        hh = h + att
+        hin = rms_norm(hh, p_l["ln2"], cfg.norm_eps)
+        if "moe" in p_l:
+            y, _ = moe_block(dequant_params(p_l["moe"], dt), cfg, hin,
+                             data_shards)
+        else:
+            y = mlp_block_q(p_l["mlp"], cfg, hin, mm=mlp_impl)
+        return hh + y, new_kv
+
+    xs = (params["blocks"],) + tuple(pool[kk][i0:] for kk in kv_keys)
+    x, outs = jax.lax.scan(body, x, xs)
+    if i0:
+        outs = tuple(jnp.concatenate([f[None], o])
+                     for f, o in zip(first_kv, outs))
+    logits = lm_logits_q(params, cfg, x)[:, 0]
+    return logits, dict(zip(kv_keys, outs))

@@ -296,6 +296,7 @@ class ServingEngine:
                  prefill_chunk: Any = None, preempt: Any = None,
                  kv_block: Any = None,
                  kv_pool_blocks: Optional[int] = None,
+                 weight_dtype: Any = None, kv_dtype: Any = None,
                  mesh: Any = None,
                  overlap: bool = False, on_token: Any = None):
         self.bundle = bundle
@@ -365,6 +366,58 @@ class ServingEngine:
                     raise ValueError(
                         f"prefill_chunk must be >= 1, got {prefill_chunk}")
                 self.chunk_tokens = int(prefill_chunk)
+        # weight_dtype / kv_dtype: quantized serving (docs/
+        # QUANTIZATION.md).  "int8"/"int4" weights quantize ONCE here —
+        # the resident tree stays quantized for the engine's lifetime
+        # and the SERVING_*_Q ops dequantize per layer INSIDE the traced
+        # step; kv_dtype="int8" builds the int8 + per-head-scale cache
+        # layout (ring or paged pool alike).  Composes with bucketed
+        # prefill and paging; NOT with chunked prefill (the chunk ops
+        # write fp KV rows) or mesh sharding (quantized marker dicts
+        # are not partition-qualified) — typed refusals at init, like
+        # every other family gate.
+        self.weight_dtype = weight_dtype
+        self.kv_dtype = kv_dtype
+        self.quantized = bool(weight_dtype or kv_dtype)
+        if self.quantized:
+            from repro.models.lm_quant import (KV_DTYPES, WEIGHT_DTYPES,
+                                               quantize_lm_params)
+            if weight_dtype is not None \
+                    and weight_dtype not in WEIGHT_DTYPES:
+                raise ValueError(
+                    f"weight_dtype must be one of {WEIGHT_DTYPES} or "
+                    f"None, got {weight_dtype!r}")
+            if kv_dtype is not None and kv_dtype not in KV_DTYPES:
+                raise ValueError(
+                    f"kv_dtype must be one of {KV_DTYPES} or None, "
+                    f"got {kv_dtype!r}")
+            if self.cfg.family not in serving_ops.WEIGHT_QUANT_FAMILIES:
+                raise UnsupportedFamilyError(
+                    self.cfg.family, "quantized serving (SERVING_*_Q)",
+                    supported=serving_ops.WEIGHT_QUANT_FAMILIES)
+            if kv_dtype and self.cfg.family not in \
+                    serving_ops.KV_QUANT_FAMILIES:
+                raise UnsupportedFamilyError(
+                    self.cfg.family,
+                    "int8 KV cache (requires a dense (KH, C, dh) "
+                    "cache layout)",
+                    supported=serving_ops.KV_QUANT_FAMILIES)
+            if self.chunk_tokens:
+                raise ValueError(
+                    "prefill_chunk does not compose with quantized "
+                    "serving (the chunk ops write fp KV rows)")
+            if mesh is not None:
+                raise ValueError(
+                    "mesh does not compose with quantized serving "
+                    "(quantized marker dicts are not "
+                    "partition-qualified)")
+            if weight_dtype:
+                self.params = params = quantize_lm_params(
+                    params, self.cfg, weight_dtype)
+        # resident weight bytes — with kv_bytes below, the benchmark's
+        # HBM-footprint hook (quantized engines report the QUANTIZED
+        # tree: int8/int4 payloads + f32 scales)
+        self.param_bytes = _cache_bytes(self.params)
         dtype = self.cfg.jnp_dtype()
         # kv_block: None/0 = contiguous per-slot rings (the default);
         # int = paged mode with that block size.  kv_pool_blocks sizes
@@ -389,8 +442,7 @@ class ServingEngine:
         if self.paged:
             n_blocks = (int(kv_pool_blocks) if kv_pool_blocks
                         else max_slots * self.n_table + 1)
-            self.kv_pool = bundle.empty_cache(n_blocks, self.kv_block,
-                                              dtype)
+            self.kv_pool = self._empty_cache(n_blocks, self.kv_block)
             self.pool = PagedKVPool(n_blocks, self.kv_block)
             self.block_tables = jnp.zeros((max_slots, self.n_table),
                                           jnp.int32)
@@ -400,7 +452,7 @@ class ServingEngine:
             kv_bytes = _cache_bytes(self.kv_pool)
             cache = None
         else:
-            cache = bundle.empty_cache(max_slots, cache_len, dtype)
+            cache = self._empty_cache(max_slots, cache_len)
             kv_bytes = _cache_bytes(cache)
         self.kv_bytes = kv_bytes
         if arena is None:
@@ -475,25 +527,36 @@ class ServingEngine:
         # prepare() runs once here (it may bake family decisions into
         # op_data); eval is jitted with context and op bound, so the
         # traced step is a pure function of (params, cache, tokens, ...).
+        prefill_code = OpCode.SERVING_PREFILL
         decode_code = (OpCode.SERVING_DECODE_PAGED if self.paged
                        else OpCode.SERVING_DECODE)
+        qparams: Dict[str, Any] = {}
+        if self.quantized:
+            # two opcodes cover the whole quantized matrix: paged-ness,
+            # KV quant, and the weight dtype ride OpDef.params (baked
+            # into op_data at prepare) — still one compiled program per
+            # engine, and per-opcode tag fallback works unchanged
+            prefill_code = OpCode.SERVING_PREFILL_Q
+            decode_code = OpCode.SERVING_DECODE_Q
+            qparams = {"paged": self.paged, "kv_q": bool(kv_dtype),
+                       "weight_dtype": weight_dtype}
         if self.paged:
             chunk_code = OpCode.SERVING_PREFILL_CHUNK_PAGED
         elif self._recurrent_chunk:
             chunk_code = OpCode.SERVING_PREFILL_CHUNK_STATE
         else:
             chunk_code = OpCode.SERVING_PREFILL_CHUNK
-        opcodes = [OpCode.SERVING_PREFILL, decode_code]
+        opcodes = [prefill_code, decode_code]
         if self.chunk_tokens:
             opcodes.append(chunk_code)
         self.resolver = MicroMutableOpResolver(tags).add_many(opcodes)
         window = self.cfg.sliding_window
-        self._prefill_op = OpDef(OpCode.SERVING_PREFILL, (), (),
+        self._prefill_op = OpDef(prefill_code, (), (),
                                  params={"cache_len": cache_len,
-                                         "window": window})
+                                         "window": window, **qparams})
         self._decode_op = OpDef(decode_code, (), (),
-                                params={"window": window})
-        prefill_reg = self.resolver.resolve(OpCode.SERVING_PREFILL)
+                                params={"window": window, **qparams})
+        prefill_reg = self.resolver.resolve(prefill_code)
         decode_reg = self.resolver.resolve(decode_code)
         pctx = serving_ops.ServingContext(bundle)
         prefill_ctx = serving_ops.ServingContext(
@@ -690,6 +753,19 @@ class ServingEngine:
         return (self.cfg.n_vision_tokens
                 if self.cfg.family == "vlm" else 0)
 
+    def _empty_cache(self, batch: int, length: int) -> Any:
+        """A fresh cache/pool tree in the ENGINE'S KV layout: the one
+        hook that keeps an int8-KV engine's empty trees in the
+        quantized ``{k, v, k_scale, v_scale}`` layout everywhere a fp
+        engine would call ``bundle.empty_cache`` (slot arena, paged
+        pool, the single-token-prompt prefill cache)."""
+        tree = self.bundle.empty_cache(batch, length,
+                                       self.cfg.jnp_dtype())
+        if self.kv_dtype:
+            from repro.models.lm_quant import quantize_cache
+            tree = quantize_cache(tree)
+        return tree
+
     # -- paged KV: block accounting (docs/ARCHITECTURE.md §8) -----------
 
     def _blocks_needed(self, req: Request) -> int:
@@ -746,6 +822,11 @@ class ServingEngine:
         t, bs = self.n_table, self.kv_block
 
         def sc(pool, one):
+            if pool.ndim == 4:      # per-head KV scales (int8 KV pool)
+                l, _, kh, _ = pool.shape
+                src = one[:, 0].reshape(l, kh, t, bs).transpose(
+                    0, 2, 1, 3)
+                return pool.at[:, row].set(jnp.asarray(src, pool.dtype))
             l, _, kh, _, dh = pool.shape
             src = one[:, 0].reshape(l, kh, t, bs, dh).transpose(
                 0, 2, 1, 3, 4)
@@ -828,8 +909,7 @@ class ServingEngine:
             self.last_step["prefill_tokens"].append(len(prompt))
             self.policy.charge(req.tenant, 1.0)
         else:   # single-token prompt: slot starts from a fresh cache
-            cache1 = self.bundle.empty_cache(1, self.cache_len,
-                                             self.cfg.jnp_dtype())
+            cache1 = self._empty_cache(1, self.cache_len)
         self.results[req.uid].prefill_s += time.perf_counter() - t0
         self._activate_slot(req, slot, cache1)
 

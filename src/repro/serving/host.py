@@ -162,7 +162,8 @@ class MultiTenantHost:
 
     def _make_engine(self, bundle: ModelBundle, params: Any, *,
                      max_slots: int, cache_len: int, max_prompt: int,
-                     mesh: Any = None, overlap: bool = False
+                     mesh: Any = None, overlap: bool = False,
+                     weight_dtype: Any = None, kv_dtype: Any = None
                      ) -> ServingEngine:
         """Build one tenant engine wired to the host's shared arena,
         policy, clock, preemption, profile, streaming sink, and
@@ -181,7 +182,8 @@ class MultiTenantHost:
                             prefill_buckets=buckets,
                             prefill_chunk=chunk,
                             preempt=self.preempt, mesh=mesh,
-                            overlap=overlap, on_token=self.on_token)
+                            overlap=overlap, on_token=self.on_token,
+                            weight_dtype=weight_dtype, kv_dtype=kv_dtype)
         scratch = _scratch_bytes(bundle, max_prompt)
         if scratch > self._scratch_high:
             # grow the shared head-section reservation to the new max
@@ -193,7 +195,8 @@ class MultiTenantHost:
     def add_model(self, name: str, bundle: ModelBundle, params: Any, *,
                   max_slots: int = 2, cache_len: int = 128,
                   max_prompt: int = 64, mesh: Any = None,
-                  overlap: bool = False) -> ServingEngine:
+                  overlap: bool = False, weight_dtype: Any = None,
+                  kv_dtype: Any = None) -> ServingEngine:
         """Admit a tenant: its KV cache stacks persistently; the shared
         nonpersistent (head) section grows to the max requirement.  The
         engine admits through the host's policy/clock and buckets its
@@ -202,13 +205,18 @@ class MultiTenantHost:
         weights and KV arena over the mesh's ``model`` axis
         (docs/ARCHITECTURE.md §9); ``overlap`` runs the tenant's decode
         loop with deferred readback (docs/STREAMING.md), streaming
-        per-token events to the host's ``on_token`` sink."""
+        per-token events to the host's ``on_token`` sink;
+        ``weight_dtype``/``kv_dtype`` serve the tenant quantized
+        (docs/QUANTIZATION.md) — per tenant, so fp and quantized
+        tenants of one host share the arena and the scheduler."""
         if name in self.engines or name in self.routers:
             raise ValueError(f"tenant {name!r} already exists")
         eng = self._make_engine(bundle, params, max_slots=max_slots,
                                 cache_len=cache_len,
                                 max_prompt=max_prompt, mesh=mesh,
-                                overlap=overlap)
+                                overlap=overlap,
+                                weight_dtype=weight_dtype,
+                                kv_dtype=kv_dtype)
         self.engines[name] = eng
         return eng
 
@@ -216,8 +224,9 @@ class MultiTenantHost:
                              params: Any, *, replicas: int = 2,
                              routing: Any = None, max_slots: int = 2,
                              cache_len: int = 128, max_prompt: int = 64,
-                             mesh: Any = None, overlap: bool = False
-                             ) -> ReplicaRouter:
+                             mesh: Any = None, overlap: bool = False,
+                             weight_dtype: Any = None,
+                             kv_dtype: Any = None) -> ReplicaRouter:
         """Admit a tenant served by ``replicas`` engine replicas behind
         a ``ReplicaRouter`` — the data-parallel axis of ROADMAP item 2.
         Each replica is a full engine tenant of the shared arena (its
@@ -235,7 +244,9 @@ class MultiTenantHost:
         engs = [self._make_engine(bundle, params, max_slots=max_slots,
                                   cache_len=cache_len,
                                   max_prompt=max_prompt, mesh=mesh,
-                                  overlap=overlap)
+                                  overlap=overlap,
+                                  weight_dtype=weight_dtype,
+                                  kv_dtype=kv_dtype)
                 for _ in range(replicas)]
         router = ReplicaRouter(engs, routing=routing)
         self.routers[name] = router

@@ -41,6 +41,12 @@ from .errors import UnsupportedFamilyError
 CHUNKED_FAMILIES = ("dense", "vlm", "ssm", "hybrid")
 RECURRENT_FAMILIES = ("ssm", "hybrid")
 PAGED_FAMILIES = ("dense", "moe", "vlm")
+# quantized serving (docs/QUANTIZATION.md): weight-only quantization
+# works wherever the bundle's decode accepts a params tree (everything
+# but audio, whose serving path is the micro pipeline); the int8 KV
+# cache additionally needs the dense (KH, C, dh) ring layout
+WEIGHT_QUANT_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
+KV_QUANT_FAMILIES = ("dense", "moe", "vlm")
 
 
 class ServingContext:
@@ -239,3 +245,101 @@ class RefServingPrefillChunkState:
                                         start, n_real,
                                         window=op.params.get("window"))
         return ssm_prefill_chunk(params, cfg, cache, tokens, n_real)
+
+
+# ---------------------------------------------------------------------------
+# quantized serving macro-ops (docs/QUANTIZATION.md)
+# ---------------------------------------------------------------------------
+
+def _quant_family_gate(cfg, op) -> dict:
+    """Shared prepare() gate for the quantized serving ops: bakes the
+    quantization layout (weight dtype, KV quant, paged-ness, vlm embed
+    scale) into op_data and raises the typed refusal for families the
+    layout cannot serve."""
+    import math
+
+    family = cfg.family
+    kv_q = bool(op.params.get("kv_q"))
+    paged = bool(op.params.get("paged"))
+    if family not in WEIGHT_QUANT_FAMILIES:
+        raise UnsupportedFamilyError(
+            family, "quantized serving (SERVING_*_Q)",
+            supported=WEIGHT_QUANT_FAMILIES)
+    if kv_q and family not in KV_QUANT_FAMILIES:
+        raise UnsupportedFamilyError(
+            family, "int8 KV cache (requires a dense (KH, C, dh) "
+                    "cache layout)", supported=KV_QUANT_FAMILIES)
+    if paged:
+        _paged_family_scale(cfg)       # same typed refusal as unquantized
+    scale = math.sqrt(cfg.d_model) if family == "vlm" else None
+    return {"kv_q": kv_q, "paged": paged, "scale": scale,
+            "lm_path": family in KV_QUANT_FAMILIES,
+            "weight_dtype": op.params.get("weight_dtype", "int8")}
+
+
+@register_op(OpCode.SERVING_PREFILL_Q, tag="reference")
+class RefServingPrefillQ:
+    """Reference quantized prefill: dequantize the weight tree and run
+    the family bundle's fp ``prefill`` (prefill is compute-bound — the
+    quantization win is decode-side HBM traffic, so prefill pays one
+    transient dequant instead of a second quantized codepath), then,
+    when the engine serves an int8 KV cache, quantize the populated
+    cache on the way out — the SAME ``quantize_kv_heads`` the decode
+    step applies to new tokens, so prefill-then-decode stays exactly
+    the cache decode would have built."""
+
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        return PrepareResult(output_specs=[],
+                             op_data=_quant_family_gate(ctx.bundle.cfg, op))
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        from repro.models.lm_quant import dequant_params, quantize_cache
+
+        params, batch = inputs
+        fp = dequant_params(params, ctx.bundle.cfg.jnp_dtype())
+        logits, cache = ctx.bundle.prefill(
+            fp, batch, cache_len=op.params["cache_len"],
+            window=op.params.get("window"))
+        if ctx.op_data["kv_q"]:
+            cache = quantize_cache(cache)
+        return logits, cache
+
+
+@register_op(OpCode.SERVING_DECODE_Q, tag="reference")
+class RefServingDecodeQ:
+    """Reference quantized decode: one fused step over the int8/int4
+    weight tree.  LM-path families (dense/moe/vlm) run
+    ``lm_decode_q``/``lm_decode_paged_q`` — weights dequantize per
+    layer INSIDE the scan body, so at most one layer's float weights
+    exist at a time and the resident params stay quantized; recurrent
+    families (weight-only mode) dequantize the tree and delegate to
+    the bundle's fp ``decode``.  The paged-ness and KV-quant layout
+    ride ``op.params`` — two opcodes cover the whole quantized matrix,
+    one compiled program per engine either way."""
+
+    @staticmethod
+    def prepare(ctx: ServingContext, op) -> PrepareResult:
+        return PrepareResult(output_specs=[],
+                             op_data=_quant_family_gate(ctx.bundle.cfg, op))
+
+    @staticmethod
+    def eval(ctx: ServingContext, op, inputs):
+        from repro.models.lm_quant import (dequant_params, lm_decode_q,
+                                           lm_decode_paged_q)
+
+        cfg = ctx.bundle.cfg
+        od = ctx.op_data
+        if od["paged"]:
+            params, pool, tables, tokens, lengths = inputs
+            return lm_decode_paged_q(params, cfg, pool, tables, tokens,
+                                     lengths, embed_scale=od["scale"],
+                                     kv_q=od["kv_q"])
+        params, cache, tokens, lengths = inputs
+        if od["lm_path"]:
+            return lm_decode_q(params, cfg, cache, tokens, lengths,
+                               embed_scale=od["scale"], kv_q=od["kv_q"])
+        fp = dequant_params(params, cfg.jnp_dtype())
+        return ctx.bundle.decode(fp, cache, tokens, lengths,
+                                 window=op.params.get("window"))

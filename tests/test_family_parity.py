@@ -304,3 +304,64 @@ def test_moe_chunked_also_refused_when_paged():
     with pytest.raises(UnsupportedFamilyError):
         ServingEngine(m, params, max_slots=1, cache_len=_cache_len(cfg),
                       prefill_chunk=CHUNK, kv_block=KV_BLOCK)
+
+
+# ---------------------------------------------------------------------------
+# quantized conformance cells (PR 10, docs/QUANTIZATION.md)
+# ---------------------------------------------------------------------------
+
+# which quantization layout each family serves: lm-path families take
+# the full int8 weight + int8 KV pair; recurrent families are
+# weight-only (their conv/SSD state is not a (KH, C, dh) KV ring).
+# audio is outside WEIGHT_QUANT_FAMILIES — its refusal is asserted in
+# tests/test_quant_serving.py.
+_QUANT_KW = {
+    "dense": {"weight_dtype": "int8", "kv_dtype": "int8"},
+    "moe": {"weight_dtype": "int8", "kv_dtype": "int8"},
+    "vlm": {"weight_dtype": "int8", "kv_dtype": "int8"},
+    "ssm": {"weight_dtype": "int8"},
+    "hybrid": {"weight_dtype": "int8"},
+}
+
+
+def _run_quantized(family, *, evict):
+    """The family's request set through its quantized engine; returns
+    ({uid: tokens}).  Deliberately NOT compared against the exact fp
+    baseline — quantized decode is tolerance-gated against fp
+    (tests/test_quant_serving.py), and bit-gated only against itself."""
+    cfg, m, params, reqs = _setup(family)
+    eng = ServingEngine(m, params, max_slots=2,
+                        cache_len=_cache_len(cfg),
+                        prefill_buckets=False, **_QUANT_KW[family])
+    for uid, toks, extras in reqs:
+        eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=N_NEW,
+                           extras=extras))
+    evicted = False
+    steps = 0
+    while eng.step():
+        steps += 1
+        assert steps < 500, f"{family}/quantized did not converge"
+        if evict and not evicted and steps >= 3:
+            victim = next((s for s in range(eng.max_slots)
+                           if eng.active[s]), None)
+            if victim is not None:
+                eng._evict(victim)
+                evicted = True
+    assert jit_cache_size(eng._decode) == 1, (family, "quantized")
+    assert not evict or evicted, (family, "nothing running to evict")
+    return {uid: eng.results[uid].output for uid, _, _ in reqs}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(_QUANT_KW))
+def test_family_quantized_preempt_restore_identity(family):
+    """The quantized column of the conformance matrix: every family
+    the SERVING_*_Q ops serve decodes bit-identical tokens with and
+    without a forced mid-run evict/restore, from one compiled decode
+    program — the compile-once contract survives quantization for the
+    whole family matrix."""
+    base = _run_quantized(family, evict=False)
+    got = _run_quantized(family, evict=True)
+    assert got == base, (family, got, base)
+    # and the cells are non-trivial: every request decoded its budget
+    assert all(len(t) == N_NEW for t in base.values()), (family, base)

@@ -65,6 +65,14 @@ REQUIRED_ROW_KEYS = {
     # tying the overlapped stream back to the sync baseline
     "BENCH_streaming.json": ("family", "mode", "ttft_p95_us",
                              "itl_p95_us", "tokens_match"),
+    # quantized serving (PR 10): every row pins the family and the
+    # precision pair it was measured at, the throughput/footprint
+    # columns the regression gate reads, the logit error against the
+    # fp engine, and the preempt/restore self-identity flag
+    "BENCH_quantized_decode.json": ("family", "weight_dtype",
+                                    "kv_dtype", "tokens_per_s",
+                                    "hbm_bytes", "max_abs_logit_err",
+                                    "tokens_match"),
 }
 
 Violation = Tuple[str, str]
